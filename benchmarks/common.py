@@ -1,0 +1,53 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression, fedavg
+
+
+def run_fed(loss_fn, params0, batches, comp, cfg, *, rounds, mask=None,
+            sigma0=0.0, plateau=None, eval_fn=None, dynamic_sigma=False):
+    """Run ``rounds`` federated rounds; returns dict of metric curves.
+
+    ``batches``: callable round_idx -> batch pytree (groups, n, E, ...).
+    """
+    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg,
+                                           dynamic_sigma=dynamic_sigma))
+    state = fedavg.init_server_state(params0, cfg, comp, jax.random.PRNGKey(1),
+                                     sigma0)
+    if mask is None:
+        mask = jnp.ones((cfg.client_groups, cfg.n_clients))
+    losses, bits, evals, sigmas = [], [], [], []
+    total_bits = 0.0
+    for t in range(rounds):
+        state, m = step(state, batches(t), mask)
+        losses.append(float(m.loss))
+        total_bits += float(m.uplink_bits)
+        bits.append(total_bits)
+        sigmas.append(float(state.sigma))
+        if plateau is not None:
+            state = state._replace(
+                sigma=jnp.asarray(plateau.update(float(m.loss)), jnp.float32))
+        if eval_fn is not None and (t % max(1, rounds // 20) == 0
+                                    or t == rounds - 1):
+            evals.append((t, float(eval_fn(state.params))))
+    return {"loss": losses, "bits": bits, "evals": evals, "sigmas": sigmas,
+            "params": state.params}
+
+
+def timeit(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+from repro.models.mlp import mlp_loss_builder  # noqa: F401,E402

@@ -1,0 +1,274 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+
+Prints ``name,metric,value`` CSV rows. Mapping to the paper:
+
+  fig1_consensus_dims    Fig. 1  consensus, algorithms x problem dimension
+  fig2_noise_scales      Fig. 2  z-SignSGD under various noise scales
+  fig3_noniid            Fig. 3  algorithms on extreme non-iid classification
+  fig5_local_steps       Fig. 5  FedAvg vs 1-SignFedAvg, E sweep
+  fig6_plateau           Fig. 6  Plateau criterion vs fixed/optimal sigma
+  fig16_qsgd             Fig. 16 1-Sign vs QSGD/FedPAQ bits-to-accuracy
+  fig17_dp               Fig. 17 DP-SignFedAvg vs DP-FedAvg across eps
+  table2_bits            Table 2 uplink bits per round per algorithm
+  kernel_throughput      compression kernel us/call + bytes moved
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression, fedavg
+from repro.core.dp import calibrate_noise
+from repro.core.plateau import PlateauController
+from repro.data import synthetic
+from benchmarks.common import mlp_loss_builder, run_fed, timeit
+from repro.core.noise import eta_z
+
+ROWS = []
+
+
+def sign_slr(target: float, z: int, sigma: float, gamma: float) -> float:
+    """Server lr such that the effective per-coordinate sign step is
+    ``target`` (decode multiplies by eta_z*sigma; engine by gamma)."""
+    scale = eta_z(z) * sigma if sigma > 0 else 1.0
+    return target / (scale * gamma)
+
+
+def emit(name, metric, value):
+    ROWS.append((name, metric, value))
+    print(f"{name},{metric},{value}")
+
+
+# ---------------------------------------------------------------------------
+
+def fig1_consensus_dims(fast=False):
+    """Consensus problem, distance-to-opt after fixed rounds vs dimension."""
+    dims = [10, 100] if fast else [10, 100, 1000]
+    rounds = 300 if fast else 1500
+    n = 10
+    algos = {
+        "GD": (compression.make_compressor("identity"), 100.0),
+        "SignSGD": (compression.make_compressor("zsign", sigma=0.0),
+                    sign_slr(0.01, 1, 0.0, 0.01)),
+        "1-SignSGD": (compression.make_compressor("zsign", z=1, sigma=2.0),
+                      sign_slr(0.01, 1, 2.0, 0.01)),
+        "inf-SignSGD": (compression.make_compressor("zsign", z=0, sigma=2.0),
+                        sign_slr(0.01, 0, 2.0, 0.01)),
+        "Sto-SignSGD": (compression.make_compressor("stosign"),
+                        sign_slr(0.01, 1, 0.0, 0.01)),
+    }
+    for d in dims:
+        y = jax.random.normal(jax.random.PRNGKey(0), (1, n, d))
+        opt = y[0].mean(0)
+        loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+        for name, (comp, slr) in algos.items():
+            cfg = fedavg.FedConfig(n_clients=n, client_lr=0.01, server_lr=slr)
+            out = run_fed(loss_fn, {"x": jnp.zeros(d)},
+                          lambda t: {"y": y[:, :, None]}, comp, cfg,
+                          rounds=rounds)
+            dist = float(jnp.linalg.norm(out["params"]["x"] - opt))
+            emit("fig1_consensus_dims", f"{name}_d{d}_dist", round(dist, 4))
+
+
+def fig2_noise_scales(fast=False):
+    d, n = 100, 10
+    rounds = 300 if fast else 1500
+    y = jax.random.normal(jax.random.PRNGKey(0), (1, n, d))
+    opt = y[0].mean(0)
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    for z, zname in [(1, "1"), (0, "inf")]:
+        for sigma in [0.1, 0.5, 2.0, 10.0]:
+            comp = compression.make_compressor("zsign", z=z, sigma=sigma)
+            cfg = fedavg.FedConfig(n_clients=n, client_lr=0.01, server_lr=0.05)
+            out = run_fed(loss_fn, {"x": jnp.zeros(d)},
+                          lambda t: {"y": y[:, :, None]}, comp, cfg,
+                          rounds=rounds)
+            dist = float(jnp.linalg.norm(out["params"]["x"] - opt))
+            emit("fig2_noise_scales", f"z{zname}_sigma{sigma}_dist",
+                 round(dist, 4))
+
+
+def _noniid_task(n_clients=10, E=1, micro=32, partition="label", alpha=1.0):
+    x, y = synthetic.gaussian_mixture_task(n_classes=10, dim=64,
+                                           n_per_class=200)
+    if partition == "label":
+        parts = synthetic.label_partition(y, n_clients)
+    else:
+        parts = synthetic.dirichlet_partition(y, n_clients, alpha=alpha)
+    init, loss_fn, acc_fn = mlp_loss_builder(64, 10)
+
+    def batches(t):
+        return synthetic.client_batches(x, y, parts, (1, n_clients, E, micro),
+                                        seed=1, round_idx=t)
+
+    return init, loss_fn, acc_fn, batches, (x, y)
+
+
+def fig3_noniid(fast=False):
+    """Extreme non-iid (one label per client), test accuracy."""
+    rounds = 60 if fast else 400
+    init, loss_fn, acc_fn, batches, (x, y) = _noniid_task()
+    algos = {
+        "SGDwM": ("identity", {}, dict(server_opt="momentum",
+                                       server_opt_kw=(("beta", 0.9),),
+                                       server_lr=0.05)),
+        "SignSGD": ("zsign", {"sigma": 0.0},
+                    dict(server_lr=sign_slr(0.01, 1, 0.0, 0.05))),
+        "EF-SignSGDwM": ("efsign", {}, dict(server_opt="momentum",
+                                            server_opt_kw=(("beta", 0.9),),
+                                            server_lr=0.05)),
+        "Sto-SignSGDwM": ("stosign", {}, dict(
+            server_opt="momentum", server_opt_kw=(("beta", 0.9),),
+            server_lr=sign_slr(0.005, 1, 0.0, 0.05))),
+        "1-SignSGD": ("zsign", {"z": 1, "sigma": 0.05},
+                      dict(server_lr=sign_slr(0.01, 1, 0.05, 0.05))),
+        "inf-SignSGD": ("zsign", {"z": 0, "sigma": 0.05},
+                        dict(server_lr=sign_slr(0.01, 0, 0.05, 0.05))),
+    }
+    for name, (cname, ckw, fkw) in algos.items():
+        comp = compression.make_compressor(cname, **ckw)
+        cfg = fedavg.FedConfig(n_clients=10, client_lr=0.05, **fkw)
+        out = run_fed(loss_fn, init(jax.random.PRNGKey(0)), batches, comp, cfg,
+                      rounds=rounds, eval_fn=lambda p: acc_fn(p, x, y))
+        emit("fig3_noniid", f"{name}_acc", round(out["evals"][-1][1], 4))
+        emit("fig3_noniid", f"{name}_Mbits",
+             round(out["bits"][-1] / 1e6, 2))
+
+
+def fig5_local_steps(fast=False):
+    """FedAvg-style benefit of E local steps (Dirichlet non-iid)."""
+    rounds = 40 if fast else 200
+    for E in [1, 2, 4, 8]:
+        init, loss_fn, acc_fn, batches, (x, y) = _noniid_task(
+            E=E, micro=16, partition="dirichlet")
+        for name, cname, ckw in [("FedAvg", "identity", {}),
+                                 ("1-SignFedAvg", "zsign",
+                                  {"z": 1, "sigma": 0.01})]:
+            comp = compression.make_compressor(cname, **ckw)
+            slr = (0.5 if cname == "identity"
+                   else sign_slr(0.01, 1, 0.01, 0.05))
+            cfg = fedavg.FedConfig(n_clients=10, local_steps=E,
+                                   client_lr=0.05, server_lr=slr)
+            out = run_fed(loss_fn, init(jax.random.PRNGKey(0)), batches, comp,
+                          cfg, rounds=rounds,
+                          eval_fn=lambda p: acc_fn(p, x, y))
+            emit("fig5_local_steps", f"{name}_E{E}_acc",
+                 round(out["evals"][-1][1], 4))
+
+
+def fig6_plateau(fast=False):
+    """Plateau criterion vs fixed sigma on the non-iid task."""
+    rounds = 60 if fast else 400
+    init, loss_fn, acc_fn, batches, (x, y) = _noniid_task()
+    comp = compression.make_compressor("zsign", z=1, sigma=0.05)
+    cfg = fedavg.FedConfig(n_clients=10, client_lr=0.05,
+                           server_lr=sign_slr(0.01, 1, 0.05, 0.05))
+    out_fix = run_fed(loss_fn, init(jax.random.PRNGKey(0)), batches, comp, cfg,
+                      rounds=rounds, eval_fn=lambda p: acc_fn(p, x, y))
+    emit("fig6_plateau", "fixed_sigma_acc", round(out_fix["evals"][-1][1], 4))
+
+    plateau = PlateauController(sigma_init=0.005, sigma_bound=0.5, kappa=10,
+                                beta=1.5)
+    out_pl = run_fed(loss_fn, init(jax.random.PRNGKey(0)), batches, comp, cfg,
+                     rounds=rounds, sigma0=0.005, plateau=plateau,
+                     eval_fn=lambda p: acc_fn(p, x, y), dynamic_sigma=True)
+    emit("fig6_plateau", "plateau_acc", round(out_pl["evals"][-1][1], 4))
+    emit("fig6_plateau", "plateau_final_sigma", round(out_pl["sigmas"][-1], 4))
+
+
+def fig16_qsgd(fast=False):
+    """1-SignSGD vs QSGD at matched uplink budget."""
+    rounds = 60 if fast else 300
+    init, loss_fn, acc_fn, batches, (x, y) = _noniid_task()
+    cases = [("1-SignSGD", "zsign", {"z": 1, "sigma": 0.05},
+              sign_slr(0.01, 1, 0.05, 0.05)),
+             ("QSGD_s1", "qsgd", {"s": 1}, 1.0),
+             ("QSGD_s4", "qsgd", {"s": 4}, 1.0)]
+    for name, cname, ckw, slr in cases:
+        comp = compression.make_compressor(cname, **ckw)
+        cfg = fedavg.FedConfig(n_clients=10, client_lr=0.05, server_lr=slr)
+        out = run_fed(loss_fn, init(jax.random.PRNGKey(0)), batches, comp, cfg,
+                      rounds=rounds, eval_fn=lambda p: acc_fn(p, x, y))
+        emit("fig16_qsgd", f"{name}_acc", round(out["evals"][-1][1], 4))
+        emit("fig16_qsgd", f"{name}_Mbits", round(out["bits"][-1] / 1e6, 2))
+
+
+def fig17_dp(fast=False):
+    """DP-SignFedAvg vs uncompressed DP-FedAvg across privacy budgets."""
+    rounds = 50 if fast else 250
+    init, loss_fn, acc_fn, batches, (x, y) = _noniid_task(
+        partition="dirichlet")
+    C = 0.5
+    q = 0.3  # client subsampling (privacy amplification, paper App. F)
+    for eps in ([2.0, 8.0] if fast else [1.0, 2.0, 4.0, 8.0]):
+        nm = calibrate_noise(q=q, steps=rounds, target_eps=eps, delta=1e-3,
+                             hi=200.0)
+        for name, cname, ckw, slr in [
+                ("DP-SignFedAvg", "zsign", {"z": 1, "sigma": nm * C},
+                 sign_slr(0.01, 1, nm * C, 0.05)),
+                ("DP-FedAvg", "dpgauss", {"sigma": nm * C}, 1.0)]:
+            comp = compression.make_compressor(cname, **ckw)
+            cfg = fedavg.FedConfig(n_clients=10, client_lr=0.05,
+                                   server_lr=slr, dp_clip=C)
+            mask = jnp.zeros((1, 10)).at[0, :3].set(1.0)  # q = 0.3
+            out = run_fed(loss_fn, init(jax.random.PRNGKey(0)), batches, comp,
+                          cfg, rounds=rounds, mask=mask,
+                          eval_fn=lambda p: acc_fn(p, x, y))
+            emit("fig17_dp", f"{name}_eps{eps}_acc",
+                 round(out["evals"][-1][1], 4))
+
+
+def table2_bits(fast=False):
+    d = 1_000_000
+    for name, comp in [
+            ("uncompressed_32bit", compression.make_compressor("identity")),
+            ("EF-SignSGD", compression.make_compressor("efsign")),
+            ("Sto-SignSGD", compression.make_compressor("stosign")),
+            ("1-SignFedAvg", compression.make_compressor("zsign", z=1)),
+            ("inf-SignFedAvg", compression.make_compressor("zsign", z=0)),
+            ("QSGD_s1", compression.make_compressor("qsgd", s=1))]:
+        emit("table2_bits", f"{name}_bits_per_round_per_client",
+             int(d * comp.wire_bits_per_coord))
+
+
+def kernel_throughput(fast=False):
+    """Pallas compression kernel vs pure-jnp reference (interpret mode on CPU
+    measures correctness-path overhead; compiled-TPU numbers on hardware)."""
+    from repro.kernels.zsign import ops, ref
+    size = 2 ** 20 if not fast else 2 ** 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (size,))
+    nz = jax.random.normal(jax.random.PRNGKey(1), (size,))
+
+    ref_fn = jax.jit(lambda a, b: ref.zsign_compress_ref(a, b, 0.5))
+    us_ref = timeit(ref_fn, x, nz, iters=5 if fast else 20)
+    emit("kernel_throughput", f"ref_jnp_us_{size}", round(us_ref, 1))
+    emit("kernel_throughput", "compression_ratio_wire", 32.0)
+    emit("kernel_throughput", f"ref_jnp_GBps_{size}",
+         round(size * 4 / (us_ref * 1e-6) / 1e9, 2))
+
+
+BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
+           fig5_local_steps, fig6_plateau, fig16_qsgd, fig17_dp, table2_bits,
+           kernel_throughput]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,metric,value")
+    for b in BENCHES:
+        if args.only and b.__name__ != args.only:
+            continue
+        b(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

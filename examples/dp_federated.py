@@ -1,0 +1,49 @@
+"""DP-SignFedAvg (paper Algorithm 2 / Appendix F): client-level DP with
+1-bit uplink.
+
+    PYTHONPATH=src python examples/dp_federated.py
+
+Calibrates the Gaussian noise multiplier to a target (eps, delta) via the
+RDP accountant, then trains with clipping + noisy sign. The same noise does
+double duty: privacy AND the sign-bias correction of the paper's Lemma 1.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.models.mlp import mlp_loss_builder
+from repro.core import compression, fedavg
+from repro.core.dp import calibrate_noise, compute_epsilon
+from repro.core.noise import eta_z
+from repro.data import synthetic
+
+ROUNDS, N, CLIP, DELTA = 200, 50, 0.5, 1e-3
+Q = 0.3        # client subsampling ratio (privacy amplification, paper App. F)
+x, y = synthetic.gaussian_mixture_task(n_classes=10, dim=64, n_per_class=200)
+parts = synthetic.dirichlet_partition(y, min(N, 10), alpha=1.0)
+init, loss_fn, acc_fn = mlp_loss_builder(64, 10)
+
+for target_eps in [2.0, 8.0]:
+    nm = calibrate_noise(q=Q, steps=ROUNDS, target_eps=target_eps,
+                         delta=DELTA)
+    sigma = nm * CLIP
+    comp = compression.make_compressor("zsign", z=1, sigma=sigma)
+    cfg = fedavg.FedConfig(n_clients=N, client_lr=0.05, dp_clip=CLIP,
+                           server_lr=0.005 / (eta_z(1) * sigma * 0.05),
+                           server_opt="momentum",
+                           server_opt_kw=(("beta", 0.9),))
+    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg))
+    state = fedavg.init_server_state(init(jax.random.PRNGKey(0)), cfg, comp,
+                                     jax.random.PRNGKey(1))
+    import numpy as _np
+    rng = _np.random.RandomState(0)
+    for t in range(ROUNDS):
+        batch = synthetic.client_batches(x, y, parts, (1, N, 1, 32),
+                                         seed=3, round_idx=t)
+        mask = _np.zeros(N, _np.float32)
+        mask[rng.choice(N, max(1, int(Q * N)), replace=False)] = 1.0
+        state, m = step(state, batch, jnp.asarray(mask)[None])
+    eps = compute_epsilon(q=Q, noise_multiplier=nm, steps=ROUNDS,
+                          delta=DELTA)
+    print(f"target eps={target_eps:4.1f}: noise multiplier={nm:5.2f} "
+          f"(achieved eps={eps:5.2f}, delta={DELTA})  "
+          f"acc={acc_fn(state.params, x, y):.3f}  [1 bit/coord uplink]")

@@ -1,0 +1,49 @@
+"""Non-i.i.d. federated classification (paper §4.2 setting).
+
+    PYTHONPATH=src python examples/noniid_classification.py
+
+Each of 10 clients holds ONE class's data (extreme heterogeneity). Compares
+uncompressed SGD+momentum, vanilla SignSGD (diverges), EF-SignSGD and the
+paper's 1-SignSGD, with partial participation + simulated stragglers.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.models.mlp import mlp_loss_builder
+from repro.core import compression, fedavg
+from repro.core.noise import eta_z
+from repro.data import synthetic
+from repro.fed.sampling import ParticipationSampler
+
+N, ROUNDS = 10, 200
+x, y = synthetic.gaussian_mixture_task(n_classes=10, dim=64, n_per_class=200)
+parts = synthetic.label_partition(y, N)
+init, loss_fn, acc_fn = mlp_loss_builder(64, 10)
+sampler = ParticipationSampler(total_clients=N, per_round=8,
+                               over_provision=1.25, failure_rate=0.05)
+
+for name, cname, ckw, slr in [
+        ("SGD+momentum (32 bit)", "identity", {}, 0.05),
+        ("vanilla SignSGD", "zsign", {"sigma": 0.0}, 0.2),
+        ("EF-SignSGD", "efsign", {}, 1.0),
+        ("1-SignSGD (paper)", "zsign", {"z": 1, "sigma": 0.05},
+         0.01 / (eta_z(1) * 0.05 * 0.05)),
+]:
+    comp = compression.make_compressor(cname, **ckw)
+    opt = ("momentum", (("beta", 0.9),)) if cname in ("identity", "efsign") \
+        else ("sgd", ())
+    cfg = fedavg.FedConfig(n_clients=N, client_lr=0.05, server_lr=slr,
+                           server_opt=opt[0], server_opt_kw=opt[1])
+    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg))
+    state = fedavg.init_server_state(init(jax.random.PRNGKey(0)), cfg, comp,
+                                     jax.random.PRNGKey(1))
+    bits = 0.0
+    for t in range(ROUNDS):
+        batch = synthetic.client_batches(x, y, parts, (1, N, 1, 32),
+                                         seed=1, round_idx=t)
+        mask = jnp.asarray(sampler.mask((1, N)))
+        state, m = step(state, batch, mask)
+        bits += float(m.uplink_bits)
+    acc = acc_fn(state.params, x, y)
+    print(f"{name:24s} acc={acc:.3f}  uplink={bits/1e6:8.2f} Mbit "
+          f"({32.0/comp.wire_bits_per_coord:4.0f}x compression)")

@@ -1,0 +1,118 @@
+"""Fault-tolerant, mesh-independent checkpointing.
+
+Design goals (DESIGN.md §6):
+  * atomic: write to <dir>/.tmp-<round>, fsync, rename -> a crash mid-write
+    never corrupts the latest checkpoint;
+  * self-validating: SHA-256 digest stored next to the payload; restore
+    skips checkpoints whose digest mismatches (torn writes / bitrot) and
+    falls back to the previous one;
+  * mesh-independent (elastic): arrays are saved *unsharded* as host numpy
+    under flattened pytree paths; ``restore`` re-shards onto whatever mesh /
+    sharding the restarted job passes — pods may come and go between runs;
+  * bounded retention: keep the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, round_idx: int, state_tree: Any, extra: Optional[dict] = None):
+        flat = _flatten(state_tree)
+        tmp = os.path.join(self.dir, f".tmp-{round_idx}")
+        final = os.path.join(self.dir, f"ckpt-{round_idx:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        payload = os.path.join(tmp, "arrays.npz")
+        np.savez(payload, **flat)
+        digest = _sha256(payload)
+        meta = {"round": round_idx, "digest": digest,
+                "keys": sorted(flat.keys()), "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        ckpts = self._list()
+        for _, path in ckpts[:-self.keep]:
+            shutil.rmtree(path, ignore_errors=True)
+
+    def _list(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"ckpt-(\d+)", name)
+            if m:
+                out.append((int(m.group(1)), os.path.join(self.dir, name)))
+        return sorted(out)
+
+    # -- restore ------------------------------------------------------------
+    def restore_latest(self, template_tree: Any, shardings: Any = None):
+        """Returns (round_idx, tree) or (None, None). Walks backwards past
+        corrupt checkpoints (digest mismatch / unreadable)."""
+        for round_idx, path in reversed(self._list()):
+            try:
+                with open(os.path.join(path, "meta.json")) as f:
+                    meta = json.load(f)
+                payload = os.path.join(path, "arrays.npz")
+                if _sha256(payload) != meta["digest"]:
+                    raise IOError("digest mismatch")
+                data = np.load(payload)
+                tree = self._unflatten(template_tree, data, shardings)
+                return round_idx, tree
+            except Exception:
+                continue
+        return None, None
+
+    @staticmethod
+    def _unflatten(template, data, shardings):
+        flat_t = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        shard_leaves = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: x is None) if shardings is not None
+            else [None] * len(flat_t[0]))
+        for (path, leaf), shard in zip(flat_t[0], shard_leaves):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = np.asarray(data[key])
+            if shard is not None:
+                leaves.append(jax.device_put(arr, shard))
+            else:
+                leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(flat_t[1], leaves)
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()

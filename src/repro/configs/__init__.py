@@ -1,0 +1,1 @@
+from repro.configs.common import ArchConfig, SHAPES, get_arch, list_archs  # noqa: F401

@@ -1,0 +1,340 @@
+"""Gradient compressors.
+
+The paper's contribution (ZSignCompressor) plus every baseline it compares
+against: vanilla SignSGD, EF-SignSGD, Sto-SignSGD, QSGD/FedPAQ, and identity
+(uncompressed FedAvg). All compressors share one interface so the federated
+round engine (core/fedavg.py) treats them as a plug-in:
+
+    init_state(params)            -> per-client compressor state (pytree or None)
+    encode(key, g, state)         -> (enc, new_state)      # runs on the client
+    decode_mean(enc_mean_or_sum)  -> pseudo-gradient estimate  # on the server
+    wire_bits_per_coord           -> float, for the communication accounting
+
+``g`` is the pseudo-gradient pytree ((x_{t-1} - x^i_{t,E}) / gamma).  Encoded
+leaves are int8 sign tensors (or bitpacked uint8 when ``bitpack=True``), so the
+cross-client collective moves 8x/32x fewer bytes than fp32.
+
+Decoders are linear in the per-client encodings, so the server may aggregate
+either ``mean_i enc_i`` (one int8 collective) or a scan-accumulated sum for
+sequential client groups — both paths produce identical estimates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import noise as znoise
+
+
+def _tree_keys(key: jax.Array, tree):
+    """One PRNG key per leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+            for l in jax.tree_util.tree_leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# bit packing (pure-jnp reference path; the Pallas kernel in kernels/zsign is
+# the fused fast path and is verified against this in tests)
+# ---------------------------------------------------------------------------
+
+def pack_signs(signs_i8: jax.Array) -> jax.Array:
+    """int8 {-1,+1} (flat, len % 8 == 0) -> uint8 bitfield of len/8."""
+    bits = (signs_i8 > 0).astype(jnp.uint8).reshape(-1, 8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_signs(packed: jax.Array) -> jax.Array:
+    """uint8 bitfield -> int8 {-1,+1} of len*8."""
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    bits = (packed[:, None] & weights) > 0
+    return jnp.where(bits, jnp.int8(1), jnp.int8(-1)).reshape(-1)
+
+
+def _pad_to(x: jax.Array, mult: int) -> jax.Array:
+    r = (-x.shape[0]) % mult
+    return jnp.pad(x, (0, r)) if r else x
+
+
+# ---------------------------------------------------------------------------
+# compressors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base: identity (uncompressed FedAvg)."""
+    wire_bits_per_coord: float = 32.0
+    name: str = "identity"
+
+    def init_state(self, params) -> Any:
+        return None
+
+    def encode(self, key, g, state, sigma=None) -> Tuple[Any, Any]:
+        del key, sigma
+        return g, state
+
+    def decode_mean(self, enc_mean, sigma=None):
+        del sigma
+        return enc_mean
+
+    def aggregate(self, enc, mask):
+        """Masked SUM over the leading client axis of stacked encodings.
+        Default: dense einsum (the int8/fp collective path)."""
+        return jax.tree.map(
+            lambda e: jnp.einsum("n...,n->...", e.astype(jnp.float32), mask),
+            enc)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZSignCompressor(Compressor):
+    """The paper's stochastic sign operator (Algorithm 1, line 11).
+
+    enc = Sign(g + sigma * xi_z)  with xi_z ~ p_z  (z<=0 means z = +inf).
+    decode scales by eta_z * sigma — the asymptotically-unbiased estimator of
+    Lemma 1.  sigma == 0.0 recovers vanilla SignSGD (biased; diverges on the
+    paper's counterexample — reproduced in tests).
+    """
+    z: int = 1
+    sigma: float = 0.01
+    wire_bits_per_coord: float = 1.0
+    name: str = "zsign"
+
+    def encode(self, key, g, state, sigma=None):
+        keys = _tree_keys(key, g)
+        add_noise = (sigma is not None) or self.sigma > 0.0
+        sig = self.sigma if sigma is None else sigma
+
+        def enc_leaf(k, x):
+            x = x.astype(jnp.float32)
+            if add_noise:
+                x = x + sig * znoise.sample_z_noise(k, x.shape, self.z)
+            return jnp.where(x >= 0, jnp.int8(1), jnp.int8(-1))
+
+        return jax.tree.map(enc_leaf, keys, g), state
+
+    def decode_mean(self, enc_mean, sigma=None):
+        if sigma is None:
+            scale = znoise.eta_z(self.z) * self.sigma if self.sigma > 0.0 else 1.0
+        else:
+            scale = znoise.eta_z(self.z) * sigma
+        return jax.tree.map(lambda s: s.astype(jnp.float32) * scale, enc_mean)
+
+
+@dataclasses.dataclass(frozen=True)
+class StoSignCompressor(Compressor):
+    """Sto-SignSGD [Safaryan & Richtarik '21] as unified by the paper:
+    z = inf with the *input-dependent* noise scale sigma_i = ||g_i||_2."""
+    wire_bits_per_coord: float = 1.0
+    name: str = "stosign"
+
+    def encode(self, key, g, state, sigma=None):
+        sigma = global_norm(g)
+        keys = _tree_keys(key, g)
+
+        def enc_leaf(k, x):
+            xi = jax.random.uniform(k, x.shape, minval=-1.0, maxval=1.0)
+            return jnp.where(x.astype(jnp.float32) + sigma * xi >= 0,
+                             jnp.int8(1), jnp.int8(-1))
+
+        return jax.tree.map(enc_leaf, keys, g), state
+
+    def decode_mean(self, enc_mean, sigma=None):
+        # majority-vote style: server applies its own stepsize to mean sign.
+        del sigma
+        return jax.tree.map(lambda s: s.astype(jnp.float32), enc_mean)
+
+
+@dataclasses.dataclass(frozen=True)
+class EFSignCompressor(Compressor):
+    """EF-SignSGD [Karimireddy et al. '19]: scaled sign + per-client residual.
+
+    enc_i = (||p_i||_1 / d) * Sign(p_i),  p_i = g_i + e_i ;
+    e_i <- p_i - enc_i.  The scale is transmitted as one fp32 per tensor
+    (d + 32 bits).  Cannot handle partial participation (residuals go stale) —
+    documented limitation, matching the paper's related-work discussion.
+    """
+    wire_bits_per_coord: float = 1.0
+    name: str = "efsign"
+
+    def init_state(self, params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    use_kernel: bool = False   # fused Pallas EF step (kernels/efsign)
+
+    def encode(self, key, g, state, sigma=None):
+        del key
+
+        def enc_leaf(x, e):
+            p = x.astype(jnp.float32) + e
+            scale = jnp.mean(jnp.abs(p))
+            if self.use_kernel:
+                from repro.kernels.efsign import ops as EK
+                return EK.ef_sign_update(x.astype(jnp.float32), e, scale)
+            q = scale * jnp.sign(p)
+            return q, p - q
+
+        enc_and_res = jax.tree.map(enc_leaf, g, state)
+        enc = jax.tree.map(lambda t: t[0], enc_and_res,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], enc_and_res,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return enc, res
+
+    def decode_mean(self, enc_mean, sigma=None):
+        del sigma
+        return enc_mean
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDCompressor(Compressor):
+    """Unbiased stochastic quantizer of Alistarh et al. (paper Definition 2);
+    with FedAvg local steps this is FedPAQ/FedCOM.  ``s`` quantization levels.
+    """
+    s: int = 1
+    wire_bits_per_coord: float = 2.0  # ~log2(2s+1) + norm overhead
+    name: str = "qsgd"
+
+    def encode(self, key, g, state, sigma=None):
+        keys = _tree_keys(key, g)
+
+        def enc_leaf(k, x):
+            x = x.astype(jnp.float32)
+            nrm = jnp.linalg.norm(x.reshape(-1)) + 1e-12
+            r = jnp.abs(x) / nrm * self.s
+            low = jnp.floor(r)
+            up = jax.random.bernoulli(k, jnp.clip(r - low, 0.0, 1.0), x.shape)
+            lvl = (low + up.astype(jnp.float32)) / self.s
+            return nrm * jnp.sign(x) * lvl
+
+        return jax.tree.map(enc_leaf, keys, g), state
+
+    def decode_mean(self, enc_mean, sigma=None):
+        del sigma
+        return enc_mean
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor(Compressor):
+    """Beyond-paper sparsifier baseline: keep top-k fraction by magnitude with
+    per-client error feedback."""
+    frac: float = 0.01
+    wire_bits_per_coord: float = 32.0 * 2 * 0.01  # value+index on kept coords
+    name: str = "topk"
+
+    def init_state(self, params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def encode(self, key, g, state, sigma=None):
+        del key
+
+        def enc_leaf(x, e):
+            p = (x.astype(jnp.float32) + e).reshape(-1)
+            k = max(1, int(p.size * self.frac))
+            thresh = jax.lax.top_k(jnp.abs(p), k)[0][-1]
+            q = jnp.where(jnp.abs(p) >= thresh, p, 0.0).reshape(x.shape)
+            return q, p.reshape(x.shape) - q
+
+        enc_and_res = jax.tree.map(enc_leaf, g, state)
+        enc = jax.tree.map(lambda t: t[0], enc_and_res,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], enc_and_res,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return enc, res
+
+    def decode_mean(self, enc_mean, sigma=None):
+        del sigma
+        return enc_mean
+
+
+@dataclasses.dataclass(frozen=True)
+class DPGaussianCompressor(Compressor):
+    """Uncompressed DP-FedAvg mechanism: transmit g + N(0, sigma^2 I)
+    (clipping happens in the round engine via cfg.dp_clip). 32 bits/coord."""
+    sigma: float = 1.0
+    wire_bits_per_coord: float = 32.0
+    name: str = "dpgauss"
+
+    def encode(self, key, g, state, sigma=None):
+        sig = self.sigma if sigma is None else sigma
+        keys = _tree_keys(key, g)
+        enc = jax.tree.map(
+            lambda k, x: x.astype(jnp.float32)
+            + sig * jax.random.normal(k, x.shape), keys, g)
+        return enc, state
+
+    def decode_mean(self, enc_mean, sigma=None):
+        del sigma
+        return enc_mean
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedZSignCompressor(ZSignCompressor):
+    """z-sign with the TRUE 1-bit wire format, via the Pallas TPU kernels
+    (kernels/zsign): encode fuses noise+sign+bitpack to uint8 (8 coords per
+    byte — what actually crosses the network); the server aggregation
+    unpacks + sums with the companion kernel. Encoded leaves are
+    {"packed": uint8[ceil(n/8)]} per parameter; decoders are linear, so the
+    engine's group-sum path is unchanged.
+    """
+    name: str = "zsign_packed"
+
+    def encode(self, key, g, state, sigma=None):
+        from repro.kernels.zsign import ops as K
+        keys = _tree_keys(key, g)
+        sig = self.sigma if sigma is None else sigma
+
+        def enc_leaf(k, x):
+            noise = znoise.sample_z_noise(k, x.shape, self.z)
+            return K.zsign_compress(x.astype(jnp.float32), noise, sig)
+
+        return jax.tree.map(enc_leaf, keys, g), state
+
+    def aggregate(self, enc, mask):
+        from repro.kernels.zsign import ops as K
+
+        def agg_leaf(e):
+            # e: (n_clients, n_bytes) uint8. Unpack+sum via the kernel for
+            # the full-participation fast path; masked clients handled by
+            # zeroing their +/-1 contribution (unpack then weight).
+            n, nb = e.shape
+            signs = jax.vmap(
+                lambda row: K.zsign_decompress_sum(row[None], nb * 8))(e)
+            return jnp.einsum("nd,n->d", signs, mask)
+
+        return jax.tree.map(agg_leaf, enc)
+
+    def decode_mean(self, enc_mean, sigma=None):
+        # enc_mean leaves are flat (padded) sign-means; reshaping back to the
+        # parameter shapes happens in unflatten_like.
+        return super().decode_mean(enc_mean, sigma)
+
+    @staticmethod
+    def unflatten_like(flat_tree, params):
+        return jax.tree.map(
+            lambda f, p: f[: p.size].reshape(p.shape), flat_tree, params)
+
+
+_REGISTRY = {
+    "identity": Compressor,
+    "zsign": ZSignCompressor,
+    "stosign": StoSignCompressor,
+    "efsign": EFSignCompressor,
+    "qsgd": QSGDCompressor,
+    "topk": TopKCompressor,
+    "dpgauss": DPGaussianCompressor,
+    "zsign_packed": PackedZSignCompressor,
+}
+
+
+def make_compressor(name: str, **kw) -> Compressor:
+    return _REGISTRY[name](name=name, **kw)

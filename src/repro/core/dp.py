@@ -1,0 +1,70 @@
+"""DP-SignFedAvg (paper Algorithm 2 + Appendix F).
+
+Client-side: clip the pseudo-gradient to norm C, add N(0, sigma^2 C^2 I),
+transmit the sign — i.e. ZSignCompressor with z=1 where the *same* Gaussian
+noise provides both the DP guarantee and the sign-bias correction.
+
+Accounting: Renyi-DP of the subsampled Gaussian mechanism (Mironov, Talwar,
+Zhang 2019) with the integer-alpha closed form, converted to (eps, delta)-DP.
+The clipping + noise themselves live in core/fedavg.py (cfg.dp_clip > 0) +
+ZSignCompressor(sigma=noise_multiplier * C).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+
+def _log_comb(n: int, k: int) -> float:
+    return (math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1))
+
+
+def rdp_subsampled_gaussian(q: float, noise_multiplier: float,
+                            steps: int, alphas: Sequence[int]) -> list:
+    """RDP epsilon at each integer alpha after ``steps`` compositions.
+
+    For q == 1 (full participation) uses the exact Gaussian-mechanism RDP
+    alpha / (2 sigma^2); otherwise the binomial-expansion upper bound for the
+    sampled Gaussian mechanism (valid for integer alpha >= 2).
+    """
+    sig = noise_multiplier
+    out = []
+    for a in alphas:
+        if a < 2:
+            raise ValueError("alpha must be >= 2")
+        if q >= 1.0:
+            eps_a = a / (2.0 * sig * sig)
+        else:
+            # log E_{k~Bin(alpha,q)} exp(k(k-1)/(2 sigma^2))
+            log_terms = [
+                _log_comb(a, k) + k * math.log(q) + (a - k) * math.log1p(-q)
+                + k * (k - 1) / (2.0 * sig * sig)
+                for k in range(a + 1)
+            ]
+            m = max(log_terms)
+            log_mgf = m + math.log(sum(math.exp(t - m) for t in log_terms))
+            eps_a = log_mgf / (a - 1)
+        out.append(steps * eps_a)
+    return out
+
+
+def compute_epsilon(q: float, noise_multiplier: float, steps: int,
+                    delta: float, alphas: Sequence[int] = tuple(range(2, 256))) -> float:
+    """(eps, delta)-DP from the optimal RDP order."""
+    rdp = rdp_subsampled_gaussian(q, noise_multiplier, steps, alphas)
+    eps = min(r + math.log(1.0 / delta) / (a - 1) for r, a in zip(rdp, alphas))
+    return eps
+
+
+def calibrate_noise(q: float, steps: int, target_eps: float, delta: float,
+                    lo: float = 0.3, hi: float = 50.0, iters: int = 60) -> float:
+    """Smallest noise multiplier achieving (target_eps, delta)-DP (bisection)."""
+    if compute_epsilon(q, hi, steps, delta) > target_eps:
+        raise ValueError("target epsilon unreachable within noise bound")
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if compute_epsilon(q, mid, steps, delta) > target_eps:
+            lo = mid
+        else:
+            hi = mid
+    return hi

@@ -1,0 +1,220 @@
+"""z-SignFedAvg round engine (paper Algorithm 1, plus every baseline).
+
+One *round step* is a single jitted function:
+
+    broadcast server params -> vmap over parallel clients:
+        scan over E local SGD steps -> pseudo-gradient (x0 - xE)/gamma
+        -> compressor.encode  (the 1-bit uplink payload)
+    -> participation-masked aggregation over the client axis
+       (int8 mean  ==  the compressed all-reduce)
+    -> compressor.decode_mean -> server optimizer update.
+
+Parallel clients live on a vmapped leading axis that the launcher shards over
+mesh ``client_axes`` (data and/or pod); sequential client *groups* are an
+outer ``lax.scan`` so arbitrarily many clients run per round with one replica
+of storage — the decoders are linear so group-sum aggregation is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compressor
+from repro.optim.optimizers import Optimizer, make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_clients: int = 8            # parallel clients (vmapped / mesh-sharded)
+    client_groups: int = 1        # sequential groups; total clients = n*groups
+    local_steps: int = 1          # E
+    client_lr: float = 0.01       # gamma
+    server_lr: float = 1.0        # eta (decode already applies eta_z * sigma)
+    server_opt: str = "sgd"       # sgd | momentum | adam
+    server_opt_kw: tuple = ()     # e.g. (("momentum", 0.9),)
+    dp_clip: float = 0.0          # >0 enables DP-SignFedAvg clipping (Alg. 2)
+
+
+class ServerState(NamedTuple):
+    params: Any
+    opt_state: Any
+    comp_state: Any       # per-client compressor state, leading dims (G, N, ...)
+    rng: jax.Array
+    round: jax.Array      # int32 scalar
+    sigma: jax.Array      # dynamic noise scale (Plateau criterion)
+
+
+class RoundMetrics(NamedTuple):
+    loss: jax.Array
+    grad_est_norm: jax.Array
+    participation: jax.Array
+    uplink_bits: jax.Array
+
+
+def init_server_state(params, cfg: FedConfig, compressor: Compressor,
+                      rng: jax.Array, sigma0: float = 0.0) -> ServerState:
+    opt = _server_optimizer(cfg)
+    cstate = compressor.init_state(params)
+    if cstate is not None:
+        # one residual per client: (groups, n_clients, ...)
+        cstate = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (cfg.client_groups, cfg.n_clients) + x.shape), cstate)
+    return ServerState(params=params, opt_state=opt.init(params),
+                       comp_state=cstate, rng=rng,
+                       round=jnp.zeros((), jnp.int32),
+                       sigma=jnp.asarray(sigma0, jnp.float32))
+
+
+def _server_optimizer(cfg: FedConfig) -> Optimizer:
+    return make_optimizer(cfg.server_opt, lr=cfg.server_lr, **dict(cfg.server_opt_kw))
+
+
+def _clip_tree(tree, max_norm: float):
+    from repro.core.compression import global_norm
+    nrm = global_norm(tree)
+    scale = 1.0 / jnp.maximum(1.0, nrm / max_norm)
+    return jax.tree.map(lambda x: x * scale, tree)
+
+
+def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
+                     *, dynamic_sigma: bool = False,
+                     param_constraint: Optional[Callable] = None,
+                     spmd_axes=None):
+    """Returns round_step(state, batch, mask) -> (state, RoundMetrics).
+
+    loss_fn(params, batch_slice) -> scalar loss. ``batch`` is a pytree whose
+    leaves have leading dims (client_groups, n_clients, E, ...). ``mask`` is a
+    float (client_groups, n_clients) participation mask (straggler dropout /
+    partial participation); pass all-ones for full participation.
+    ``param_constraint`` re-applies sharding constraints to per-client
+    replicas inside the step (set by the launcher).
+    """
+    opt = _server_optimizer(cfg)
+    gamma = cfg.client_lr
+    constrain = param_constraint or (lambda t: t)
+
+    def local_sgd(params, client_batch):
+        """scan over E local steps; returns (x_E, mean loss)."""
+        def step(p, b):
+            loss, g = jax.value_and_grad(loss_fn)(p, b)
+            p = jax.tree.map(lambda w, gw: w - gamma * gw.astype(w.dtype), p, g)
+            return p, loss
+
+        x_e, losses = jax.lax.scan(step, params, client_batch)
+        return x_e, jnp.mean(losses)
+
+    def client_update(params0, client_batch, key, cstate, sigma):
+        x_e, loss = local_sgd(params0, client_batch)
+        pseudo = jax.tree.map(
+            lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)) / gamma,
+            params0, x_e)
+        if cfg.dp_clip > 0.0:
+            pseudo = _clip_tree(pseudo, cfg.dp_clip)
+        enc, new_cstate = compressor.encode(
+            key, pseudo, cstate, sigma=sigma if dynamic_sigma else None)
+        return enc, new_cstate, loss
+
+    def group_round(params, group_batch, keys, group_cstate, mask_g, sigma):
+        """One parallel group of n_clients: returns masked SUM of encodings."""
+        if cfg.n_clients == 1:
+            # sequential-client (big-arch) mode: skip the vmap — a size-1
+            # vmap without spmd_axis_name drops every sharding constraint
+            # inside (measured: 16 TB/dev of replicate-fallback collectives
+            # on jamba; EXPERIMENTS.md §Perf).
+            enc1, ncs1, loss1 = client_update(
+                params, jax.tree.map(lambda x: x[0], group_batch), keys[0],
+                (None if group_cstate is None
+                 else jax.tree.map(lambda x: x[0], group_cstate)), sigma)
+            enc = jax.tree.map(lambda e: e[None], enc1)
+            new_cstate = (None if ncs1 is None
+                          else jax.tree.map(lambda e: e[None], ncs1))
+            losses = loss1[None]
+        else:
+            enc, new_cstate, losses = jax.vmap(
+                client_update,
+                in_axes=(None, 0, 0,
+                         0 if group_cstate is not None else None, None),
+                spmd_axis_name=spmd_axes,
+            )(params, group_batch, keys, group_cstate, sigma)
+        # participation mask: dead clients contribute zero; stateful
+        # compressors keep their previous residual.
+        enc_sum = constrain(compressor.aggregate(enc, mask_g))
+        if group_cstate is not None:
+            new_cstate = jax.tree.map(
+                lambda new, old: jnp.where(
+                    mask_g.reshape((-1,) + (1,) * (new.ndim - 1)) > 0, new, old),
+                new_cstate, group_cstate)
+        loss_sum = jnp.sum(losses * mask_g)
+        return enc_sum, new_cstate, loss_sum
+
+    def round_step(state: ServerState, batch, mask):
+        rng, sub = jax.random.split(state.rng)
+        all_keys = jax.random.split(sub, cfg.client_groups * cfg.n_clients
+                                    ).reshape(cfg.client_groups, cfg.n_clients, -1)
+        sigma = state.sigma
+
+        if cfg.client_groups == 1:
+            g_batch = jax.tree.map(lambda x: x[0], batch)
+            g_cstate = (None if state.comp_state is None
+                        else jax.tree.map(lambda x: x[0], state.comp_state))
+            enc_sum, new_cstate_g, loss_sum = group_round(
+                state.params, g_batch, all_keys[0], g_cstate, mask[0], sigma)
+            new_cstate = (None if new_cstate_g is None
+                          else jax.tree.map(lambda x: x[None], new_cstate_g))
+        else:
+            def body(carry, xs):
+                enc_acc, loss_acc = carry
+                g_batch, keys_g, cstate_g, mask_g = xs
+                enc_sum, new_cstate_g, loss_sum = group_round(
+                    state.params, g_batch, keys_g, cstate_g, mask_g, sigma)
+                enc_acc = constrain(jax.tree.map(jnp.add, enc_acc, enc_sum))
+                return (enc_acc, loss_acc + loss_sum), new_cstate_g
+
+            agg_shapes = jax.eval_shape(
+                lambda b, k, c, m: group_round(state.params, b, k, c, m,
+                                               sigma)[0],
+                jax.tree.map(lambda x: x[0], batch), all_keys[0],
+                (None if state.comp_state is None
+                 else jax.tree.map(lambda x: x[0], state.comp_state)),
+                mask[0])
+            zero_enc = constrain(jax.tree.map(
+                lambda sd: jnp.zeros(sd.shape, sd.dtype), agg_shapes))
+            (enc_sum, loss_sum), new_cstate = jax.lax.scan(
+                body, (zero_enc, jnp.zeros(())),
+                (batch, all_keys, state.comp_state, mask))
+
+        n_live = jnp.maximum(jnp.sum(mask), 1.0)
+        enc_mean = jax.tree.map(lambda e: e / n_live, enc_sum)
+        g_hat = compressor.decode_mean(enc_mean,
+                                       sigma=sigma if dynamic_sigma else None)
+        if hasattr(compressor, "unflatten_like"):
+            g_hat = compressor.unflatten_like(g_hat, state.params)
+        # Algorithm 1 line 15: x_t = x_{t-1} - eta * gamma * mean(Delta)
+        scaled = jax.tree.map(lambda g: gamma * g, g_hat)
+        new_params, new_opt = opt.update(scaled, state.opt_state, state.params)
+
+        n_coords = sum(p.size for p in jax.tree_util.tree_leaves(state.params))
+        metrics = RoundMetrics(
+            loss=loss_sum / n_live,
+            grad_est_norm=jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                                       for g in jax.tree_util.tree_leaves(g_hat))),
+            participation=n_live,
+            uplink_bits=n_live * float(n_coords * compressor.wire_bits_per_coord))
+        new_state = ServerState(params=new_params, opt_state=new_opt,
+                                comp_state=new_cstate, rng=rng,
+                                round=state.round + 1, sigma=sigma)
+        return new_state, metrics
+
+    return round_step
+
+
+def make_batch_spec(cfg: FedConfig, per_step_batch: dict) -> dict:
+    """Shape helper: expand a single-step batch spec to the round layout
+    (groups, n_clients, E, ...)."""
+    lead = (cfg.client_groups, cfg.n_clients, cfg.local_steps)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(lead + s.shape, s.dtype), per_step_batch)

@@ -1,0 +1,70 @@
+"""z-distribution noise (Definition 1 of the paper).
+
+p_z(t) = exp(-t^{2z}/2) / (2*eta_z),   eta_z = 2^{1/(2z)} * Gamma(1 + 1/(2z))
+
+z=1   -> standard Gaussian.
+z=inf -> Uniform[-1, 1]  (Lemma 2), with eta_inf = 1.
+
+Sampling for finite z uses the fact that |xi_z|^{2z} ~ Gamma(shape=1/(2z),
+scale=2)^... more precisely if U ~ Gamma(k=1/(2z), theta=2) then U^{1/(2z)}
+with a random sign follows p_z:  p_{|xi|}(t) ∝ exp(-t^{2z}/2) on t>=0 and the
+change of variables u = t^{2z} gives the Gamma density with shape 1/(2z),
+scale 2.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Z_INF = 0  # sentinel for z = +inf (uniform noise). Any z <= 0 means infinity.
+
+
+def eta_z(z: int) -> float:
+    """Normalizer eta_z = 2^{1/(2z)} Gamma(1 + 1/(2z)); eta_inf = 1."""
+    if z <= Z_INF:
+        return 1.0
+    return 2.0 ** (1.0 / (2 * z)) * math.gamma(1.0 + 1.0 / (2 * z))
+
+
+def sample_z_noise(key: jax.Array, shape, z: int, dtype=jnp.float32) -> jax.Array:
+    """Draw i.i.d. xi_z with p.d.f. p_z (Definition 1)."""
+    if z <= Z_INF:
+        return jax.random.uniform(key, shape, dtype=dtype, minval=-1.0, maxval=1.0)
+    if z == 1:
+        return jax.random.normal(key, shape, dtype=dtype)
+    k_mag, k_sign = jax.random.split(key)
+    u = jax.random.gamma(k_mag, 1.0 / (2 * z), shape, dtype=jnp.float32) * 2.0
+    mag = u ** (1.0 / (2 * z))
+    sign = jax.random.rademacher(k_sign, shape, dtype=jnp.int8)
+    return (mag * sign).astype(dtype)
+
+
+def pdf_z(t, z: int):
+    """p_z(t), for tests/benchmarks."""
+    t = jnp.asarray(t, jnp.float32)
+    if z <= Z_INF:
+        return jnp.where(jnp.abs(t) <= 1.0, 0.5, 0.0)
+    return jnp.exp(-(t ** (2 * z)) / 2.0) / (2.0 * eta_z(z))
+
+
+@partial(jax.jit, static_argnames=("z",))
+def expected_sign(x, sigma, z: int, *, n_mc: int = 0, key=None):
+    """eta_z * sigma * E[Sign(x + sigma*xi_z)], the debiased estimator mean.
+
+    Closed form: eta_z*sigma*E[Sign(x+sigma xi)] = sigma * Psi_z(x/sigma)
+    where Psi_z(x) = int_0^x exp(-t^{2z}/2) dt (paper Lemma 3 notation).
+    Computed by numerical quadrature (finite z) or exactly (z=inf).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    r = x / sigma
+    if z <= Z_INF:
+        return sigma * jnp.clip(r, -1.0, 1.0)
+    # Gauss-Legendre style quadrature of Psi_z on [0, r] via substitution
+    # t = r*u, u in [0,1]:   Psi_z(r) = r * int_0^1 exp(-(r*u)^{2z}/2) du.
+    n = 256
+    u = (jnp.arange(n, dtype=jnp.float32) + 0.5) / n
+    integ = jnp.mean(jnp.exp(-((r[..., None] * u) ** (2 * z)) / 2.0), axis=-1)
+    return sigma * r * integ

@@ -1,0 +1,49 @@
+"""Client participation: sampling, straggler mitigation, failure injection.
+
+All participation decisions compile into a float mask (groups, n_clients)
+consumed by the jitted round step — no recompilation when the live set
+changes, which is the elasticity contract: a node failure is just a zero in
+the mask, and the aggregator renormalizes by the live count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ParticipationSampler:
+    """Uniform partial participation (paper §4.3: e.g. 100 of 3579 clients).
+
+    ``over_provision`` implements deadline-based straggler mitigation: sample
+    m = ceil(k * over_provision) clients, then keep only the k fastest
+    (simulated by dropping the slowest m - k uniformly at random — on a real
+    cluster the launcher fills the mask as acks arrive until the deadline).
+    ``failure_rate`` injects node failures on top (fault-tolerance tests).
+    """
+    total_clients: int
+    per_round: int
+    over_provision: float = 1.0
+    failure_rate: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.RandomState(self.seed)
+
+    def mask(self, layout: tuple) -> np.ndarray:
+        """layout = (groups, n_clients) slots for this round."""
+        groups, n = layout
+        slots = groups * n
+        m = min(slots, int(np.ceil(self.per_round * self.over_provision)))
+        chosen = self._rng.choice(slots, size=m, replace=False)
+        if m > self.per_round:  # straggler cut: keep the first k acks
+            chosen = self._rng.permutation(chosen)[: self.per_round]
+        mask = np.zeros(slots, np.float32)
+        mask[chosen] = 1.0
+        if self.failure_rate > 0:
+            fail = self._rng.rand(slots) < self.failure_rate
+            mask[fail] = 0.0
+        if mask.sum() == 0:  # never lose a whole round
+            mask[self._rng.randint(slots)] = 1.0
+        return mask.reshape(groups, n)

@@ -1,0 +1,1 @@
+from repro.kernels.efsign.ops import ef_sign_update  # noqa: F401

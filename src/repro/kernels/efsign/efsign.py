@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused EF-SignSGD compress + residual update.
+
+One pass over HBM computes BOTH outputs of the error-feedback step
+(q = scale*sign(g+e) and the new residual e' = g+e-q), instead of the three
+separate elementwise passes the naive jnp formulation costs. Same VMEM
+tiling discipline as kernels/zsign: (ROWS_BLK, 1024) fp32 tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+COLS = 1024
+ROWS_BLK = 8
+
+
+def _ef_kernel(g_ref, e_ref, s_ref, q_ref, eout_ref):
+    p = g_ref[...] + e_ref[...]
+    q = s_ref[0, 0] * jnp.sign(p)
+    q_ref[...] = q
+    eout_ref[...] = p - q
+
+
+def ef_update_pallas(g2d, e2d, scale, *, interpret: bool):
+    rows = g2d.shape[0]
+    grid = (rows // ROWS_BLK,)
+    return pl.pallas_call(
+        _ef_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, COLS), jnp.float32),
+            jax.ShapeDtypeStruct((rows, COLS), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g2d, e2d, scale.reshape(1, 1).astype(jnp.float32))

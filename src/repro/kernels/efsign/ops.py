@@ -1,0 +1,35 @@
+"""jit'd wrapper for the fused EF-SignSGD update kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.efsign import efsign as K
+
+TILE = K.ROWS_BLK * K.COLS
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ef_sign_update(g: jax.Array, e: jax.Array, scale,
+                   *, interpret: bool | None = None):
+    """Fused EF step on arbitrary-shaped g/e. Returns (q, e_new)."""
+    interpret = _interpret() if interpret is None else interpret
+    shape = g.shape
+    flat_g = g.astype(jnp.float32).reshape(-1)
+    flat_e = e.astype(jnp.float32).reshape(-1)
+    pad = (-flat_g.size) % TILE
+    if pad:
+        flat_g = jnp.pad(flat_g, (0, pad))
+        flat_e = jnp.pad(flat_e, (0, pad))
+    q, e_new = K.ef_update_pallas(flat_g.reshape(-1, K.COLS),
+                                  flat_e.reshape(-1, K.COLS),
+                                  jnp.asarray(scale), interpret=interpret)
+    n = g.size
+    return (q.reshape(-1)[:n].reshape(shape),
+            e_new.reshape(-1)[:n].reshape(shape))

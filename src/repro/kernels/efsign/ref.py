@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused EF-SignSGD update."""
+import jax.numpy as jnp
+
+
+def ef_sign_update_ref(g, e, scale):
+    """p = g + e; q = scale * sign(p); e' = p - q. Returns (q, e')."""
+    p = g + e
+    q = scale * jnp.sign(p)
+    return q, p - q

@@ -1,0 +1,1 @@
+from repro.kernels.zsign.ops import zsign_compress, zsign_decompress_sum  # noqa: F401

@@ -1,0 +1,55 @@
+"""jit'd public wrappers around the z-sign Pallas kernels.
+
+Handle arbitrary-shaped inputs (flatten + pad to the 8192-element tile), and
+select interpret mode automatically off-TPU so the same code validates on CPU
+and runs the real kernel on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.zsign import zsign as K
+
+TILE = K.ROWS_BLK * K.COLS   # 8192
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_flat(x: jax.Array):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, K.COLS), pad
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def zsign_compress(x: jax.Array, noise: jax.Array, sigma,
+                   *, interpret: bool | None = None) -> jax.Array:
+    """Fused noisy-sign + bitpack.  x, noise: same shape float32.
+    Returns uint8 of ceil(x.size/8) bytes (padded tail packs sign(+pad zeros)).
+    """
+    interpret = _interpret() if interpret is None else interpret
+    x2d, _ = _pad_flat(x.astype(jnp.float32))
+    n2d, _ = _pad_flat(noise.astype(jnp.float32))
+    packed = K.compress_pallas(x2d, n2d, jnp.asarray(sigma), interpret=interpret)
+    return packed.reshape(-1)
+
+
+@partial(jax.jit, static_argnames=("n_coords", "interpret"))
+def zsign_decompress_sum(packed: jax.Array, n_coords: int,
+                         *, interpret: bool | None = None) -> jax.Array:
+    """packed: (n_clients, n_bytes) uint8 -> (n_coords,) f32 sum of signs."""
+    interpret = _interpret() if interpret is None else interpret
+    n, nbytes = packed.shape
+    pad = (-nbytes) % (K.ROWS_BLK * K.LANE)
+    if pad:
+        packed = jnp.pad(packed, ((0, 0), (0, pad)))
+    p3 = packed.reshape(n, -1, K.LANE)
+    s = K.unpack_sum_pallas(p3, interpret=interpret).reshape(-1)
+    return s[:n_coords]

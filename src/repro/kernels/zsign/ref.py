@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the z-sign compression kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.noise import sample_z_noise
+
+
+def zsign_compress_ref(x: jax.Array, noise: jax.Array, sigma: float) -> jax.Array:
+    """Noisy sign + bitpack, reference.
+
+    x, noise: flat float32, length % 8 == 0 -> uint8 of length // 8.
+    bit j of byte i  ==  Sign(x[8i+j] + sigma*noise[8i+j]) > 0.
+    """
+    y = x + sigma * noise
+    bits = (y >= 0).astype(jnp.uint8).reshape(-1, 8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+def zsign_decompress_sum_ref(packed: jax.Array) -> jax.Array:
+    """(n_clients, L/8) uint8 -> (L,) float32 sum of {-1,+1} across clients."""
+    n = packed.shape[0]
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    bits = (packed[..., None] & weights) > 0                  # (n, L/8, 8)
+    pm = jnp.where(bits, 1.0, -1.0).reshape(n, -1)
+    return jnp.sum(pm, axis=0)

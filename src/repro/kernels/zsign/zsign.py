@@ -1,0 +1,80 @@
+"""Pallas TPU kernels for z-SignFedAvg's compression hot path.
+
+Two kernels:
+
+  _compress_kernel:  y = x + sigma*noise; pack Sign(y) bits -> uint8
+                     (fused elementwise + 8:1 bitpack; 1 byte out per 8 in)
+  _unpack_sum_kernel: (n_clients, ...) packed uint8 -> sum of {-1,+1} fp32
+                     (the server-side aggregation after the 1-bit all-gather)
+
+TPU adaptation notes (DESIGN.md §2): the compressor is bandwidth-bound
+elementwise work, so the kernels stream HBM->VMEM in (ROWS_BLK, 1024) tiles
+(1024 = 8 lanes-groups x 128 lanes, MXU-free, VPU-only) and write uint8 tiles
+(ROWS_BLK, 128). Bit order matches the flat little-endian order of the
+pure-jnp oracle in ref.py (element 8i+j -> bit j of byte i). On real TPU the
+noise would be generated in-kernel via pltpu.prng_random_bits; here noise is
+a kernel input so interpret-mode (CPU) validation is exact vs the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+PACK = 8
+COLS = LANE * PACK          # 1024 elements per row
+ROWS_BLK = 8                # 8192 elements per block
+
+
+def _compress_kernel(x_ref, n_ref, sig_ref, o_ref):
+    x = x_ref[...]                                   # (R, 1024) f32
+    y = x + sig_ref[0, 0] * n_ref[...]
+    r = x.shape[0]
+    bits = (y >= 0.0).reshape(r, LANE, PACK).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(PACK, dtype=jnp.uint8))
+    o_ref[...] = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint8)
+
+
+def compress_pallas(x2d: jax.Array, noise2d: jax.Array, sigma: jax.Array,
+                    *, interpret: bool) -> jax.Array:
+    """x2d/noise2d: (rows, 1024) f32, rows % ROWS_BLK == 0 -> (rows, 128) u8."""
+    rows = x2d.shape[0]
+    grid = (rows // ROWS_BLK,)
+    return pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_BLK, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.uint8),
+        interpret=interpret,
+    )(x2d, noise2d, sigma.reshape(1, 1).astype(jnp.float32))
+
+
+def _unpack_sum_kernel(p_ref, o_ref):
+    p = p_ref[...]                                   # (n, R, 128) u8
+    weights = (jnp.uint8(1) << jnp.arange(PACK, dtype=jnp.uint8))
+    bits = (p[..., None] & weights) > 0              # (n, R, 128, 8)
+    pm = jnp.where(bits, jnp.float32(1), jnp.float32(-1))
+    s = jnp.sum(pm, axis=0)                          # (R, 128, 8)
+    o_ref[...] = s.reshape(s.shape[0], COLS)
+
+
+def unpack_sum_pallas(packed: jax.Array, *, interpret: bool) -> jax.Array:
+    """packed: (n_clients, rows, 128) u8 -> (rows, 1024) f32 sum of signs."""
+    n, rows, _ = packed.shape
+    grid = (rows // ROWS_BLK,)
+    return pl.pallas_call(
+        _unpack_sum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, ROWS_BLK, LANE), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, COLS), jnp.float32),
+        interpret=interpret,
+    )(packed)

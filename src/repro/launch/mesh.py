@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state.  Single pod: 16 x 16 = 256 chips, axes (data, model).  Multi-pod:
+2 x 16 x 16 = 512 chips, axes (pod, data, model) — the ``pod`` axis is the
+cross-DCN dimension where z-SignFedAvg's 1-bit aggregation pays most.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,183 @@
+"""Analytic roofline terms per (arch x shape x plan).
+
+Why analytic on top of the compiled artifact: XLA's ``cost_analysis`` counts
+while-loop bodies exactly once (verified in tests/test_roofline.py), and this
+framework deliberately scans over depth — so raw HLO FLOPs/bytes undercount
+by ~L x. Collective bytes are recovered loop-aware from the HLO itself
+(launch/dryrun.collective_bytes); FLOPs and HBM bytes are computed here from
+exact parameter counts (jax.eval_shape of the real init — not hand-listed)
+plus the standard transformer accounting, and cross-checked against the raw
+HLO numbers in EXPERIMENTS.md.
+
+Conventions:
+  fwd matmul FLOPs      = 2 * N_active_matmul * tokens
+  bwd                   = 2x fwd;  full remat adds ~1x fwd  -> 8 N D total
+  attention (causal)    = 2 * S^2 * H * hd * B per layer fwd (qk + av, halved)
+  MODEL_FLOPS (useful)  = 6 * N_active * D   (the spec's headline number)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DEVICES = {False: 256, True: 512}
+
+
+def param_counts(arch) -> Dict[str, int]:
+    """Exact counts from the real init's shape tree."""
+    from repro.models.api import build_model
+    bundle = build_model(arch.model)
+    shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = expert = embed = 0
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "moe" in keys and keys[-1] in ("w1", "w2", "w3"):
+            expert += n
+        if keys[-1] in ("embed", "lm_head"):
+            embed += n
+    m = arch.model
+    active = total - (expert - expert * m.moe_topk / max(1, m.moe_experts))
+    return {"total": int(total), "expert": int(expert), "embed": int(embed),
+            "active": int(active),
+            "matmul_active": int(active - embed +
+                                 (m.d_model * m.vocab))}  # lm head matmul
+
+
+def _attn_flops_fwd(m, tokens_per_seq: int, n_seqs: int, causal=True) -> float:
+    if m.family == "xlstm":
+        # mLSTM quadratic form on 3/4 of layers + sLSTM linear
+        n_q = m.n_layers * 3 // 4
+        f = 4 * tokens_per_seq ** 2 * m.d_model * n_seqs * n_q * 0.5
+        return f
+    n_attn = m.n_layers
+    if m.family == "hybrid":
+        n_attn = m.n_layers // 8
+    if m.family == "encdec":
+        # enc self (bidir) + dec self (causal) on seq/2 each + cross
+        s = tokens_per_seq // 2
+        per = (4 * s * s * m.n_heads * (m.d_model // m.n_heads))
+        return n_seqs * m.n_layers * (per + per * 0.5 + per)
+    S = tokens_per_seq
+    eff = S if m.sliding_window == 0 else min(S, 2 * m.sliding_window)
+    per = 4 * S * eff * m.n_heads * (m.d_model // m.n_heads)
+    return n_seqs * n_attn * per * (0.5 if causal and m.sliding_window == 0 else 1.0)
+
+
+@dataclasses.dataclass
+class Terms:
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops_total: float
+    devices: int
+
+    def seconds(self):
+        return {"compute": self.flops_per_dev / PEAK_FLOPS,
+                "memory": self.hbm_bytes_per_dev / HBM_BW,
+                "collective": self.coll_bytes_per_dev / ICI_BW}
+
+    def dominant(self):
+        s = self.seconds()
+        return max(s, key=s.get)
+
+    def roofline_fraction(self):
+        """useful-compute time / max(term) — the score we hillclimb."""
+        s = self.seconds()
+        t_useful = (self.model_flops_total / self.devices) / PEAK_FLOPS
+        return t_useful / max(s.values())
+
+
+def train_terms(arch, shape, plan, coll_bytes_per_dev: float,
+                multi_pod: bool) -> Terms:
+    m = arch.model
+    pc = param_counts(arch)
+    n_dev = DEVICES[multi_pod]
+    tokens = shape.global_batch * shape.seq_len * plan.local_steps
+    n_seqs = shape.global_batch * plan.local_steps
+
+    mm = 2.0 * pc["matmul_active"] * tokens          # fwd matmul
+    at = _attn_flops_fwd(m, shape.seq_len, n_seqs)
+    fwd = mm + at
+    total_flops = 4.0 * fwd                          # fwd + bwd(2x) + remat(1x)
+    model_flops = 6.0 * pc["active"] * tokens
+
+    # HBM traffic model, per device:
+    #  weights: replica shard read 3x (fwd, remat, bwd) + grad write + server
+    #  update rw; activations: ~12 d_model-sized rw per token per layer-pass.
+    bytesize = 2 if m.dtype == jnp.bfloat16 else 4
+    repl_ways = 16 if not arch.big else 256
+    if multi_pod and arch.big:
+        repl_ways = 256
+    w_dev = pc["total"] * bytesize / repl_ways
+    tok_dev = tokens / n_dev
+    # ~12 d_model-sized reads/writes per token per layer, x3 passes (fwd,
+    # remat, bwd)
+    act = tok_dev * m.d_model * bytesize * 12 * m.n_layers * 3
+    # each client pass streams its replica shard 3x; sequential groups repeat;
+    # +4 for grad write + server param read/modify/write
+    w_traffic = w_dev * (3 * plan.client_groups + 4)
+    hbm = w_traffic + act
+    return Terms(total_flops / n_dev, hbm, coll_bytes_per_dev,
+                 model_flops, n_dev)
+
+
+def prefill_terms(arch, shape, plan, coll_bytes_per_dev: float,
+                  multi_pod: bool) -> Terms:
+    m = arch.model
+    pc = param_counts(arch)
+    n_dev = DEVICES[multi_pod]
+    tokens = shape.global_batch * shape.seq_len
+    mm = 2.0 * (pc["matmul_active"] - m.d_model * m.vocab) * tokens \
+        + 2.0 * m.d_model * m.vocab * shape.global_batch  # last-token head
+    at = _attn_flops_fwd(m, shape.seq_len, shape.global_batch)
+    total = mm + at
+    model_flops = total
+    bytesize = 2 if m.dtype == jnp.bfloat16 else 4
+    w_dev = pc["total"] * bytesize / n_dev
+    act = tokens / n_dev * m.d_model * bytesize * 12
+    return Terms(total / n_dev, w_dev + act, coll_bytes_per_dev,
+                 model_flops, n_dev)
+
+
+def decode_terms(arch, shape, plan, coll_bytes_per_dev: float,
+                 multi_pod: bool) -> Terms:
+    m = arch.model
+    pc = param_counts(arch)
+    n_dev = DEVICES[multi_pod]
+    B = shape.global_batch
+    mm = 2.0 * pc["matmul_active"] * B
+    # attention reads the KV cache: flops 4*S_eff*H*hd per token
+    S_eff = shape.seq_len if m.sliding_window == 0 else min(
+        shape.seq_len, m.sliding_window)
+    n_attn = {"hybrid": m.n_layers // 8}.get(m.family, m.n_layers)
+    if m.family == "xlstm":
+        at, kv_bytes = 0.0, m.n_layers * B * m.d_model ** 2 / m.n_heads * 4
+    else:
+        at = 4.0 * S_eff * m.n_kv_heads * (m.d_model // m.n_heads) * B * n_attn
+        kv_bytes = (2 * S_eff * m.n_kv_heads * (m.d_model // m.n_heads)
+                    * B * n_attn * 2)
+    total = mm + at
+    bytesize = 2 if m.dtype == jnp.bfloat16 else 4
+    w_dev = pc["total"] * bytesize / n_dev if arch.big else \
+        pc["total"] * bytesize / 16
+    hbm = w_dev + kv_bytes / n_dev
+    return Terms(total / n_dev, hbm, coll_bytes_per_dev, total, n_dev)
+
+
+def terms_for(arch, shape, plan, coll_bytes_per_dev, multi_pod) -> Terms:
+    if shape.kind == "train":
+        return train_terms(arch, shape, plan, coll_bytes_per_dev, multi_pod)
+    if shape.kind == "prefill":
+        return prefill_terms(arch, shape, plan, coll_bytes_per_dev, multi_pod)
+    return decode_terms(arch, shape, plan, coll_bytes_per_dev, multi_pod)

@@ -1,0 +1,208 @@
+"""Sharding rules: map every parameter / batch / KV-cache leaf to a
+PartitionSpec, per (architecture x shape x mesh) parallel plan.
+
+Plans (DESIGN.md §4):
+  single-pod, regular arch : clients on `data` (16 parallel), replica TP/FSDP
+                             over `model`, sequence-parallel activations.
+  single-pod, big arch     : sequential client groups (scan), replica FSDP
+                             over (`data`,`model`) = 256-way.
+  multi-pod, regular arch  : clients on (`pod`,`data`) = 32 parallel.
+  multi-pod, big arch      : one client per pod (the cross-DCN z-sign
+                             aggregation), replica over (`data`,`model`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    client_axes: Tuple[str, ...]
+    micro_axes: Tuple[str, ...]   # within-client batch axes
+    seq_axes: Tuple[str, ...]
+    replica_axes: Tuple[str, ...]
+    n_clients: int
+    client_groups: int
+    micro: int                    # per-client per-local-step batch
+    local_steps: int
+
+
+def make_plan(arch, shape, mesh) -> ParallelPlan:
+    multi = "pod" in mesh.axis_names
+    E = arch.local_steps if shape.kind == "train" else 1
+    if arch.big:
+        client_axes = ("pod",) if multi else ()
+        micro_axes, seq_axes = ("data",), ("model",)
+        replica_axes = ("data", "model")
+        n_clients = axis_size(mesh, client_axes) if client_axes else 1
+        groups = 1 if multi else arch.seq_client_groups
+    else:
+        client_axes = ("pod", "data") if multi else ("data",)
+        micro_axes, seq_axes = (), ("model",)
+        replica_axes = ("model",)
+        n_clients = axis_size(mesh, client_axes)
+        groups = 1
+    denom = max(1, groups * n_clients * E)
+    micro = max(1, shape.global_batch // denom)
+    return ParallelPlan(client_axes, micro_axes, seq_axes, replica_axes,
+                        n_clients, groups, micro, E)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_COL_KEYS = ("wq", "wk", "wv", "w1", "w3", "wqkv", "wx", "in_proj", "wif",
+             "dt_proj")
+_ROW_KEYS = ("wo", "w2", "out_proj", "x_proj")
+
+
+def _divides(n: int, mesh, axes) -> bool:
+    return n % axis_size(mesh, axes) == 0
+
+
+def _param_spec(path_keys, shape, mesh, replica_axes, moe_experts: int):
+    name = path_keys[-1]
+    ndim = len(shape)
+    spec = [None] * ndim
+
+    def set_dim(d, axes):
+        spec[d] = axes[0] if len(axes) == 1 else tuple(axes)
+
+    if name == "router" or ndim == 1:
+        return P()
+    if name == "embed":
+        for axes in (replica_axes, ("model",), ("data",)):
+            if set(axes) <= set(replica_axes) and _divides(shape[0], mesh, axes):
+                set_dim(0, axes)
+                break
+        return P(*spec)
+    if name == "lm_head":
+        for axes in (replica_axes, ("model",), ("data",)):
+            if set(axes) <= set(replica_axes) and _divides(shape[-1], mesh, axes):
+                set_dim(ndim - 1, axes)
+                break
+        return P(*spec)
+    # MoE expert tensors: (..., E, D, F) — expert dim over `model`,
+    # remaining replica axes over the ff dim.
+    if moe_experts > 0 and ndim >= 3 and shape[-3] == moe_experts and name in (
+            "w1", "w2", "w3"):
+        rest = [a for a in replica_axes if a != "model"]
+        if _divides(moe_experts, mesh, ("model",)):
+            spec[ndim - 3] = "model"
+            if rest and _divides(shape[-1], mesh, tuple(rest)):
+                # storage stays (E:'model' x F:'data') = 256-way; the ep
+                # einsum path JIT-gathers the F shards per layer in bf16
+                # (models/layers.py) — storing E-only 16-way costs 16x HBM
+                # (measured: jamba temp 172 -> 607 GB).
+                set_dim(ndim - 1, rest)
+        elif _divides(shape[-1], mesh, replica_axes):
+            set_dim(ndim - 1, replica_axes)
+        return P(*spec)
+    if ndim >= 2 and name in _COL_KEYS and _divides(shape[-1], mesh, replica_axes):
+        set_dim(ndim - 1, replica_axes)
+        return P(*spec)
+    if ndim >= 2 and name in _ROW_KEYS and _divides(shape[-2], mesh, replica_axes):
+        set_dim(ndim - 2, replica_axes)
+        return P(*spec)
+    # fallback: biggest trailing dim that divides
+    for d in (ndim - 1, ndim - 2):
+        if d >= 0 and shape[d] >= 1024 and _divides(shape[d], mesh, replica_axes):
+            set_dim(d, replica_axes)
+            return P(*spec)
+    return P()
+
+
+def param_specs(param_shapes, mesh, plan: ParallelPlan, moe_experts: int = 0):
+    """param_shapes: pytree of ShapeDtypeStruct (jax.eval_shape of init)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        out.append(_param_spec(keys, leaf.shape, mesh, plan.replica_axes,
+                               moe_experts))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# batch / state / cache specs
+# ---------------------------------------------------------------------------
+
+def _axes_entry(axes):
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def batch_specs(batch_shapes, plan: ParallelPlan):
+    """Round-batch leaves have layout (groups, n_clients, E, micro, S, ...)."""
+    def spec(leaf):
+        ndim = len(leaf.shape)
+        s = [None] * ndim
+        if ndim >= 2:
+            s[1] = _axes_entry(plan.client_axes)
+        if ndim >= 4:
+            s[3] = _axes_entry(plan.micro_axes)
+        if ndim >= 5:
+            s[4] = _axes_entry(plan.seq_axes)
+        return P(*s)
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def cache_specs(cache_shapes, plan: ParallelPlan, *, batch: int,
+                seq_lens: Tuple[int, ...]):
+    """Decode KV/state cache: seq dims over seq(+micro when batch==1) axes,
+    batch dims over client+micro axes, large feature dims over `model`."""
+    big_seq_axes = plan.seq_axes if batch > 1 else tuple(
+        list(plan.client_axes) + list(plan.micro_axes) + list(plan.seq_axes))
+    batch_axes = tuple(list(plan.client_axes) + list(plan.micro_axes))
+
+    def spec(leaf):
+        ndim = len(leaf.shape)
+        s = [None] * ndim
+        got_seq = False
+        for d, size in enumerate(leaf.shape):
+            if size in seq_lens and not got_seq:
+                s[d] = _axes_entry(big_seq_axes)
+                got_seq = True
+            elif size == batch and batch > 1 and s[d] is None and d < ndim - 1:
+                if batch % axis_size_tuple(batch_axes) == 0:
+                    s[d] = _axes_entry(batch_axes)
+        if not got_seq:
+            # recurrent state: shard the largest model-divisible feature dim
+            for d in range(ndim - 1, -1, -1):
+                if s[d] is None and leaf.shape[d] >= 1024 and \
+                        leaf.shape[d] % 16 == 0:
+                    s[d] = "model"
+                    break
+        return P(*s)
+
+    return jax.tree.map(spec, cache_shapes)
+
+
+_MESH_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def axis_size_tuple(axes) -> int:
+    n = 1
+    for a in axes:
+        n *= _MESH_SIZES[a]
+    return n
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

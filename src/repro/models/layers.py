@@ -1,0 +1,442 @@
+"""Shared layers: RMSNorm, RoPE, GQA attention (full / sliding-window,
+train + KV-cache decode), SwiGLU MLP, sort-free capacity MoE.
+
+All layer parameter trees are built *stacked over depth* (leading dim L) so
+model forwards are a single ``lax.scan`` over layers — compile time and HLO
+size independent of depth (essential for the 40-cell dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.launch import hints
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / (shape[-2] ** 0.5 if len(shape) >= 2 else 1.0)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def rope_freqs(d_head: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool = False
+    sliding_window: int = 0   # 0 => full causal
+    rope_theta: float = 1e4
+    q_chunk: int = 512        # query-chunked softmax (VMEM-friendly)
+    causal: bool = True       # False => bidirectional (encoders)
+
+
+def attn_init(key, cfg: AttnCfg, n_layers: int, dtype):
+    ks = jax.random.split(key, 4)
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": _init(ks[0], (n_layers, D, H * hd), dtype=dtype),
+        "wk": _init(ks[1], (n_layers, D, K * hd), dtype=dtype),
+        "wv": _init(ks[2], (n_layers, D, K * hd), dtype=dtype),
+        "wo": _init(ks[3], (n_layers, H * hd, D), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, H * hd), dtype)
+        p["bk"] = jnp.zeros((n_layers, K * hd), dtype)
+        p["bv"] = jnp.zeros((n_layers, K * hd), dtype)
+    return p
+
+
+def _qkv(x, lp, cfg: AttnCfg, positions):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if S > 1:
+        # sequence-parallel attention: queries stay seq-sharded, the (small,
+        # GQA) keys/values are gathered along seq — scores + AV then local.
+        # The optimization barrier keeps the gather on the bf16 value (XLA
+        # otherwise fuses the fp32 upcast for the scores matmul *before* the
+        # all-gather: 2x wire bytes, measured).
+        q = hints.seq_shard(q, 1)
+        k, v = jax.lax.optimization_barrier(
+            (hints.gather_seq(k), hints.gather_seq(v)))
+        # name the gathered K/V so the layer remat policy can SAVE them:
+        # re-gathering on the remat pass costs a third of the attention
+        # collective traffic for 134 MB/layer of residency (granite-moe).
+        k = jax.ad_checkpoint.checkpoint_name(k, "kv_gathered")
+        v = jax.ad_checkpoint.checkpoint_name(v, "kv_gathered")
+    return q, k, v
+
+
+def _sdpa_chunk(q_chunk, k, v, q_pos, k_pos, cfg: AttnCfg):
+    """softmax(q k^T) v for one query chunk against full K/V.
+
+    q_chunk: (B, c, H, hd); k/v: (B, S, K, hd). GQA: repeat kv groups.
+    """
+    B, c, H, hd = q_chunk.shape
+    S, K = k.shape[1], k.shape[2]
+    rep = H // K
+    # grouped-GQA einsum instead of jnp.repeat: keeps the K(=kv) head dim
+    # explicit so backward reduces dK/dV at kv-head width (7x smaller
+    # all-reduce under sequence sharding; EXPERIMENTS.md §Perf iteration 4).
+    q5 = q_chunk.reshape(B, c, K, rep, hd)
+    scores = jnp.einsum("bcgrd,bsgd->bgrcs", q5, k,
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    if cfg.causal:
+        mask = q_pos[:, None] >= k_pos[None, :]                   # (c, S)
+        if cfg.sliding_window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < cfg.sliding_window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_chunk.dtype)
+    out = jnp.einsum("bgrcs,bsgd->bcgrd", probs, v)
+    return out.reshape(B, c, H, hd)
+
+
+def _flash_kv_attention(q, k, v, positions, cfg: AttnCfg, kv_chunk: int):
+    """Flash-style attention chunked over the KEY/VALUE axis with online
+    softmax.  Why KV-chunked (not Q-chunked): under sequence sharding the
+    Q/seq dim is distributed — reshaping it into chunks forces GSPMD to
+    all-gather full activations per layer (measured, EXPERIMENTS.md §Perf).
+    K/V are explicitly replicated (gather_seq in _qkv — small under GQA), so
+    chunking THEM is sharding-transparent, and peak scores memory drops from
+    (B,H,S,S) to (B,H,S,kc).
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    rep = H // K
+    kc = min(kv_chunk, S)
+    if S % kc != 0:
+        kc = S
+    nc = S // kc
+    q5 = q.reshape(B, S, K, rep, hd)
+    kt = k.reshape(B, nc, kc, K, hd).swapaxes(0, 1)
+    vt = v.reshape(B, nc, kc, K, hd).swapaxes(0, 1)
+    pos_t = positions.reshape(nc, kc)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_c, v_c, kp = xs
+        s = jnp.einsum("bsgrd,btgd->bgrst", q5, k_c,
+                       preferred_element_type=jnp.float32) / (hd ** 0.5)
+        if cfg.causal:
+            mask = positions[:, None] >= kp[None, :]
+            if cfg.sliding_window > 0:
+                mask &= (positions[:, None] - kp[None, :]) < cfg.sliding_window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        scale = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * scale + jnp.sum(p, axis=-1)
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bgrst,btgd->bgrsd", p.astype(v_c.dtype), v_c,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), ()
+
+    m0 = jnp.full((B, K, rep, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, K, rep, S), jnp.float32)
+    acc0 = jnp.zeros((B, K, rep, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kt, vt, pos_t))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B, K, rep, S, hd) -> (B, S, H, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H * hd).astype(q.dtype)
+
+
+def attention(x, lp, cfg: AttnCfg, positions):
+    """Training attention. x: (B, S, D) -> (B, S, D).
+
+    Single-block SDPA for small S (tests / reduced configs); flash-style
+    KV-chunked online softmax for long sequences.
+    """
+    B, S, D = x.shape
+    q, k, v = _qkv(x, lp, cfg, positions)
+    if S <= cfg.q_chunk:
+        y = _sdpa_chunk(q, k, v, positions, positions, cfg)
+        y = y.reshape(B, S, cfg.n_heads * cfg.d_head)
+    else:
+        y = _flash_kv_attention(q, k, v, positions, cfg, cfg.q_chunk)
+    return y @ lp["wo"]
+
+
+def attention_decode(x, lp, cfg: AttnCfg, cache_k, cache_v, position):
+    """One-token decode with a pre-filled KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_cache, K, hd); position: scalar int32 index
+    where the new token's K/V is written.  Returns (y, new_k, new_v).
+    """
+    B = x.shape[0]
+    pos_arr = jnp.full((B, 1), position, jnp.int32)
+    q, k_new, v_new = _qkv(x, lp, cfg, pos_arr)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), position, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), position, axis=1)
+    S = cache_k.shape[1]
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    q_pos = jnp.full((1,), position, jnp.int32)
+    valid = k_pos <= position
+    if cfg.sliding_window > 0:
+        valid &= (position - k_pos) < cfg.sliding_window
+    K, rep = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q5 = q.reshape(B, 1, K, rep, cfg.d_head)
+    scores = jnp.einsum("bcgrd,bsgd->bgrcs", q5, cache_k,
+                        preferred_element_type=jnp.float32) / (cfg.d_head ** 0.5)
+    scores = jnp.where(valid[None, None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    y = jnp.einsum("bgrcs,bsgd->bcgrd", probs, cache_v).reshape(B, 1, -1)
+    return y @ lp["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, n_layers, dtype):
+    ks = jax.random.split(key, 3)
+    return {"w1": _init(ks[0], (n_layers, d_model, d_ff), dtype=dtype),
+            "w3": _init(ks[1], (n_layers, d_model, d_ff), dtype=dtype),
+            "w2": _init(ks[2], (n_layers, d_ff, d_model), dtype=dtype)}
+
+
+def swiglu(x, lp):
+    return (jax.nn.silu(x @ lp["w1"]) * (x @ lp["w3"])) @ lp["w2"]
+
+
+def chunked_ce(x, head, targets, mask=None, chunk: int = 512):
+    """Sequence-chunked cross entropy: never materializes (B, S, V) logits.
+
+    x: (B, S, D) final hidden (caller drops the last position);
+    head: (D, V); targets: (B, S) int32; mask: (B, S) float or None.
+    The per-chunk body is rematerialized, so backward also stays at
+    (B, chunk, V) peak.
+    """
+    B, S, D = x.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (S + pad) // c
+    xc = x.reshape(B, nc, c, D).swapaxes(0, 1)
+    tc = targets.reshape(B, nc, c).swapaxes(0, 1)
+    mc = mask.reshape(B, nc, c).swapaxes(0, 1)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, xs):
+        xb, tb, mb = xs
+        logits = (xb @ head).astype(jnp.float32)
+        # one-hot contraction instead of take_along_axis: the reduction over
+        # the (vocab-sharded) axis stays local + a tiny all-reduce, instead of
+        # an all-gather of the full (B, chunk, V) logits.
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        oh = jax.nn.one_hot(tb, logits.shape[-1], dtype=logits.dtype)
+        tgt = jnp.einsum("bcv,bcv->bc", logits, oh)
+        nll = lse - tgt
+        return (carry[0] + jnp.sum(nll * mb), carry[1] + jnp.sum(mb)), ()
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xc, tc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def moe_init(key, d_model, d_ff, n_experts, n_layers, dtype):
+    ks = jax.random.split(key, 4)
+    return {"router": _init(ks[0], (n_layers, d_model, n_experts), dtype=jnp.float32),
+            "w1": _init(ks[1], (n_layers, n_experts, d_model, d_ff), dtype=dtype),
+            "w3": _init(ks[2], (n_layers, n_experts, d_model, d_ff), dtype=dtype),
+            "w2": _init(ks[3], (n_layers, n_experts, d_ff, d_model), dtype=dtype)}
+
+
+def _topk_iterative(scores, k: int):
+    """top-k via k argmax+mask rounds. jax.lax.top_k over a sharded batch
+    lowers through Shardy's replicate-fallback (measured 6.4 GB/dev of
+    all-gather on granite-moe); k reduces stay fully local."""
+    vals, idxs = [], []
+    s = scores
+    for _ in range(k):
+        i = jnp.argmax(s, axis=-1)
+        v = jnp.max(s, axis=-1)
+        vals.append(v)
+        idxs.append(i)
+        s = s - jax.nn.one_hot(i, scores.shape[-1], dtype=s.dtype) * 1e9
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def moe_apply(x, lp, n_experts: int, top_k: int, capacity_factor: float = 1.25,
+              ep: bool = False):
+    """Capacity-based top-k MoE with SHARD-LOCAL dispatch.
+
+    Distribution design (EXPERIMENTS.md §Perf, granite-moe iterations): a
+    flat (B*S) dispatch mixes the sequence-sharded dim into an unsharded one,
+    so every scatter/gather against the expert buffer lowers to an all-reduce
+    of the full fp32 buffer (measured 103 GB/dev per round on granite-moe).
+    Instead the sequence dim is split explicitly into
+    (n_shards, S_local) — a sharding-preserving reshape — and dispatch /
+    combine are vmapped per shard: all index ops stay device-local.
+
+    * ep=False (replicated experts — right call for fine-grained MoE like
+      granite's 32 x d_ff=512): expert weights are FSDP-gathered per layer
+      (~100 MB) and compute is fully local. Capacity is per shard.
+    * ep=True (big experts — llama4/jamba): the dispatch buffer is resharded
+      shard-dim->expert-dim (an all-to-all), expert matmuls run
+      expert-parallel over `model`, and the result is resharded back.
+    """
+    from repro.launch import hints as H
+    B, S, D = x.shape
+    E, k = n_experts, top_k
+    ns = H.seq_shard_count()
+    if S % ns != 0 or (S // ns) * k < E:
+        ns = 1
+    S_loc = S // ns
+    C = max(1, int(S_loc * k / E * capacity_factor))
+
+    xg = hints.shard_dim(x.reshape(B, ns, S_loc, D), 1)      # dim1: seq-sharded
+    logits = xg.astype(jnp.float32) @ lp["router"]           # (B, ns, S_loc, E)
+    gate_all = hints.shard_dim(jax.nn.softmax(logits, axis=-1), 1)
+    gates, idx = _topk_iterative(gate_all, k)                # (B, ns, S_loc, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(B, ns, S_loc * k)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (B, ns, S*k, E)
+    pos = jnp.cumsum(oh, axis=2) - oh
+    pos = jnp.sum(pos * oh, axis=-1)                         # (B, ns, S*k)
+    keep = pos < C
+    e_idx = jnp.where(keep, flat_e, E - 1)
+    p_idx = jnp.where(keep, pos, C - 1)
+    # The slot->cell map is INJECTIVE on kept slots, so scatter and gather
+    # are exact transposes of each other. XLA cannot know this: the autodiff
+    # transpose of the batched gather lowers to a replicate-then-scatter
+    # (measured 2x51 GB/dev in backward+remat). custom_vjp encodes the
+    # injectivity — dispatch^T = collect, collect^T = dispatch — so both
+    # directions are shard-local pinned gathers/scatters.
+
+    def _scatter(vals, el, pl):
+        f = lambda v, e, p: jnp.zeros((E, C, D), v.dtype).at[e, p].add(v)
+        return hints.shard_dim(jax.vmap(jax.vmap(f))(vals, el, pl), 1)
+
+    def _collect(buf, el, pl):
+        f = lambda b1, e, p: b1[e, p]
+        return hints.shard_dim(jax.vmap(jax.vmap(f))(buf, el, pl), 1)
+
+    @jax.custom_vjp
+    def moe_dispatch(vals, el, pl):
+        return _scatter(vals, el, pl)
+
+    moe_dispatch.defvjp(
+        lambda vals, el, pl: (_scatter(vals, el, pl), (el, pl)),
+        lambda res, d_buf: (_collect(d_buf, *res), None, None))
+
+    @jax.custom_vjp
+    def moe_collect(buf, el, pl):
+        return _collect(buf, el, pl)
+
+    moe_collect.defvjp(
+        lambda buf, el, pl: (_collect(buf, el, pl), (el, pl)),
+        lambda res, d_out: (_scatter(d_out, *res), None, None))
+
+    vals = jnp.broadcast_to(xg[:, :, :, None, :],
+                            (B, ns, S_loc, k, D)).reshape(B, ns, S_loc * k, D)
+    vals = jnp.where(keep[..., None], vals, 0).astype(x.dtype)
+
+    if ep:
+        # ep mode (big experts, batch+seq both sharded): Shardy's batched
+        # scatter/gather replicate-fallback costs TB/dev here (measured on
+        # jamba). Dispatch/combine as ONE-HOT EINSUMS instead — partitions
+        # perfectly, and at d_ff >= 8k the extra (E*C)/(3*d_ff) ~ 1% FLOPs
+        # is noise.
+        cell = jnp.where(keep, e_idx * C + p_idx, E * C)
+        oh = jax.nn.one_hot(cell, E * C, dtype=x.dtype)  # (B,ns,S*k,EC)
+        buf = jnp.einsum("bnsk,bnsd->bnkd", oh, vals)
+        # Two-step reshard (measured best of three variants on jamba:
+        # 3.08 TB vs 3.51 TB direct-to-expert vs 7.59 TB ns-only): pin the
+        # einsum output seq-sharded first, THEN all-to-all to
+        # expert-parallel — GSPMD lowers the staged transition efficiently.
+        buf = hints.shard_dim(buf.reshape(B, ns, E, C, D), 1)
+        buf = hints.shard_dim(buf, 2, ("model",))
+    else:
+        buf = moe_dispatch(vals, e_idx, p_idx)   # (B,ns,E,C,D), ns-sharded
+
+    if ep:
+        # JIT-gather the non-expert ('data') shards of the expert weights in
+        # bf16, keeping E expert-parallel: avoids the f32 full-weight gather
+        # GSPMD falls back to when the stored 'data' sharding on d_ff
+        # conflicts with the batch dim of buf (measured 515 GB/dev, llama4).
+        def _egather(w):
+            mesh = hints._CTX["mesh"]
+            if mesh is None:
+                return w
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            return jax.lax.optimization_barrier(
+                jax.lax.with_sharding_constraint(
+                    w, NamedSharding(mesh, P("model", None, None))))
+
+        w1, w2, w3 = _egather(lp["w1"]), _egather(lp["w2"]), _egather(lp["w3"])
+    else:
+        from repro.launch.hints import fsdp_params
+        g = fsdp_params({"g1": lp["w1"], "g2": lp["w2"], "g3": lp["w3"]},
+                        skip=())
+        w1, w2, w3 = g["g1"], g["g2"], g["g3"]
+
+    h = jnp.einsum("bnecd,edf->bnecf", buf, w1)
+    g3 = jnp.einsum("bnecd,edf->bnecf", buf, w3)
+    y = jnp.einsum("bnecf,efd->bnecd", jax.nn.silu(h) * g3, w2)
+
+    if ep:
+        y = H.shard_dim(y, 1)                                # all-to-all out
+        out_slots = jnp.einsum("bnsk,bnkd->bnsd", oh,
+                               y.reshape(B, ns, E * C, D).astype(x.dtype))
+        out_slots = hints.shard_dim(out_slots, 1)
+    else:
+        out_slots = moe_collect(y.astype(x.dtype), e_idx, p_idx)
+    gl = gates.reshape(B, ns, S_loc * k)
+    out_slots = jnp.where(keep[..., None], out_slots, 0) \
+        * gl[..., None].astype(x.dtype)
+    out = hints.shard_dim(
+        out_slots.reshape(B, ns, S_loc, k, D).sum(axis=3), 1)
+    frac = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32),
+                    axis=(0, 1, 2))
+    prob = jnp.mean(gate_all, axis=(0, 1, 2))
+    aux = E * jnp.sum(frac * prob)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,78 @@
+"""Properties of the z-distribution noise (paper Definition 1, Lemma 1/2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import noise as Z
+
+
+@pytest.mark.parametrize("z", [1, 2, 4, Z.Z_INF])
+def test_noise_symmetric_zero_mean(z):
+    key = jax.random.PRNGKey(0)
+    x = Z.sample_z_noise(key, (200_000,), z)
+    assert abs(float(jnp.mean(x))) < 0.02
+    # symmetry: mean of odd powers ~ 0
+    assert abs(float(jnp.mean(x ** 3))) < 0.05
+
+
+def test_z1_is_gaussian():
+    x = Z.sample_z_noise(jax.random.PRNGKey(1), (200_000,), 1)
+    assert abs(float(jnp.std(x)) - 1.0) < 0.02
+
+
+def test_zinf_is_uniform():
+    x = Z.sample_z_noise(jax.random.PRNGKey(2), (100_000,), Z.Z_INF)
+    assert float(jnp.min(x)) >= -1.0 and float(jnp.max(x)) <= 1.0
+    assert abs(float(jnp.std(x)) - (1.0 / np.sqrt(3.0))) < 0.01
+
+
+def test_eta_z_limits():
+    # eta_1 = sqrt(2) Gamma(3/2) = sqrt(pi/2); eta_inf -> 1
+    assert abs(Z.eta_z(1) - np.sqrt(np.pi / 2)) < 1e-9
+    assert abs(Z.eta_z(1000) - 1.0) < 1e-2
+    assert Z.eta_z(Z.Z_INF) == 1.0
+
+
+@pytest.mark.parametrize("z", [1, 2, Z.Z_INF])
+def test_asymptotic_unbiasedness(z):
+    """Lemma 1: eta_z * sigma * E[Sign(x + sigma xi)] -> x for large sigma.
+
+    Monte-Carlo estimate of the debiased sign vs the input."""
+    key = jax.random.PRNGKey(3)
+    x = jnp.linspace(-1.0, 1.0, 41)
+    sigma = 20.0
+    n_mc = 40_000
+    xi = Z.sample_z_noise(key, (n_mc, x.size), z)
+    signs = jnp.where(x[None] + sigma * xi >= 0, 1.0, -1.0)
+    est = Z.eta_z(z) * sigma * jnp.mean(signs, axis=0)
+    # MC std of the estimate ~ eta*sigma/sqrt(n) ~ 0.12
+    np.testing.assert_allclose(np.asarray(est), np.asarray(x), atol=0.45)
+
+
+@pytest.mark.parametrize("z", [1, 3])
+def test_bias_bound_lemma1(z):
+    """|eta_z sigma E[Sign(x+sigma xi)] - x| <= |x|^{2z+1} / (2(2z+1) sigma^{2z})
+    via the closed-form expectation."""
+    for sigma in (1.0, 2.0, 5.0):
+        x = jnp.linspace(-0.9 * sigma, 0.9 * sigma, 31)
+        est = Z.expected_sign(x, sigma, z) * Z.eta_z(z) / Z.eta_z(z)
+        # expected_sign returns sigma*Psi_z(x/sigma) which IS the
+        # (eta_z sigma E[Sign])-value; check Lemma 3 bound elementwise
+        bound = jnp.abs(x) ** (2 * z + 1) / (2 * (2 * z + 1) * sigma ** (2 * z))
+        err = jnp.abs(est - x)
+        assert bool(jnp.all(err <= bound + 1e-5))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.floats(min_value=0.1, max_value=50.0, allow_nan=False))
+def test_expected_sign_monotone_and_bounded(z, sigma):
+    """Psi_z is odd, monotone, and |sigma*Psi_z(x/sigma)| <= |x| (Lemma 3)."""
+    x = jnp.linspace(-3 * sigma, 3 * sigma, 25)
+    est = Z.expected_sign(x, sigma, z)
+    assert bool(jnp.all(jnp.abs(est) <= jnp.abs(x) + 1e-3))
+    assert bool(jnp.all(jnp.diff(est) >= -1e-4))
+    np.testing.assert_allclose(np.asarray(est), -np.asarray(est[::-1]),
+                               atol=1e-4)

@@ -1,0 +1,109 @@
+"""Roofline methodology tests.
+
+1. The load-bearing discovery: XLA cost_analysis counts while-loop bodies
+   ONCE (so scanned-layer frameworks under-report by ~L x) — pinned here so
+   a jax upgrade that fixes it flips the test and we notice.
+2. The loop-aware collective accounting recovers trip counts correctly.
+3. The analytic term model agrees with hand-computed numbers.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import roofline as RF
+from repro.launch.dryrun import collective_bytes, collective_bytes_naive, \
+    _parse_computations, _trip_count
+from repro.configs.common import get_arch, SHAPES
+
+
+def _flops(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    cost = c.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return float(cost.get("flops", 0.0))
+
+
+def test_cost_analysis_counts_scan_body_once():
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def f_scan(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), ()
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    def f_unroll(x, w):
+        for _ in range(10):
+            x = jnp.tanh(x @ w)
+        return x
+
+    f1, f2 = _flops(f_scan, x, w), _flops(f_unroll, x, w)
+    # scan body counted once: ratio ~ 10 (allow slack for fusion wrappers)
+    assert f2 / f1 > 5.0, (
+        "cost_analysis now multiplies while trip counts — the analytic "
+        "correction in launch/roofline.py can be retired")
+
+
+def test_trip_count_recovery():
+    def f(x):
+        def body(x, _):
+            return jnp.tanh(x) * 1.5, ()
+        return jax.lax.scan(body, x, None, length=7)[0]
+
+    hlo = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64,), jnp.float32)).compile().as_text()
+    comps = _parse_computations(hlo)
+    trips = [_trip_count(comps.get(c, []))
+             for c in comps if "cond" in c.lower() or True]
+    assert 7 in trips or any(t == 7 for t in trips)
+
+
+def test_loop_aware_collectives_ge_naive():
+    # any HLO: loop-aware total >= flat total
+    hlo = """
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8] parameter(0)
+  ROOT %r = f32[8] add(%p, %p)
+}
+"""
+    assert collective_bytes(hlo)["total"] == 0
+    assert collective_bytes_naive(hlo)["total"] == 0
+
+
+def test_param_counts_exact():
+    arch = get_arch("qwen2_0_5b")
+    pc = RF.param_counts(arch)
+    # qwen2-0.5b is ~0.49B params (public number 494M)
+    assert 0.4e9 < pc["total"] < 0.6e9
+    assert pc["active"] == pc["total"]  # dense: no inactive experts
+
+
+def test_moe_active_counts():
+    arch = get_arch("granite_moe_1b_a400m")
+    pc = RF.param_counts(arch)
+    assert pc["expert"] > 0
+    assert pc["active"] < pc["total"]
+    # top-8 of 32 experts: ~25% of expert params active
+    frac = (pc["active"] - (pc["total"] - pc["expert"])) / pc["expert"]
+    assert abs(frac - 8 / 32) < 1e-6
+
+
+def test_terms_sane_for_train_cell():
+    from repro.launch.sharding import make_plan
+    from repro.launch.mesh import make_production_mesh
+    # plan shapes only — no devices needed beyond defaults
+    arch = get_arch("qwen2_0_5b")
+    shape = SHAPES["train_4k"]
+
+    class _M:  # minimal mesh stub for make_plan
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    plan = make_plan(arch, shape, _M())
+    terms = RF.train_terms(arch, shape, plan, coll_bytes_per_dev=8e9,
+                           multi_pod=False)
+    s = terms.seconds()
+    assert 0.05 < s["compute"] < 0.5          # ~0.1 s / round / device
+    assert terms.model_flops_total > 1e15
+    assert 0 < terms.roofline_fraction() <= 1.0

@@ -1,0 +1,113 @@
+"""Substrate coverage: data pipeline, optimizers, sharding plans, hints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import synthetic
+from repro.optim.optimizers import make_optimizer
+
+
+# -- data -------------------------------------------------------------------
+
+def test_token_stream_deterministic_and_seekable():
+    s = synthetic.TokenStream(vocab=101, seed=3)
+    a = s.round_batch(7, (1, 2, 2, 3), 16)
+    b = s.round_batch(7, (1, 2, 2, 3), 16)
+    c = s.round_batch(8, (1, 2, 2, 3), 16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert a.shape == (1, 2, 2, 3, 16)
+    assert int(a.max()) < 101 and int(a.min()) >= 0
+
+
+def test_label_partition_is_disjoint_cover():
+    _, y = synthetic.gaussian_mixture_task(n_classes=10, n_per_class=20)
+    parts = synthetic.label_partition(y, 10)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(np.unique(all_idx)) == y.shape[0]
+    # each client sees exactly one label
+    for p in parts:
+        assert len(np.unique(np.asarray(y)[p])) == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=2, max_value=16),
+       st.floats(min_value=0.05, max_value=10.0))
+def test_dirichlet_partition_cover(n_clients, alpha):
+    _, y = synthetic.gaussian_mixture_task(n_classes=6, n_per_class=30)
+    parts = synthetic.dirichlet_partition(y, n_clients, alpha=alpha)
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert len(all_idx) == len(np.unique(all_idx)) == y.shape[0]
+
+
+# -- optimizers ---------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw", [("sgd", {}), ("momentum", {"beta": 0.9}),
+                                     ("adam", {})])
+def test_optimizers_descend_quadratic(name, kw):
+    opt = make_optimizer(name, lr=0.1, **kw)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.linalg.norm(params["w"])) < 1e-2
+
+
+# -- sharding plans ------------------------------------------------------------
+
+def test_plans_cover_global_batch():
+    from repro.configs.common import SHAPES, get_arch, list_archs
+    from repro.launch.sharding import make_plan
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    class M2:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    for arch_id in list_archs():
+        arch = get_arch(arch_id)
+        for mesh in (M(), M2()):
+            plan = make_plan(arch, SHAPES["train_4k"], mesh)
+            total = (plan.micro * plan.n_clients * plan.client_groups
+                     * plan.local_steps)
+            assert total == SHAPES["train_4k"].global_batch, (arch_id, plan)
+
+
+def test_param_specs_shard_big_dims():
+    import jax
+    from repro.configs.common import SHAPES, get_arch
+    from repro.launch import sharding as SH
+    from repro.models.api import build_model
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    arch = get_arch("qwen2_0_5b")  # vocab divisible by 16 => embed sharded
+    plan = SH.make_plan(arch, SHAPES["train_4k"], M())
+    shapes = jax.eval_shape(build_model(arch.model).init, jax.random.PRNGKey(0))
+    specs = SH.param_specs(shapes, M(), plan)
+    # embed sharded on vocab; attention mats sharded somewhere
+    assert specs["embed"][0] is not None
+    flat = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda s: hasattr(s, "index"))
+    sharded = sum(1 for s in flat if any(e is not None for e in s))
+    assert sharded >= len(flat) // 2
+
+
+# -- hints off-mesh are no-ops -------------------------------------------------
+
+def test_hints_noop_without_mesh():
+    from repro.launch import hints as H
+    x = jnp.ones((4, 32, 8))
+    assert H.seq_shard(x) is x
+    assert H.gather_seq(x) is x
+    assert H.seq_shard_count() == 1
+    lp = {"w": jnp.ones((8, 8))}
+    assert H.fsdp_params(lp, skip=())["w"] is lp["w"]
