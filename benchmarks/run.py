@@ -232,9 +232,14 @@ def table2_bits(fast=False):
             ("Sto-SignSGD", compression.make_compressor("stosign")),
             ("1-SignFedAvg", compression.make_compressor("zsign", z=1)),
             ("inf-SignFedAvg", compression.make_compressor("zsign", z=0)),
-            ("QSGD_s1", compression.make_compressor("qsgd", s=1))]:
+            ("1-SignFedAvg_pallas",
+             compression.make_compressor("zsign_packed", z=1)),
+            ("QSGD_s1", compression.make_compressor("qsgd", s=1)),
+            ("TopK_1pct", compression.make_compressor("topk", frac=0.01))]:
+        wf = comp.wire_format()
         emit("table2_bits", f"{name}_bits_per_round_per_client",
-             int(d * comp.wire_bits_per_coord))
+             int(d * wf.bits_per_coord))
+        emit("table2_bits", f"{name}_wire", f"{wf.layout}/{wf.dtype}")
 
 
 def kernel_throughput(fast=False):
@@ -251,6 +256,15 @@ def kernel_throughput(fast=False):
     emit("kernel_throughput", "compression_ratio_wire", 32.0)
     emit("kernel_throughput", f"ref_jnp_GBps_{size}",
          round(size * 4 / (us_ref * 1e-6) / 1e9, 2))
+
+    # flat-codec encode path (wire.pack_flat): what every sign-family
+    # compressor runs when the Pallas kernel is not selected.
+    from repro.core import wire
+    pack_fn = jax.jit(lambda a, b: wire.pack_flat(a + 0.5 * b))
+    us_pack = timeit(pack_fn, x, nz, iters=5 if fast else 20)
+    emit("kernel_throughput", f"codec_pack_flat_us_{size}", round(us_pack, 1))
+    emit("kernel_throughput", f"codec_pack_flat_GBps_{size}",
+         round(size * 4 / (us_pack * 1e-6) / 1e9, 2))
 
 
 BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,

@@ -45,5 +45,7 @@ for name, cname, ckw, slr in [
         state, m = step(state, batch, mask)
         bits += float(m.uplink_bits)
     acc = acc_fn(state.params, x, y)
+    wf = comp.wire_format()
     print(f"{name:24s} acc={acc:.3f}  uplink={bits/1e6:8.2f} Mbit "
-          f"({32.0/comp.wire_bits_per_coord:4.0f}x compression)")
+          f"({32.0/wf.bits_per_coord:4.0f}x compression, "
+          f"{wf.layout}/{wf.dtype} wire)")

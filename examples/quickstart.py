@@ -37,5 +37,7 @@ for name, comp, slr in [
     for _ in range(ROUNDS):
         state, m = step(state, batch, mask)
     dist = float(jnp.linalg.norm(state.params["x"] - optimum))
+    wf = comp.wire_format()
     print(f"  {name:30s} dist-to-opt={dist:8.4f}   "
-          f"uplink={float(m.uplink_bits)/1e3:7.1f} kbit/round")
+          f"uplink={float(m.uplink_bits)/1e3:7.1f} kbit/round "
+          f"[{wf.layout}/{wf.dtype}]")

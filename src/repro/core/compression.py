@@ -1,39 +1,54 @@
-"""Gradient compressors.
+"""Gradient compressors over the flat wire-buffer codec (core/wire.py).
 
 The paper's contribution (ZSignCompressor) plus every baseline it compares
-against: vanilla SignSGD, EF-SignSGD, Sto-SignSGD, QSGD/FedPAQ, and identity
-(uncompressed FedAvg). All compressors share one interface so the federated
-round engine (core/fedavg.py) treats them as a plug-in:
+against: vanilla SignSGD, EF-SignSGD, Sto-SignSGD, QSGD/FedPAQ, top-k, DP
+Gaussian, and identity (uncompressed FedAvg). All compressors share one
+flat-buffer interface so the federated round engine (core/fedavg.py) treats
+them as a plug-in:
 
-    init_state(params)            -> per-client compressor state (pytree or None)
-    encode(key, g, state)         -> (enc, new_state)      # runs on the client
-    decode_mean(enc_mean_or_sum)  -> pseudo-gradient estimate  # on the server
-    wire_bits_per_coord           -> float, for the communication accounting
+    init_state(n_coords)              -> per-client residual buffer or None
+    encode(key, flat, state, sigma)   -> (payload, new_state)  # on the client
+    aggregate(payload, mask, n_coords)-> (d_pad,) f32 masked SUM  # server
+    decode_mean(flat_mean, sigma)     -> (d_pad,) f32 estimate    # server
+    wire_format()                     -> WireFormat (dtype, bits/coord, layout)
 
-``g`` is the pseudo-gradient pytree ((x_{t-1} - x^i_{t,E}) / gamma).  Encoded
-leaves are int8 sign tensors (or bitpacked uint8 when ``bitpack=True``), so the
-cross-client collective moves 8x/32x fewer bytes than fp32.
+``flat`` is the pseudo-gradient ((x_{t-1} - x^i_{t,E}) / gamma) flattened
+ONCE by the engine into a single fp32 buffer; ``payload`` is what crosses the
+network: a bitpacked uint8 buffer for every sign-family compressor (zsign,
+zsign_packed, stosign, efsign — 1 bit per coordinate, 32x smaller than fp32),
+a COO (values, indices) pair for top-k, dense fp32 otherwise.
 
-Decoders are linear in the per-client encodings, so the server may aggregate
-either ``mean_i enc_i`` (one int8 collective) or a scan-accumulated sum for
+``aggregate`` consumes payloads stacked on a leading client axis together
+with the (n_clients,) participation mask and returns the masked flat SUM.
+All decoders are linear in the per-client encodings, so the server may
+aggregate one parallel group per collective or scan-accumulate sums across
 sequential client groups — both paths produce identical estimates.
+
+Wire-size accounting: ``wire_bits_per_coord`` (mirrored in ``wire_format()``)
+is the logical uplink cost per model coordinate and is derived from the
+compressor's own hyper-parameters (e.g. 64*frac for top-k, ceil(log2(2s+1))
+for QSGD) — metrics multiply it by the true coordinate count, never by the
+padded buffer length.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+import math
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import noise as znoise
+from repro.core.wire import (WireFormat, pack_flat, pack_signs,
+                             unpack_signs, unpack_sum)
 
-
-def _tree_keys(key: jax.Array, tree):
-    """One PRNG key per leaf."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    return jax.tree_util.tree_unflatten(treedef, list(keys))
+__all__ = [
+    "Compressor", "ZSignCompressor", "StoSignCompressor", "EFSignCompressor",
+    "QSGDCompressor", "TopKCompressor", "DPGaussianCompressor",
+    "PackedZSignCompressor", "make_compressor", "available", "global_norm",
+    "pack_signs", "unpack_signs",
+]
 
 
 def global_norm(tree) -> jax.Array:
@@ -43,285 +58,257 @@ def global_norm(tree) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# bit packing (pure-jnp reference path; the Pallas kernel in kernels/zsign is
-# the fused fast path and is verified against this in tests)
-# ---------------------------------------------------------------------------
-
-def pack_signs(signs_i8: jax.Array) -> jax.Array:
-    """int8 {-1,+1} (flat, len % 8 == 0) -> uint8 bitfield of len/8."""
-    bits = (signs_i8 > 0).astype(jnp.uint8).reshape(-1, 8)
-    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
-    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
-
-
-def unpack_signs(packed: jax.Array) -> jax.Array:
-    """uint8 bitfield -> int8 {-1,+1} of len*8."""
-    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
-    bits = (packed[:, None] & weights) > 0
-    return jnp.where(bits, jnp.int8(1), jnp.int8(-1)).reshape(-1)
-
-
-def _pad_to(x: jax.Array, mult: int) -> jax.Array:
-    r = (-x.shape[0]) % mult
-    return jnp.pad(x, (0, r)) if r else x
-
-
-# ---------------------------------------------------------------------------
 # compressors
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class Compressor:
-    """Base: identity (uncompressed FedAvg)."""
+    """Base: identity (uncompressed FedAvg). Dense fp32 wire format."""
     wire_bits_per_coord: float = 32.0
     name: str = "identity"
 
-    def init_state(self, params) -> Any:
+    def wire_format(self) -> WireFormat:
+        return WireFormat("float32", self.wire_bits_per_coord, "dense")
+
+    def init_state(self, n_coords: int) -> Any:
         return None
 
-    def encode(self, key, g, state, sigma=None) -> Tuple[Any, Any]:
+    def encode(self, key, flat: jax.Array, state, sigma=None) -> Tuple[Any, Any]:
         del key, sigma
-        return g, state
+        return flat, state
 
-    def decode_mean(self, enc_mean, sigma=None):
+    def decode_mean(self, flat_mean: jax.Array, sigma=None) -> jax.Array:
         del sigma
-        return enc_mean
+        return flat_mean
 
-    def aggregate(self, enc, mask):
-        """Masked SUM over the leading client axis of stacked encodings.
-        Default: dense einsum (the int8/fp collective path)."""
-        return jax.tree.map(
-            lambda e: jnp.einsum("n...,n->...", e.astype(jnp.float32), mask),
-            enc)
+    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+        """Masked SUM over the leading client axis of stacked payloads.
+
+        ``n_coords`` is the true (unpadded) coordinate count from the
+        engine's TreeSpec — sparse layouts need it to materialize the dense
+        sum; others may ignore it and return padded buffers.
+        Default: dense einsum (one fp32 collective)."""
+        del n_coords
+        return jnp.einsum("nd,n->d", payload.astype(jnp.float32), mask)
 
 
 @dataclasses.dataclass(frozen=True)
 class ZSignCompressor(Compressor):
     """The paper's stochastic sign operator (Algorithm 1, line 11).
 
-    enc = Sign(g + sigma * xi_z)  with xi_z ~ p_z  (z<=0 means z = +inf).
-    decode scales by eta_z * sigma — the asymptotically-unbiased estimator of
-    Lemma 1.  sigma == 0.0 recovers vanilla SignSGD (biased; diverges on the
-    paper's counterexample — reproduced in tests).
+    enc = Sign(flat + sigma * xi_z)  with xi_z ~ p_z  (z<=0 means z = +inf),
+    transmitted as a bitpacked uint8 buffer (8 coords/byte — the TRUE 1-bit
+    uplink). decode scales by eta_z * sigma — the asymptotically-unbiased
+    estimator of Lemma 1. sigma == 0.0 recovers vanilla SignSGD (biased;
+    diverges on the paper's counterexample — reproduced in tests).
     """
     z: int = 1
     sigma: float = 0.01
     wire_bits_per_coord: float = 1.0
     name: str = "zsign"
 
-    def encode(self, key, g, state, sigma=None):
-        keys = _tree_keys(key, g)
+    def wire_format(self) -> WireFormat:
+        return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked")
+
+    def _noisy(self, key, flat, sigma):
         add_noise = (sigma is not None) or self.sigma > 0.0
         sig = self.sigma if sigma is None else sigma
+        if add_noise:
+            flat = flat + sig * znoise.sample_z_noise(key, flat.shape, self.z)
+        return flat
 
-        def enc_leaf(k, x):
-            x = x.astype(jnp.float32)
-            if add_noise:
-                x = x + sig * znoise.sample_z_noise(k, x.shape, self.z)
-            return jnp.where(x >= 0, jnp.int8(1), jnp.int8(-1))
+    def encode(self, key, flat, state, sigma=None):
+        return pack_flat(self._noisy(key, flat, sigma)), state
 
-        return jax.tree.map(enc_leaf, keys, g), state
+    def aggregate(self, payload, mask, n_coords):
+        del n_coords
+        return unpack_sum(payload, mask)
 
-    def decode_mean(self, enc_mean, sigma=None):
+    def decode_mean(self, flat_mean, sigma=None):
         if sigma is None:
             scale = znoise.eta_z(self.z) * self.sigma if self.sigma > 0.0 else 1.0
         else:
             scale = znoise.eta_z(self.z) * sigma
-        return jax.tree.map(lambda s: s.astype(jnp.float32) * scale, enc_mean)
+        return flat_mean * scale
 
 
 @dataclasses.dataclass(frozen=True)
 class StoSignCompressor(Compressor):
     """Sto-SignSGD [Safaryan & Richtarik '21] as unified by the paper:
-    z = inf with the *input-dependent* noise scale sigma_i = ||g_i||_2."""
+    z = inf with the *input-dependent* noise scale sigma_i = ||flat_i||_2.
+    Bitpacked 1-bit wire format."""
     wire_bits_per_coord: float = 1.0
     name: str = "stosign"
 
-    def encode(self, key, g, state, sigma=None):
-        sigma = global_norm(g)
-        keys = _tree_keys(key, g)
+    def wire_format(self) -> WireFormat:
+        return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked")
 
-        def enc_leaf(k, x):
-            xi = jax.random.uniform(k, x.shape, minval=-1.0, maxval=1.0)
-            return jnp.where(x.astype(jnp.float32) + sigma * xi >= 0,
-                             jnp.int8(1), jnp.int8(-1))
+    def encode(self, key, flat, state, sigma=None):
+        del sigma
+        nrm = jnp.linalg.norm(flat)
+        xi = jax.random.uniform(key, flat.shape, minval=-1.0, maxval=1.0)
+        return pack_flat(flat + nrm * xi), state
 
-        return jax.tree.map(enc_leaf, keys, g), state
+    def aggregate(self, payload, mask, n_coords):
+        del n_coords
+        return unpack_sum(payload, mask)
 
-    def decode_mean(self, enc_mean, sigma=None):
+    def decode_mean(self, flat_mean, sigma=None):
         # majority-vote style: server applies its own stepsize to mean sign.
         del sigma
-        return jax.tree.map(lambda s: s.astype(jnp.float32), enc_mean)
+        return flat_mean
 
 
 @dataclasses.dataclass(frozen=True)
 class EFSignCompressor(Compressor):
     """EF-SignSGD [Karimireddy et al. '19]: scaled sign + per-client residual.
 
-    enc_i = (||p_i||_1 / d) * Sign(p_i),  p_i = g_i + e_i ;
-    e_i <- p_i - enc_i.  The scale is transmitted as one fp32 per tensor
-    (d + 32 bits).  Cannot handle partial participation (residuals go stale) —
-    documented limitation, matching the paper's related-work discussion.
+    enc_i = (||p_i||_1 / d) * Sign(p_i),  p_i = flat_i + e_i ;
+    e_i <- p_i - enc_i.  The wire payload is the bitpacked sign buffer plus
+    ONE fp32 scale (d + 32 bits total, so bits/coord -> 1 as d grows). The
+    residual state is a single flat fp32 buffer per client. Stale residuals
+    under partial participation are kept exactly (engine masks the state
+    update) — matching the paper's related-work discussion of EF's
+    partial-participation limitation.
     """
     wire_bits_per_coord: float = 1.0
     name: str = "efsign"
-
-    def init_state(self, params):
-        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
-
     use_kernel: bool = False   # fused Pallas EF step (kernels/efsign)
 
-    def encode(self, key, g, state, sigma=None):
-        del key
+    def wire_format(self) -> WireFormat:
+        return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked+scale")
 
-        def enc_leaf(x, e):
-            p = x.astype(jnp.float32) + e
-            scale = jnp.mean(jnp.abs(p))
-            if self.use_kernel:
-                from repro.kernels.efsign import ops as EK
-                return EK.ef_sign_update(x.astype(jnp.float32), e, scale)
-            q = scale * jnp.sign(p)
-            return q, p - q
+    def init_state(self, n_coords: int):
+        return jnp.zeros((n_coords,), jnp.float32)
 
-        enc_and_res = jax.tree.map(enc_leaf, g, state)
-        enc = jax.tree.map(lambda t: t[0], enc_and_res,
-                           is_leaf=lambda t: isinstance(t, tuple))
-        res = jax.tree.map(lambda t: t[1], enc_and_res,
-                           is_leaf=lambda t: isinstance(t, tuple))
-        return enc, res
+    def encode(self, key, flat, state, sigma=None):
+        del key, sigma
+        p = flat + state
+        scale = jnp.mean(jnp.abs(p))
+        if self.use_kernel:
+            # one fused VMEM pass: bitpacked payload + residual together
+            from repro.kernels.efsign import ops as EK
+            packed, res = EK.ef_sign_encode(flat, state, scale)
+        else:
+            # residual uses the same p >= 0 sign convention as the wire
+            # payload, so EF accounts exactly for what the server decodes
+            # (jnp.sign's 0-at-0 would leak +scale per round on zero coords)
+            packed = pack_flat(p)
+            res = p - scale * jnp.where(p >= 0, 1.0, -1.0)
+        return {"packed": packed, "scale": scale}, res
 
-    def decode_mean(self, enc_mean, sigma=None):
+    def aggregate(self, payload, mask, n_coords):
+        del n_coords
+        return unpack_sum(payload["packed"], mask * payload["scale"])
+
+    def decode_mean(self, flat_mean, sigma=None):
         del sigma
-        return enc_mean
+        return flat_mean
 
 
 @dataclasses.dataclass(frozen=True)
 class QSGDCompressor(Compressor):
     """Unbiased stochastic quantizer of Alistarh et al. (paper Definition 2);
-    with FedAvg local steps this is FedPAQ/FedCOM.  ``s`` quantization levels.
-    """
+    with FedAvg local steps this is FedPAQ/FedCOM. ``s`` quantization levels;
+    wire cost derives from s: ceil(log2(2s+1)) bits/coord (+ one fp32 norm,
+    amortized)."""
     s: int = 1
-    wire_bits_per_coord: float = 2.0  # ~log2(2s+1) + norm overhead
+    wire_bits_per_coord: float = 2.0
     name: str = "qsgd"
 
-    def encode(self, key, g, state, sigma=None):
-        keys = _tree_keys(key, g)
+    def __post_init__(self):
+        object.__setattr__(self, "wire_bits_per_coord",
+                           float(math.ceil(math.log2(2 * self.s + 1))))
 
-        def enc_leaf(k, x):
-            x = x.astype(jnp.float32)
-            nrm = jnp.linalg.norm(x.reshape(-1)) + 1e-12
-            r = jnp.abs(x) / nrm * self.s
-            low = jnp.floor(r)
-            up = jax.random.bernoulli(k, jnp.clip(r - low, 0.0, 1.0), x.shape)
-            lvl = (low + up.astype(jnp.float32)) / self.s
-            return nrm * jnp.sign(x) * lvl
-
-        return jax.tree.map(enc_leaf, keys, g), state
-
-    def decode_mean(self, enc_mean, sigma=None):
+    def encode(self, key, flat, state, sigma=None):
         del sigma
-        return enc_mean
+        nrm = jnp.linalg.norm(flat) + 1e-12
+        r = jnp.abs(flat) / nrm * self.s
+        low = jnp.floor(r)
+        up = jax.random.bernoulli(key, jnp.clip(r - low, 0.0, 1.0), flat.shape)
+        lvl = (low + up.astype(jnp.float32)) / self.s
+        return nrm * jnp.sign(flat) * lvl, state
+
+    def decode_mean(self, flat_mean, sigma=None):
+        del sigma
+        return flat_mean
 
 
 @dataclasses.dataclass(frozen=True)
 class TopKCompressor(Compressor):
-    """Beyond-paper sparsifier baseline: keep top-k fraction by magnitude with
-    per-client error feedback."""
+    """Beyond-paper sparsifier baseline: keep the top-k fraction of the flat
+    buffer by magnitude (GLOBAL top-k across all tensors) with per-client
+    error feedback. COO wire format: (values, indices), 64*frac bits/coord.
+    """
     frac: float = 0.01
-    wire_bits_per_coord: float = 32.0 * 2 * 0.01  # value+index on kept coords
+    wire_bits_per_coord: float = 0.64  # overwritten in __post_init__
     name: str = "topk"
 
-    def init_state(self, params):
-        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    def __post_init__(self):
+        # fp32 value + int32 index per kept coordinate.
+        object.__setattr__(self, "wire_bits_per_coord", 64.0 * self.frac)
 
-    def encode(self, key, g, state, sigma=None):
-        del key
+    def wire_format(self) -> WireFormat:
+        return WireFormat("float32", self.wire_bits_per_coord, "sparse_coo")
 
-        def enc_leaf(x, e):
-            p = (x.astype(jnp.float32) + e).reshape(-1)
-            k = max(1, int(p.size * self.frac))
-            thresh = jax.lax.top_k(jnp.abs(p), k)[0][-1]
-            q = jnp.where(jnp.abs(p) >= thresh, p, 0.0).reshape(x.shape)
-            return q, p.reshape(x.shape) - q
+    def init_state(self, n_coords: int):
+        return jnp.zeros((n_coords,), jnp.float32)
 
-        enc_and_res = jax.tree.map(enc_leaf, g, state)
-        enc = jax.tree.map(lambda t: t[0], enc_and_res,
-                           is_leaf=lambda t: isinstance(t, tuple))
-        res = jax.tree.map(lambda t: t[1], enc_and_res,
-                           is_leaf=lambda t: isinstance(t, tuple))
-        return enc, res
+    def encode(self, key, flat, state, sigma=None):
+        del key, sigma
+        p = flat + state
+        k = max(1, int(p.shape[0] * self.frac))
+        _, idx = jax.lax.top_k(jnp.abs(p), k)
+        return {"values": p[idx], "indices": idx}, p.at[idx].set(0.0)
 
-    def decode_mean(self, enc_mean, sigma=None):
+    def aggregate(self, payload, mask, n_coords):
+        # scatter-add each client's COO payload into the dense flat space.
+        vals = (payload["values"] * mask[:, None]).reshape(-1)
+        idx = payload["indices"].reshape(-1)
+        return jnp.zeros((n_coords,), jnp.float32).at[idx].add(vals)
+
+    def decode_mean(self, flat_mean, sigma=None):
         del sigma
-        return enc_mean
+        return flat_mean
 
 
 @dataclasses.dataclass(frozen=True)
 class DPGaussianCompressor(Compressor):
-    """Uncompressed DP-FedAvg mechanism: transmit g + N(0, sigma^2 I)
+    """Uncompressed DP-FedAvg mechanism: transmit flat + N(0, sigma^2 I)
     (clipping happens in the round engine via cfg.dp_clip). 32 bits/coord."""
     sigma: float = 1.0
     wire_bits_per_coord: float = 32.0
     name: str = "dpgauss"
 
-    def encode(self, key, g, state, sigma=None):
+    def encode(self, key, flat, state, sigma=None):
         sig = self.sigma if sigma is None else sigma
-        keys = _tree_keys(key, g)
-        enc = jax.tree.map(
-            lambda k, x: x.astype(jnp.float32)
-            + sig * jax.random.normal(k, x.shape), keys, g)
-        return enc, state
-
-    def decode_mean(self, enc_mean, sigma=None):
-        del sigma
-        return enc_mean
+        return flat + sig * jax.random.normal(key, flat.shape), state
 
 
 @dataclasses.dataclass(frozen=True)
 class PackedZSignCompressor(ZSignCompressor):
-    """z-sign with the TRUE 1-bit wire format, via the Pallas TPU kernels
-    (kernels/zsign): encode fuses noise+sign+bitpack to uint8 (8 coords per
-    byte — what actually crosses the network); the server aggregation
-    unpacks + sums with the companion kernel. Encoded leaves are
-    {"packed": uint8[ceil(n/8)]} per parameter; decoders are linear, so the
-    engine's group-sum path is unchanged.
+    """z-sign through the Pallas TPU kernels (kernels/zsign): encode fuses
+    noise-add + sign + 8:1 bitpack into one VMEM pass; the server unpack+sum
+    runs the companion kernel per client row. Bit-for-bit identical wire
+    bytes to the pure-jnp ``pack_flat`` path (verified in tests), just fused.
+    Payload is uint8 of ceil(d/8192)*1024 bytes (kernel tile padding; the
+    logical cost stays 1 bit/coord — see wire.py accounting notes).
     """
     name: str = "zsign_packed"
 
-    def encode(self, key, g, state, sigma=None):
+    def encode(self, key, flat, state, sigma=None):
         from repro.kernels.zsign import ops as K
-        keys = _tree_keys(key, g)
         sig = self.sigma if sigma is None else sigma
+        noise = znoise.sample_z_noise(key, flat.shape, self.z)
+        return K.zsign_compress(flat, noise, sig), state
 
-        def enc_leaf(k, x):
-            noise = znoise.sample_z_noise(k, x.shape, self.z)
-            return K.zsign_compress(x.astype(jnp.float32), noise, sig)
-
-        return jax.tree.map(enc_leaf, keys, g), state
-
-    def aggregate(self, enc, mask):
+    def aggregate(self, payload, mask, n_coords):
         from repro.kernels.zsign import ops as K
-
-        def agg_leaf(e):
-            # e: (n_clients, n_bytes) uint8. Unpack+sum via the kernel for
-            # the full-participation fast path; masked clients handled by
-            # zeroing their +/-1 contribution (unpack then weight).
-            n, nb = e.shape
-            signs = jax.vmap(
-                lambda row: K.zsign_decompress_sum(row[None], nb * 8))(e)
-            return jnp.einsum("nd,n->d", signs, mask)
-
-        return jax.tree.map(agg_leaf, enc)
-
-    def decode_mean(self, enc_mean, sigma=None):
-        # enc_mean leaves are flat (padded) sign-means; reshaping back to the
-        # parameter shapes happens in unflatten_like.
-        return super().decode_mean(enc_mean, sigma)
-
-    @staticmethod
-    def unflatten_like(flat_tree, params):
-        return jax.tree.map(
-            lambda f, p: f[: p.size].reshape(p.shape), flat_tree, params)
+        del n_coords
+        n, nb = payload.shape
+        signs = jax.vmap(
+            lambda row: K.zsign_decompress_sum(row[None], nb * 8))(payload)
+        return jnp.einsum("nd,n->d", signs, mask)
 
 
 _REGISTRY = {
@@ -334,6 +321,10 @@ _REGISTRY = {
     "dpgauss": DPGaussianCompressor,
     "zsign_packed": PackedZSignCompressor,
 }
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
 
 
 def make_compressor(name: str, **kw) -> Compressor:

@@ -4,15 +4,24 @@ One *round step* is a single jitted function:
 
     broadcast server params -> vmap over parallel clients:
         scan over E local SGD steps -> pseudo-gradient (x0 - xE)/gamma
-        -> compressor.encode  (the 1-bit uplink payload)
-    -> participation-masked aggregation over the client axis
-       (int8 mean  ==  the compressed all-reduce)
-    -> compressor.decode_mean -> server optimizer update.
+        -> flatten ONCE to a 1-D fp32 wire buffer (core/wire.TreeSpec)
+        -> compressor.encode  (the bitpacked 1-bit uplink payload)
+    -> participation-masked flat aggregation over the client axis
+       (uint8 collective + unpack-sum == the compressed all-reduce)
+    -> compressor.decode_mean -> unflatten ONCE -> server optimizer update.
+
+The engine never touches per-leaf encodings: every compressor speaks the flat
+wire-buffer codec of core/wire.py, so there are no compressor-specific
+branches here — sign families ship bitpacked uint8, top-k ships COO pairs,
+identity ships fp32, all through the same four calls.
 
 Parallel clients live on a vmapped leading axis that the launcher shards over
 mesh ``client_axes`` (data and/or pod); sequential client *groups* are an
 outer ``lax.scan`` so arbitrarily many clients run per round with one replica
 of storage — the decoders are linear so group-sum aggregation is exact.
+Per-client compressor state (EF / top-k residuals) is a flat fp32 buffer of
+shape (client_groups, n_clients, n_coords); dead clients keep their previous
+residual bit-exactly (the state update is participation-masked).
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import wire
 from repro.core.compression import Compressor
 from repro.optim.optimizers import Optimizer, make_optimizer
 
@@ -41,7 +51,7 @@ class FedConfig:
 class ServerState(NamedTuple):
     params: Any
     opt_state: Any
-    comp_state: Any       # per-client compressor state, leading dims (G, N, ...)
+    comp_state: Any       # flat per-client residuals, (G, N, n_coords) or None
     rng: jax.Array
     round: jax.Array      # int32 scalar
     sigma: jax.Array      # dynamic noise scale (Plateau criterion)
@@ -57,9 +67,10 @@ class RoundMetrics(NamedTuple):
 def init_server_state(params, cfg: FedConfig, compressor: Compressor,
                       rng: jax.Array, sigma0: float = 0.0) -> ServerState:
     opt = _server_optimizer(cfg)
-    cstate = compressor.init_state(params)
+    spec = wire.tree_spec(params)
+    cstate = compressor.init_state(spec.n_coords)
     if cstate is not None:
-        # one residual per client: (groups, n_clients, ...)
+        # one flat residual buffer per client: (groups, n_clients, n_coords)
         cstate = jax.tree.map(
             lambda x: jnp.broadcast_to(
                 x, (cfg.client_groups, cfg.n_clients) + x.shape), cstate)
@@ -73,16 +84,15 @@ def _server_optimizer(cfg: FedConfig) -> Optimizer:
     return make_optimizer(cfg.server_opt, lr=cfg.server_lr, **dict(cfg.server_opt_kw))
 
 
-def _clip_tree(tree, max_norm: float):
-    from repro.core.compression import global_norm
-    nrm = global_norm(tree)
-    scale = 1.0 / jnp.maximum(1.0, nrm / max_norm)
-    return jax.tree.map(lambda x: x * scale, tree)
+def _clip_flat(flat: jax.Array, max_norm: float) -> jax.Array:
+    nrm = jnp.linalg.norm(flat)
+    return flat * (1.0 / jnp.maximum(1.0, nrm / max_norm))
 
 
 def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
                      *, dynamic_sigma: bool = False,
                      param_constraint: Optional[Callable] = None,
+                     wire_constraint: Optional[Callable] = None,
                      spmd_axes=None):
     """Returns round_step(state, batch, mask) -> (state, RoundMetrics).
 
@@ -90,12 +100,17 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
     leaves have leading dims (client_groups, n_clients, E, ...). ``mask`` is a
     float (client_groups, n_clients) participation mask (straggler dropout /
     partial participation); pass all-ones for full participation.
-    ``param_constraint`` re-applies sharding constraints to per-client
-    replicas inside the step (set by the launcher).
+    ``param_constraint`` re-applies sharding constraints to params-shaped
+    trees inside the step (set by the launcher). ``wire_constraint`` pins the
+    aggregated flat wire buffer — the launcher passes replicate (it is 8-32x
+    smaller than the params and feeds one collective) so the unflatten back
+    to sharded parameter layouts is a local slice, never a reshard (see
+    launch/sharding.py wire_state_specs for the per-client residual layout).
     """
     opt = _server_optimizer(cfg)
     gamma = cfg.client_lr
     constrain = param_constraint or (lambda t: t)
+    constrain_wire = wire_constraint or (lambda f: f)
 
     def local_sgd(params, client_batch):
         """scan over E local steps; returns (x_E, mean loss)."""
@@ -107,25 +122,30 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
         x_e, losses = jax.lax.scan(step, params, client_batch)
         return x_e, jnp.mean(losses)
 
-    def client_update(params0, client_batch, key, cstate, sigma):
+    def client_update(spec, params0, client_batch, key, cstate, sigma):
         x_e, loss = local_sgd(params0, client_batch)
         pseudo = jax.tree.map(
             lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)) / gamma,
             params0, x_e)
+        # the ONE flatten: pytree -> contiguous fp32 wire buffer
+        flat = spec.flatten(pseudo)
         if cfg.dp_clip > 0.0:
-            pseudo = _clip_tree(pseudo, cfg.dp_clip)
+            flat = _clip_flat(flat, cfg.dp_clip)
         enc, new_cstate = compressor.encode(
-            key, pseudo, cstate, sigma=sigma if dynamic_sigma else None)
+            key, flat, cstate, sigma=sigma if dynamic_sigma else None)
         return enc, new_cstate, loss
 
-    def group_round(params, group_batch, keys, group_cstate, mask_g, sigma):
-        """One parallel group of n_clients: returns masked SUM of encodings."""
+    def group_round(spec, params, group_batch, keys, group_cstate, mask_g,
+                    sigma):
+        """One parallel group of n_clients: returns masked SUM of encodings
+        as a single flat fp32 buffer."""
+        cu = lambda *a: client_update(spec, *a)
         if cfg.n_clients == 1:
             # sequential-client (big-arch) mode: skip the vmap — a size-1
             # vmap without spmd_axis_name drops every sharding constraint
             # inside (measured: 16 TB/dev of replicate-fallback collectives
             # on jamba; EXPERIMENTS.md §Perf).
-            enc1, ncs1, loss1 = client_update(
+            enc1, ncs1, loss1 = cu(
                 params, jax.tree.map(lambda x: x[0], group_batch), keys[0],
                 (None if group_cstate is None
                  else jax.tree.map(lambda x: x[0], group_cstate)), sigma)
@@ -135,14 +155,15 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
             losses = loss1[None]
         else:
             enc, new_cstate, losses = jax.vmap(
-                client_update,
+                cu,
                 in_axes=(None, 0, 0,
                          0 if group_cstate is not None else None, None),
                 spmd_axis_name=spmd_axes,
             )(params, group_batch, keys, group_cstate, sigma)
         # participation mask: dead clients contribute zero; stateful
-        # compressors keep their previous residual.
-        enc_sum = constrain(compressor.aggregate(enc, mask_g))
+        # compressors keep their previous residual bit-exactly.
+        enc_sum = constrain_wire(
+            compressor.aggregate(enc, mask_g, spec.n_coords))
         if group_cstate is not None:
             new_cstate = jax.tree.map(
                 lambda new, old: jnp.where(
@@ -152,6 +173,7 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
         return enc_sum, new_cstate, loss_sum
 
     def round_step(state: ServerState, batch, mask):
+        spec = wire.tree_spec(state.params)
         rng, sub = jax.random.split(state.rng)
         all_keys = jax.random.split(sub, cfg.client_groups * cfg.n_clients
                                     ).reshape(cfg.client_groups, cfg.n_clients, -1)
@@ -162,7 +184,8 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
             g_cstate = (None if state.comp_state is None
                         else jax.tree.map(lambda x: x[0], state.comp_state))
             enc_sum, new_cstate_g, loss_sum = group_round(
-                state.params, g_batch, all_keys[0], g_cstate, mask[0], sigma)
+                spec, state.params, g_batch, all_keys[0], g_cstate, mask[0],
+                sigma)
             new_cstate = (None if new_cstate_g is None
                           else jax.tree.map(lambda x: x[None], new_cstate_g))
         else:
@@ -170,40 +193,37 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
                 enc_acc, loss_acc = carry
                 g_batch, keys_g, cstate_g, mask_g = xs
                 enc_sum, new_cstate_g, loss_sum = group_round(
-                    state.params, g_batch, keys_g, cstate_g, mask_g, sigma)
-                enc_acc = constrain(jax.tree.map(jnp.add, enc_acc, enc_sum))
-                return (enc_acc, loss_acc + loss_sum), new_cstate_g
+                    spec, state.params, g_batch, keys_g, cstate_g, mask_g,
+                    sigma)
+                return (enc_acc + enc_sum, loss_acc + loss_sum), new_cstate_g
 
-            agg_shapes = jax.eval_shape(
-                lambda b, k, c, m: group_round(state.params, b, k, c, m,
+            agg_shape = jax.eval_shape(
+                lambda b, k, c, m: group_round(spec, state.params, b, k, c, m,
                                                sigma)[0],
                 jax.tree.map(lambda x: x[0], batch), all_keys[0],
                 (None if state.comp_state is None
                  else jax.tree.map(lambda x: x[0], state.comp_state)),
                 mask[0])
-            zero_enc = constrain(jax.tree.map(
-                lambda sd: jnp.zeros(sd.shape, sd.dtype), agg_shapes))
+            zero_enc = jnp.zeros(agg_shape.shape, agg_shape.dtype)
             (enc_sum, loss_sum), new_cstate = jax.lax.scan(
                 body, (zero_enc, jnp.zeros(())),
                 (batch, all_keys, state.comp_state, mask))
 
         n_live = jnp.maximum(jnp.sum(mask), 1.0)
-        enc_mean = jax.tree.map(lambda e: e / n_live, enc_sum)
-        g_hat = compressor.decode_mean(enc_mean,
-                                       sigma=sigma if dynamic_sigma else None)
-        if hasattr(compressor, "unflatten_like"):
-            g_hat = compressor.unflatten_like(g_hat, state.params)
+        g_flat = constrain_wire(compressor.decode_mean(
+            enc_sum / n_live, sigma=sigma if dynamic_sigma else None))
+        # the ONE unflatten: decoded flat estimate -> params-shaped pytree
+        g_hat = constrain(spec.unflatten(g_flat))
         # Algorithm 1 line 15: x_t = x_{t-1} - eta * gamma * mean(Delta)
         scaled = jax.tree.map(lambda g: gamma * g, g_hat)
         new_params, new_opt = opt.update(scaled, state.opt_state, state.params)
 
-        n_coords = sum(p.size for p in jax.tree_util.tree_leaves(state.params))
         metrics = RoundMetrics(
             loss=loss_sum / n_live,
-            grad_est_norm=jnp.sqrt(sum(jnp.sum(jnp.square(g))
-                                       for g in jax.tree_util.tree_leaves(g_hat))),
+            grad_est_norm=jnp.linalg.norm(g_flat[:spec.n_coords]),
             participation=n_live,
-            uplink_bits=n_live * float(n_coords * compressor.wire_bits_per_coord))
+            uplink_bits=n_live * float(spec.n_coords
+                                       * compressor.wire_bits_per_coord))
         new_state = ServerState(params=new_params, opt_state=new_opt,
                                 comp_state=new_cstate, rng=rng,
                                 round=state.round + 1, sigma=sigma)

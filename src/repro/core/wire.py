@@ -1,0 +1,150 @@
+"""Flat wire-buffer codec substrate: flatten once, compress flat, unflatten once.
+
+Every compressor in core/compression.py encodes/decodes a SINGLE contiguous
+1-D fp32 buffer — the layout a real compressed all-reduce transmits, and the
+layout the Pallas kernels (kernels/zsign, kernels/efsign) consume directly.
+The round engine (core/fedavg.py) flattens the pseudo-gradient pytree exactly
+once per client via :class:`TreeSpec`, and unflattens the decoded server
+estimate exactly once per round. Nothing in between ever sees a pytree.
+
+Key pieces:
+
+  ``TreeSpec``     cached flatten metadata (treedef + leaf shapes/offsets).
+                   Built at trace time; ``flatten``/``unflatten`` are the only
+                   tree <-> buffer conversions in the whole round step.
+  ``WireFormat``   what actually crosses the network for one client:
+                   wire dtype, bits per coordinate, payload layout name.
+  ``pack_signs`` / ``unpack_signs``
+                   the pure-jnp 8:1 bitpack shared by every sign-family
+                   compressor (the Pallas kernel in kernels/zsign is the
+                   fused fast path, bit-for-bit identical — see tests).
+
+Wire-size accounting: ``WireFormat.bits_per_coord`` is the *logical* cost per
+model coordinate (1.0 for bitpacked signs, 32.0 for dense fp32, 64*frac for
+COO top-k). Uplink metrics multiply it by the true coordinate count
+``TreeSpec.n_coords``, not the padded buffer length, so padding to the pack
+boundary (8) or the kernel tile (8192) never inflates reported bits.
+
+Buffers may be longer than ``n_coords`` (pack/tile padding); ``unflatten``
+reads only the leading ``n_coords`` entries, so decoders can hand back padded
+buffers unsliced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Describes one client's uplink payload.
+
+    dtype:          numpy-style name of the dtype on the wire ("uint8" for
+                    bitpacked signs, "float32" for dense).
+    bits_per_coord: logical uplink bits per model coordinate (excludes
+                    padding; includes per-tensor side info such as the EF
+                    scale, which is O(1) and amortizes to ~0 per coord).
+    layout:         payload layout name — "dense" | "bitpacked" |
+                    "bitpacked+scale" | "sparse_coo".
+    """
+    dtype: str
+    bits_per_coord: float
+    layout: str
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpec:
+    """Flatten-once metadata for a fixed pytree structure.
+
+    Holds the treedef plus per-leaf (shape, offset) so ``flatten`` and
+    ``unflatten`` are single concatenate / slice+reshape passes. Construction
+    happens at trace time (shapes are static), so the spec costs nothing
+    inside jit.
+    """
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    offsets: Tuple[int, ...]
+    n_coords: int
+
+    @classmethod
+    def from_tree(cls, tree) -> "TreeSpec":
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        shapes, offsets, off = [], [], 0
+        for l in leaves:
+            shapes.append(tuple(l.shape))
+            offsets.append(off)
+            n = 1
+            for d in l.shape:
+                n *= int(d)
+            off += n
+        return cls(treedef=treedef, shapes=tuple(shapes),
+                   offsets=tuple(offsets), n_coords=off)
+
+    def flatten(self, tree) -> jax.Array:
+        """pytree -> (n_coords,) float32 buffer (the one flatten per round)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.concatenate(
+            [l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+    def unflatten(self, flat: jax.Array):
+        """(>= n_coords,) buffer -> pytree of float32 leaves.
+
+        Accepts padded buffers: only the leading ``n_coords`` entries are
+        read, so sign decoders never need to slice off pack/tile padding.
+        """
+        leaves = []
+        for shape, off in zip(self.shapes, self.offsets):
+            n = 1
+            for d in shape:
+                n *= d
+            leaves.append(jax.lax.dynamic_slice_in_dim(flat, off, n)
+                          .reshape(shape))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+def tree_spec(tree) -> TreeSpec:
+    return TreeSpec.from_tree(tree)
+
+
+# ---------------------------------------------------------------------------
+# sign bitpacking (pure-jnp reference path, little-endian bit order; the
+# Pallas kernel in kernels/zsign produces the identical byte stream)
+# ---------------------------------------------------------------------------
+
+def pack_signs(signs_i8: jax.Array) -> jax.Array:
+    """int8 {-1,+1} (flat, len % 8 == 0) -> uint8 bitfield of len/8."""
+    bits = (signs_i8 > 0).astype(jnp.uint8).reshape(-1, 8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_signs(packed: jax.Array) -> jax.Array:
+    """uint8 bitfield -> int8 {-1,+1} of len*8."""
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    bits = (packed[:, None] & weights) > 0
+    return jnp.where(bits, jnp.int8(1), jnp.int8(-1)).reshape(-1)
+
+
+def pad_to(x: jax.Array, mult: int) -> jax.Array:
+    r = (-x.shape[0]) % mult
+    return jnp.pad(x, (0, r)) if r else x
+
+
+def pack_flat(flat: jax.Array) -> jax.Array:
+    """(d,) f32 -> bitpacked uint8 of ceil(d/8): bit = flat[i] >= 0.
+
+    Zero-padded tail packs as +1 bits; harmless because ``TreeSpec.unflatten``
+    never reads past n_coords.
+    """
+    y = pad_to(flat, 8)
+    return pack_signs(jnp.where(y >= 0, jnp.int8(1), jnp.int8(-1)))
+
+
+def unpack_sum(packed: jax.Array, weights: jax.Array) -> jax.Array:
+    """(n_clients, n_bytes) u8, (n_clients,) f32 -> (8*n_bytes,) weighted sum
+    of the +/-1 signs — the server side of the 1-bit all-gather."""
+    signs = jax.vmap(unpack_signs)(packed).astype(jnp.float32)
+    return jnp.einsum("nd,n->d", signs, weights)

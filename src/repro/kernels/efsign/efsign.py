@@ -1,9 +1,16 @@
 """Pallas TPU kernel: fused EF-SignSGD compress + residual update.
 
-One pass over HBM computes BOTH outputs of the error-feedback step
-(q = scale*sign(g+e) and the new residual e' = g+e-q), instead of the three
-separate elementwise passes the naive jnp formulation costs. Same VMEM
-tiling discipline as kernels/zsign: (ROWS_BLK, 1024) fp32 tiles.
+One pass over HBM computes ALL THREE outputs of the error-feedback step —
+q = scale*Sign(g+e), the new residual e' = g+e-q, and the bitpacked uint8
+wire payload (bit j of byte i == Sign((g+e)[8i+j]) >= 0, the same
+little-endian layout as kernels/zsign) — instead of the separate elementwise
++ pack passes the naive jnp formulation costs. Same VMEM tiling discipline
+as kernels/zsign: (ROWS_BLK, 1024) fp32 tiles in, (ROWS_BLK, 128) uint8
+payload tiles out.
+
+Sign convention is ``p >= 0 -> +1`` (matching wire.pack_flat), NOT jnp.sign:
+the residual must account exactly for what the server decodes from the
+bitpacked payload, including p == 0 coordinates.
 """
 from __future__ import annotations
 
@@ -11,18 +18,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-COLS = 1024
+LANE = 128
+PACK = 8
+COLS = LANE * PACK
 ROWS_BLK = 8
 
 
-def _ef_kernel(g_ref, e_ref, s_ref, q_ref, eout_ref):
+def _ef_kernel(g_ref, e_ref, s_ref, q_ref, eout_ref, p_ref):
     p = g_ref[...] + e_ref[...]
-    q = s_ref[0, 0] * jnp.sign(p)
+    r = p.shape[0]
+    pm = jnp.where(p >= 0.0, jnp.float32(1), jnp.float32(-1))
+    q = s_ref[0, 0] * pm
     q_ref[...] = q
     eout_ref[...] = p - q
+    bits = (p >= 0.0).reshape(r, LANE, PACK).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(PACK, dtype=jnp.uint8))
+    p_ref[...] = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint8)
 
 
 def ef_update_pallas(g2d, e2d, scale, *, interpret: bool):
+    """(rows, 1024) f32 x2 + scale -> (q, e_new, packed_u8[rows, 128])."""
     rows = g2d.shape[0]
     grid = (rows // ROWS_BLK,)
     return pl.pallas_call(
@@ -36,10 +51,12 @@ def ef_update_pallas(g2d, e2d, scale, *, interpret: bool):
         out_specs=[
             pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
             pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_BLK, LANE), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((rows, COLS), jnp.float32),
             jax.ShapeDtypeStruct((rows, COLS), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.uint8),
         ],
         interpret=interpret,
     )(g2d, e2d, scale.reshape(1, 1).astype(jnp.float32))

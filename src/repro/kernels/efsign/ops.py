@@ -15,21 +15,36 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def ef_sign_update(g: jax.Array, e: jax.Array, scale,
-                   *, interpret: bool | None = None):
-    """Fused EF step on arbitrary-shaped g/e. Returns (q, e_new)."""
-    interpret = _interpret() if interpret is None else interpret
-    shape = g.shape
+def _ef_call(g: jax.Array, e: jax.Array, scale, interpret):
     flat_g = g.astype(jnp.float32).reshape(-1)
     flat_e = e.astype(jnp.float32).reshape(-1)
     pad = (-flat_g.size) % TILE
     if pad:
         flat_g = jnp.pad(flat_g, (0, pad))
         flat_e = jnp.pad(flat_e, (0, pad))
-    q, e_new = K.ef_update_pallas(flat_g.reshape(-1, K.COLS),
-                                  flat_e.reshape(-1, K.COLS),
-                                  jnp.asarray(scale), interpret=interpret)
+    return K.ef_update_pallas(flat_g.reshape(-1, K.COLS),
+                              flat_e.reshape(-1, K.COLS),
+                              jnp.asarray(scale), interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ef_sign_update(g: jax.Array, e: jax.Array, scale,
+                   *, interpret: bool | None = None):
+    """Fused EF step on arbitrary-shaped g/e. Returns (q, e_new)."""
+    interpret = _interpret() if interpret is None else interpret
+    q, e_new, _ = _ef_call(g, e, scale, interpret)
     n = g.size
-    return (q.reshape(-1)[:n].reshape(shape),
-            e_new.reshape(-1)[:n].reshape(shape))
+    return (q.reshape(-1)[:n].reshape(g.shape),
+            e_new.reshape(-1)[:n].reshape(g.shape))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ef_sign_encode(g: jax.Array, e: jax.Array, scale,
+                   *, interpret: bool | None = None):
+    """Fused EF encode for the flat wire codec: one VMEM pass yields BOTH the
+    bitpacked uint8 payload (tile-padded; zero pad packs as +1 bits, same as
+    wire.pack_flat) and the new flat residual. Returns (packed, e_new)."""
+    interpret = _interpret() if interpret is None else interpret
+    _, e_new, packed = _ef_call(g, e, scale, interpret)
+    n = g.size
+    return packed.reshape(-1), e_new.reshape(-1)[:n].reshape(g.shape)

@@ -3,7 +3,12 @@ import jax.numpy as jnp
 
 
 def ef_sign_update_ref(g, e, scale):
-    """p = g + e; q = scale * sign(p); e' = p - q. Returns (q, e')."""
+    """p = g + e; q = scale * Sign(p); e' = p - q. Returns (q, e').
+
+    Sign convention is ``p >= 0 -> +1`` (matching the bitpacked wire format
+    of core/wire.pack_flat), so the residual accounts exactly for what the
+    server decodes — including p == 0 coordinates.
+    """
     p = g + e
-    q = scale * jnp.sign(p)
+    q = scale * jnp.where(p >= 0, jnp.float32(1), jnp.float32(-1))
     return q, p - q

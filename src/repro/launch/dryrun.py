@@ -76,19 +76,24 @@ def build_train_cell(arch, shape, mesh):
     def param_constraint(tree):
         return jax.tree.map(jax.lax.with_sharding_constraint, tree, psh)
 
+    rep = SH.replicated(mesh)
+
     step = fedavg.build_round_step(
         bundle.loss_fn, comp, fcfg,
         spmd_axes=(plan.client_axes if plan.client_axes else None),
-        param_constraint=param_constraint)
-    rep = SH.replicated(mesh)
+        param_constraint=param_constraint,
+        wire_constraint=lambda f: jax.lax.with_sharding_constraint(f, rep))
 
     state_shapes = jax.eval_shape(
         lambda p: fedavg.init_server_state(p, fcfg, comp,
                                            jax.random.PRNGKey(0)),
         params_shapes)
+    comp_state_sh = (None if state_shapes.comp_state is None else
+                     SH.to_shardings(SH.wire_state_specs(
+                         state_shapes.comp_state, plan), mesh))
     state_sh = fedavg.ServerState(
-        params=psh, opt_state=(), comp_state=None, rng=rep, round=rep,
-        sigma=rep)
+        params=psh, opt_state=(), comp_state=comp_state_sh, rng=rep,
+        round=rep, sigma=rep)
 
     per_step = bundle.train_batch_spec(plan.micro, shape.seq_len)
     batch_shapes = fedavg.make_batch_spec(fcfg, per_step)

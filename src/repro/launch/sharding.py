@@ -157,6 +157,23 @@ def batch_specs(batch_shapes, plan: ParallelPlan):
     return jax.tree.map(spec, batch_shapes)
 
 
+def wire_state_specs(cstate_shapes, plan: ParallelPlan):
+    """Per-client flat compressor residuals (core/wire.py codec): layout
+    (client_groups, n_clients, n_coords). Clients shard over the plan's
+    client axes; the flat coordinate axis stays replicated — residuals are
+    read/written only by their own client, so no cross-client resharding
+    occurs. The wire payloads themselves (uint8 bitpacked buffers) are 8-32x
+    smaller than fp32 params and feed one collective; they stay replicated
+    by construction in core/fedavg.py."""
+    def spec(leaf):
+        s = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 2:
+            s[1] = _axes_entry(plan.client_axes)
+        return P(*s)
+
+    return jax.tree.map(spec, cstate_shapes)
+
+
 def cache_specs(cache_shapes, plan: ParallelPlan, *, batch: int,
                 seq_lens: Tuple[int, ...]):
     """Decode KV/state cache: seq dims over seq(+micro when batch==1) axes,

@@ -39,9 +39,14 @@ def main():
     ap.add_argument("--micro-batch", type=int, default=2)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--compressor", default="zsign",
-                    choices=["zsign", "identity", "efsign", "stosign", "qsgd"])
+                    choices=list(compression.available()))
     ap.add_argument("--z", type=int, default=1, help="1=Gaussian, 0=uniform")
-    ap.add_argument("--sigma", type=float, default=0.01)
+    ap.add_argument("--sigma", type=float, default=0.01,
+                    help="z-sign noise scale / dpgauss noise stddev")
+    ap.add_argument("--qsgd-s", type=int, default=1,
+                    help="QSGD quantization levels")
+    ap.add_argument("--topk-frac", type=float, default=0.01,
+                    help="top-k kept fraction")
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--server-lr", type=float, default=0.5)
     ap.add_argument("--participation", type=float, default=1.0)
@@ -57,10 +62,14 @@ def main():
         arch = arch.reduced()
     bundle = build_model(arch.model)
 
-    if args.compressor == "zsign":
-        comp = compression.make_compressor("zsign", z=args.z, sigma=args.sigma)
-    else:
-        comp = compression.make_compressor(args.compressor)
+    comp_kw = {
+        "zsign": dict(z=args.z, sigma=args.sigma),
+        "zsign_packed": dict(z=args.z, sigma=args.sigma),
+        "dpgauss": dict(sigma=args.sigma),
+        "qsgd": dict(s=args.qsgd_s),
+        "topk": dict(frac=args.topk_frac),
+    }.get(args.compressor, {})
+    comp = compression.make_compressor(args.compressor, **comp_kw)
     cfg = fedavg.FedConfig(n_clients=args.clients, client_groups=args.groups,
                            local_steps=args.local_steps,
                            client_lr=args.client_lr, server_lr=args.server_lr)
@@ -92,8 +101,10 @@ def main():
 
     layout = (args.groups, args.clients, args.local_steps, args.micro_batch)
     per_step = bundle.train_batch_spec(args.micro_batch, args.seq_len)
+    wf = comp.wire_format()
     print(f"# arch={arch.model.name} params={n_params:,} "
-          f"compressor={comp.name} ({comp.wire_bits_per_coord} bits/coord)")
+          f"compressor={comp.name} wire={wf.layout}/{wf.dtype} "
+          f"({wf.bits_per_coord:g} bits/coord)")
     print("round,loss,ghat_norm,live,Mbits_cum,sigma,sec")
 
     bits = 0.0

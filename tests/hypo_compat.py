@@ -1,0 +1,62 @@
+"""Graceful degradation when ``hypothesis`` is absent.
+
+Tier-1 must run green from a bare checkout (jax + numpy + pytest only), so
+property tests import ``given``/``settings``/``st`` from here instead of
+hypothesis directly. With hypothesis installed you get the real
+shrinking/property engine; without it, ``given`` degrades to a fixed-seed
+``pytest.mark.parametrize`` over the strategy bounds plus deterministic
+random draws — weaker, but the same assertions still run on every case.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import inspect
+
+    import numpy as np
+    import pytest
+
+    _N_RANDOM_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, lo, hi, draw):
+            self.lo, self.hi = lo, hi
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                min_value, max_value,
+                lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **kw):
+            return _Strategy(
+                float(min_value), float(max_value),
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+    st = _Strategies()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # hypothesis binds positional strategies to the RIGHTMOST test
+            # parameters (fixtures come first) — mirror that here
+            argnames = list(inspect.signature(fn).parameters)[-len(strats):]
+            rng = np.random.RandomState(0)
+            cases = [tuple(s.lo for s in strats), tuple(s.hi for s in strats)]
+            for _ in range(_N_RANDOM_EXAMPLES):
+                cases.append(tuple(s.draw(rng) for s in strats))
+            if len(strats) == 1:
+                cases = [c[0] for c in cases]
+            return pytest.mark.parametrize(",".join(argnames), cases)(fn)
+        return deco

@@ -1,11 +1,18 @@
-"""Compressor unit + property tests."""
+"""Compressor unit + property tests over the flat wire-buffer codec.
+
+Includes the codec equivalence suite: encode -> masked aggregate ->
+decode -> unflatten through the flat path must match the seed's per-leaf
+reference semantics (per-leaf sign/quantize/mask/mean computed directly on
+the pytree) to within fp32 tolerance.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo_compat import given, settings, st
 
 from repro.core import compression as C
+from repro.core import wire
 
 
 def tree_of(x):
@@ -13,27 +20,66 @@ def tree_of(x):
             "b": {"c": jnp.ones((3, 4), jnp.float32)}}
 
 
+def roundtrip(comp, g, key=None, mask=None, n_clients=1):
+    """Full codec path for one client repeated n_clients times: flatten ->
+    encode -> stack -> masked aggregate -> mean -> decode -> unflatten."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    spec = wire.tree_spec(g)
+    flat = spec.flatten(g)
+    state = comp.init_state(spec.n_coords)
+    encs, st2 = [], None
+    for i in range(n_clients):
+        e, st2 = comp.encode(jax.random.fold_in(key, i), flat, state)
+        encs.append(e)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *encs)
+    mask = jnp.ones((n_clients,)) if mask is None else mask
+    agg = comp.aggregate(stacked, mask, spec.n_coords)
+    n_live = jnp.maximum(jnp.sum(mask), 1.0)
+    dec = comp.decode_mean(agg / n_live)
+    return spec.unflatten(dec), st2
+
+
 @pytest.mark.parametrize("name,kw", [
     ("identity", {}), ("zsign", {"z": 1, "sigma": 0.5}),
     ("zsign", {"z": 0, "sigma": 0.5}), ("stosign", {}),
     ("efsign", {}), ("qsgd", {"s": 2}), ("topk", {"frac": 0.5}),
+    ("dpgauss", {"sigma": 0.1}), ("zsign_packed", {"z": 1, "sigma": 0.5}),
 ])
 def test_roundtrip_shapes(name, kw):
     comp = C.make_compressor(name, **kw)
     g = tree_of(np.random.randn(17))
-    st_ = comp.init_state(g)
-    enc, st2 = comp.encode(jax.random.PRNGKey(0), g, st_)
-    dec = comp.decode_mean(enc)
+    dec, _ = roundtrip(comp, g, n_clients=2)
     assert jax.tree_util.tree_structure(dec) == jax.tree_util.tree_structure(g)
     for a, b in zip(jax.tree_util.tree_leaves(dec), jax.tree_util.tree_leaves(g)):
         assert a.shape == b.shape
 
 
+@pytest.mark.parametrize("name,kw", [
+    ("zsign", {"z": 1, "sigma": 0.5}), ("stosign", {}), ("efsign", {}),
+    ("zsign_packed", {"z": 1, "sigma": 0.5}),
+])
+def test_sign_family_transmits_bitpacked_uint8(name, kw):
+    """Every sign-family compressor ships uint8 at <= 1 bit per coordinate."""
+    comp = C.make_compressor(name, **kw)
+    assert comp.wire_bits_per_coord <= 1.0
+    wf = comp.wire_format()
+    assert wf.dtype == "uint8" and wf.bits_per_coord <= 1.0
+    d = 10_000
+    flat = jnp.asarray(np.random.RandomState(0).randn(d), jnp.float32)
+    enc, _ = comp.encode(jax.random.PRNGKey(0), flat,
+                         comp.init_state(d))
+    packed = enc["packed"] if isinstance(enc, dict) else enc
+    assert packed.dtype == jnp.uint8
+    # bitpacked: at most ceil over the pack/tile boundary, never d bytes
+    assert packed.size < d
+
+
 def test_zsign_is_sign_when_sigma_zero():
     comp = C.make_compressor("zsign", z=1, sigma=0.0)
-    g = tree_of(np.array([-2.0, -0.1, 0.0, 0.1, 3.0]))
-    enc, _ = comp.encode(jax.random.PRNGKey(0), g, None)
-    np.testing.assert_array_equal(np.asarray(enc["a"]),
+    flat = jnp.asarray([-2.0, -0.1, 0.0, 0.1, 3.0], jnp.float32)
+    enc, _ = comp.encode(jax.random.PRNGKey(0), flat, None)
+    signs = wire.unpack_signs(enc)[:5]
+    np.testing.assert_array_equal(np.asarray(signs),
                                   np.array([-1, -1, 1, 1, 1], np.int8))
 
 
@@ -41,12 +87,7 @@ def test_zsign_unbiased_estimator_statistically():
     """decode(mean over many independent encodings) ~ g for large sigma."""
     comp = C.make_compressor("zsign", z=0, sigma=5.0)  # uniform, sigma>|x|
     g = {"w": jnp.asarray(np.linspace(-2, 2, 16), jnp.float32)}
-    encs = []
-    for i in range(4000):
-        e, _ = comp.encode(jax.random.PRNGKey(i), g, None)
-        encs.append(e["w"].astype(np.float32))
-    mean_enc = {"w": jnp.asarray(np.mean(encs, axis=0))}
-    dec = comp.decode_mean(mean_enc)
+    dec, _ = roundtrip(comp, g, n_clients=4000)
     # uniform noise with sigma > |x|: exactly unbiased (Remark 1)
     np.testing.assert_allclose(np.asarray(dec["w"]), np.asarray(g["w"]),
                                atol=0.4)
@@ -54,25 +95,27 @@ def test_zsign_unbiased_estimator_statistically():
 
 def test_qsgd_unbiased():
     comp = C.make_compressor("qsgd", s=1)
-    g = {"w": jnp.asarray(np.random.RandomState(0).randn(32), jnp.float32)}
-    encs = [comp.encode(jax.random.PRNGKey(i), g, None)[0]["w"]
+    flat = jnp.asarray(np.random.RandomState(0).randn(32), jnp.float32)
+    encs = [comp.encode(jax.random.PRNGKey(i), flat, None)[0]
             for i in range(3000)]
-    np.testing.assert_allclose(np.mean(encs, axis=0), np.asarray(g["w"]),
+    np.testing.assert_allclose(np.mean(encs, axis=0), np.asarray(flat),
                                atol=0.15)
 
 
 def test_efsign_error_feedback_contracts():
-    """EF residual stays bounded and compensates over repeated encoding of a
-    constant gradient: the running decoded average converges to g."""
+    """EF residual compensates over repeated encoding of a constant gradient:
+    the running decoded average converges to g."""
     comp = C.make_compressor("efsign")
-    g = {"w": jnp.asarray([1.0, -0.2, 0.05, 3.0])}
-    state = comp.init_state(g)
+    flat = jnp.asarray([1.0, -0.2, 0.05, 3.0])
+    state = comp.init_state(4)
     dec_sum = np.zeros(4)
     T = 200
     for i in range(T):
-        enc, state = comp.encode(jax.random.PRNGKey(i), g, state)
-        dec_sum += np.asarray(enc["w"])
-    np.testing.assert_allclose(dec_sum / T, np.asarray(g["w"]), atol=0.05)
+        enc, state = comp.encode(jax.random.PRNGKey(i), flat, state)
+        dec_sum += np.asarray(
+            comp.aggregate(jax.tree.map(lambda x: x[None], enc),
+                           jnp.ones((1,)), 4)[:4])
+    np.testing.assert_allclose(dec_sum / T, np.asarray(flat), atol=0.05)
 
 
 @settings(max_examples=25, deadline=None)
@@ -89,3 +132,146 @@ def test_bitpack_roundtrip(n):
 def test_wire_bits_accounting():
     assert C.make_compressor("zsign").wire_bits_per_coord == 1.0
     assert C.make_compressor("identity").wire_bits_per_coord == 32.0
+    assert C.make_compressor("efsign").wire_bits_per_coord == 1.0
+    # derived from hyper-parameters, not hardcoded:
+    assert C.make_compressor("topk", frac=0.1).wire_bits_per_coord == \
+        pytest.approx(6.4)
+    assert C.make_compressor("topk", frac=0.5).wire_bits_per_coord == \
+        pytest.approx(32.0)
+    assert C.make_compressor("qsgd", s=1).wire_bits_per_coord == 2.0
+    assert C.make_compressor("qsgd", s=4).wire_bits_per_coord == 4.0
+
+
+def test_treespec_flatten_unflatten_roundtrip():
+    g = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((3, 4))},
+         "d": jnp.zeros((2, 2, 2))}
+    spec = wire.tree_spec(g)
+    assert spec.n_coords == 5 + 12 + 8
+    flat = spec.flatten(g)
+    assert flat.shape == (25,) and flat.dtype == jnp.float32
+    back = spec.unflatten(flat)
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(g)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # padded buffers: only the leading n_coords entries are read
+    back2 = spec.unflatten(jnp.concatenate([flat, jnp.full((7,), 99.0)]))
+    for a, b in zip(jax.tree_util.tree_leaves(back2),
+                    jax.tree_util.tree_leaves(g)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# codec equivalence vs the seed per-leaf reference path
+# ---------------------------------------------------------------------------
+
+def _per_leaf_reference(comp_name, g, noisy_flats, mask, **kw):
+    """Seed semantics: per-leaf sign -> masked per-leaf mean -> per-leaf
+    decode scale. ``noisy_flats`` are the post-noise flat buffers (one per
+    client) so randomized compressors compare exactly."""
+    spec = wire.tree_spec(g)
+    trees = [spec.unflatten(f) for f in noisy_flats]
+    signs = [jax.tree.map(lambda x: jnp.where(x >= 0, 1.0, -1.0), t)
+             for t in trees]
+    n_live = float(np.maximum(np.sum(np.asarray(mask)), 1.0))
+    mean = jax.tree.map(
+        lambda *xs: sum(m * x for m, x in zip(np.asarray(mask), xs)) / n_live,
+        *signs)
+    if comp_name == "zsign":
+        from repro.core.noise import eta_z
+        scale = eta_z(kw["z"]) * kw["sigma"] if kw["sigma"] > 0 else 1.0
+        return jax.tree.map(lambda s: s * scale, mean)
+    return mean
+
+
+@pytest.mark.parametrize("name", ["zsign", "zsign_packed"])
+def test_codec_matches_per_leaf_reference_zsign(name):
+    """encode -> masked aggregate -> decode through the flat codec ==
+    the per-leaf reference, given the same noisy values."""
+    z, sigma, n = 1, 0.7, 5
+    comp = C.make_compressor(name, z=z, sigma=sigma)
+    g = {"a": jnp.asarray(np.random.RandomState(0).randn(37), jnp.float32),
+         "b": {"c": jnp.asarray(np.random.RandomState(1).randn(4, 9),
+                                jnp.float32)}}
+    spec = wire.tree_spec(g)
+    flat = spec.flatten(g)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
+
+    from repro.core.noise import sample_z_noise
+    keys = [jax.random.fold_in(jax.random.PRNGKey(7), i) for i in range(n)]
+    noisy = [flat + sigma * sample_z_noise(k, flat.shape, z) for k in keys]
+
+    encs = [comp.encode(k, flat, None)[0] for k in keys]
+    agg = comp.aggregate(jnp.stack(encs), mask, spec.n_coords)
+    dec = comp.decode_mean(agg / jnp.sum(mask))
+    got = spec.unflatten(dec)
+
+    want = _per_leaf_reference("zsign", g, noisy, mask, z=z, sigma=sigma)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_codec_matches_per_leaf_reference_identity():
+    comp = C.make_compressor("identity")
+    g = tree_of(np.random.RandomState(3).randn(23))
+    spec = wire.tree_spec(g)
+    flat = spec.flatten(g)
+    mask = jnp.asarray([1.0, 0.0, 1.0])
+    encs = jnp.stack([flat * (i + 1) for i in range(3)])
+    agg = comp.aggregate(encs, mask, spec.n_coords)
+    got = spec.unflatten(comp.decode_mean(agg / 2.0))
+    want = jax.tree.map(lambda x: (1 * x + 3 * x) / 2.0, g)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_topk_masked_aggregate_scatter():
+    comp = C.make_compressor("topk", frac=0.25)
+    d = 16
+    flats = [jnp.zeros(d).at[i].set(10.0 + i) for i in range(3)]
+    encs, states = [], []
+    for f in flats:
+        e, s = comp.encode(None, f, comp.init_state(d))
+        encs.append(e)
+        states.append(s)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *encs)
+    mask = jnp.asarray([1.0, 0.0, 1.0])
+    agg = comp.aggregate(stacked, mask, d)
+    want = np.zeros(d)
+    want[0], want[2] = 10.0, 12.0   # client 1 masked out
+    np.testing.assert_allclose(np.asarray(agg), want)
+    # EF residual conserves p - q
+    for f, e, s in zip(flats, encs, states):
+        dense = np.zeros(d)
+        dense[np.asarray(e["indices"])] = np.asarray(e["values"])
+        np.testing.assert_allclose(np.asarray(f), dense + np.asarray(s),
+                                   atol=1e-6)
+
+
+def test_efsign_zero_coord_residual_matches_wire():
+    """Regression: at p == 0 the wire transmits a +1 bit, so the residual
+    must record -scale there (jnp.sign's 0-at-0 would leak +scale/round)."""
+    comp = C.make_compressor("efsign")
+    flat = jnp.asarray([0.0, 1.0, -1.0, 0.0])
+    enc, res = comp.encode(None, flat, comp.init_state(4))
+    scale = float(enc["scale"])
+    decoded = scale * np.asarray(wire.unpack_signs(enc["packed"]))[:4]
+    # EF invariant vs what the SERVER decodes: flat == decoded + residual
+    np.testing.assert_allclose(np.asarray(flat), decoded + np.asarray(res),
+                               atol=1e-6)
+
+
+def test_efsign_scale_weighted_aggregate():
+    """EF aggregation weights each client's signs by its own fp32 scale."""
+    comp = C.make_compressor("efsign")
+    d = 8
+    f1 = jnp.asarray([1.0, -1.0, 2.0, -2.0, 1.0, -1.0, 2.0, -2.0])
+    f2 = 4.0 * f1
+    e1, _ = comp.encode(None, f1, comp.init_state(d))
+    e2, _ = comp.encode(None, f2, comp.init_state(d))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), e1, e2)
+    agg = comp.aggregate(stacked, jnp.ones((2,)), d)[:d]
+    want = (np.asarray(e1["scale"]) + np.asarray(e2["scale"])) * \
+        np.sign(np.asarray(f1))
+    np.testing.assert_allclose(np.asarray(agg), want, rtol=1e-6)

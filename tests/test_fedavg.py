@@ -134,6 +134,65 @@ def test_dp_clipping_bounds_update():
     assert float(jnp.linalg.norm(st2.params["x"])) <= 0.01 * 0.5 + 1e-6
 
 
+@pytest.mark.parametrize("name,kw", [("efsign", {}),
+                                     ("topk", {"frac": 0.25})])
+@pytest.mark.parametrize("groups", [1, 2])
+def test_dead_clients_keep_residual_exactly(name, kw, groups):
+    """Participation-masked aggregation with STATEFUL compressors: a dead
+    client's flat residual buffer must be bit-identical across the round,
+    on both the vmap (groups=1) and the lax.scan (groups=2) paths."""
+    comp = compression.make_compressor(name, **kw)
+    step, st, b, m, _ = consensus_setup(comp, d=16, n=4, groups=groups,
+                                        seed=11)
+    # one full-participation round so residuals become nonzero
+    st, _ = step(st, b, m)
+    assert st.comp_state.shape == (groups, 4, 16)
+    assert float(jnp.sum(jnp.abs(st.comp_state))) > 0.0
+    before = np.asarray(st.comp_state).copy()
+    # kill client 1 in every group, client 3 in the last group
+    mask = m.at[:, 1].set(0.0).at[groups - 1, 3].set(0.0)
+    st2, metrics = step(st, b, mask)
+    after = np.asarray(st2.comp_state)
+    assert float(metrics.participation) == float(jnp.sum(mask))
+    for g in range(groups):
+        np.testing.assert_array_equal(after[g, 1], before[g, 1])
+        live = [i for i in range(4)
+                if not (i == 1 or (g == groups - 1 and i == 3))]
+        for i in live:
+            assert np.any(after[g, i] != before[g, i]), \
+                f"live client ({g},{i}) residual did not update"
+    np.testing.assert_array_equal(after[groups - 1, 3], before[groups - 1, 3])
+
+
+def test_stateful_masked_groups_match_vmap_path():
+    """8 clients as 1x8 (vmap) vs 2x4 (scan) with a stateful compressor and
+    partial participation: identical params and identical residuals."""
+    comp = compression.make_compressor("efsign")
+    cfg1 = fedavg.FedConfig(n_clients=8, client_groups=1, client_lr=0.01,
+                            server_lr=0.5)
+    cfg2 = fedavg.FedConfig(n_clients=4, client_groups=2, client_lr=0.01,
+                            server_lr=0.5)
+    d = 12
+    y = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 1, d))
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    step1 = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg1))
+    step2 = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg2))
+    st1 = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg1, comp,
+                                   jax.random.PRNGKey(1))
+    st2 = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg2, comp,
+                                   jax.random.PRNGKey(1))
+    mask = jnp.asarray([[1., 0., 1., 1., 0., 1., 1., 1.]])
+    for _ in range(10):
+        st1, _ = step1(st1, {"y": y}, mask)
+        st2, _ = step2(st2, {"y": y.reshape(2, 4, 1, d)},
+                       mask.reshape(2, 4))
+    np.testing.assert_allclose(np.asarray(st1.params["x"]),
+                               np.asarray(st2.params["x"]), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(st1.comp_state).reshape(8, -1),
+        np.asarray(st2.comp_state).reshape(8, -1), rtol=1e-5)
+
+
 def test_uplink_bits_zsign_vs_identity():
     za = compression.make_compressor("zsign", z=1, sigma=1.0)
     ia = compression.make_compressor("identity")

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo_compat import given, settings, st
 
 from repro.data import synthetic
 from repro.optim.optimizers import make_optimizer
