@@ -11,28 +11,59 @@ from repro.core import compression, fedavg
 
 
 def run_fed(loss_fn, params0, batches, comp, cfg, *, rounds, mask=None,
-            sigma0=0.0, plateau=None, eval_fn=None, dynamic_sigma=False):
+            sigma0=0.0, plateau=None, eval_fn=None, dynamic_sigma=False,
+            fetch_every=16, agg_backend=None):
     """Run ``rounds`` federated rounds; returns dict of metric curves.
 
     ``batches``: callable round_idx -> batch pytree (groups, n, E, ...).
+
+    The server state is DONATED into the jitted round step (params, opt
+    state, and the (G, N, n_coords) residual buffers update in place instead
+    of being copied every round), and per-round ``RoundMetrics`` stay on
+    device, fetched in batches of ``fetch_every`` rounds so the host never
+    blocks the device between steps. Plateau mode keeps the per-round fetch
+    — the controller genuinely needs each round's scalar loss before the
+    next sigma.
     """
     step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg,
-                                           dynamic_sigma=dynamic_sigma))
-    state = fedavg.init_server_state(params0, cfg, comp, jax.random.PRNGKey(1),
-                                     sigma0)
+                                           dynamic_sigma=dynamic_sigma,
+                                           agg_backend=agg_backend),
+                   donate_argnums=0)
+    # copy params0 so donation never consumes caller-owned buffers
+    state = fedavg.init_server_state(jax.tree.map(jnp.array, params0), cfg,
+                                     comp, jax.random.PRNGKey(1), sigma0)
     if mask is None:
         mask = jnp.ones((cfg.client_groups, cfg.n_clients))
     losses, bits, evals, sigmas = [], [], [], []
     total_bits = 0.0
+    per_round_fetch = plateau is not None
+    pending = []   # (loss, uplink_bits) device scalars awaiting one fetch
+
+    def drain():
+        nonlocal total_bits
+        # sigma is constant off the plateau path, so the current state's
+        # value stands in for every pending round exactly.
+        sig = float(state.sigma)
+        for lv, bv in jax.device_get(pending):
+            losses.append(float(lv))
+            total_bits += float(bv)
+            bits.append(total_bits)
+            sigmas.append(sig)
+        pending.clear()
+
     for t in range(rounds):
         state, m = step(state, batches(t), mask)
-        losses.append(float(m.loss))
-        total_bits += float(m.uplink_bits)
-        bits.append(total_bits)
-        sigmas.append(float(state.sigma))
-        if plateau is not None:
+        if per_round_fetch:
+            losses.append(float(m.loss))
+            total_bits += float(m.uplink_bits)
+            bits.append(total_bits)
+            sigmas.append(float(state.sigma))
             state = state._replace(
-                sigma=jnp.asarray(plateau.update(float(m.loss)), jnp.float32))
+                sigma=jnp.asarray(plateau.update(losses[-1]), jnp.float32))
+        else:
+            pending.append((m.loss, m.uplink_bits))
+            if len(pending) >= fetch_every or t == rounds - 1:
+                drain()
         if eval_fn is not None and (t % max(1, rounds // 20) == 0
                                     or t == rounds - 1):
             evals.append((t, float(eval_fn(state.params))))

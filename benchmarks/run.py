@@ -1,8 +1,11 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast] [--json]
 
-Prints ``name,metric,value`` CSV rows. Mapping to the paper:
+Prints ``name,metric,value`` CSV rows. ``--json`` additionally writes the
+perf-trajectory files every later perf PR is compared against:
+``BENCH_round.json`` (fed_round_step) and ``BENCH_kernels.json``
+(kernel_throughput). Mapping to the paper:
 
   fig1_consensus_dims    Fig. 1  consensus, algorithms x problem dimension
   fig2_noise_scales      Fig. 2  z-SignSGD under various noise scales
@@ -13,11 +16,15 @@ Prints ``name,metric,value`` CSV rows. Mapping to the paper:
   fig17_dp               Fig. 17 DP-SignFedAvg vs DP-FedAvg across eps
   table2_bits            Table 2 uplink bits per round per algorithm
   kernel_throughput      compression kernel us/call + bytes moved
+  fed_round_step         full jitted round + server aggregation wall-clock,
+                         legacy dense-matrix vs fused sign-reduce
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 
 import jax
 import jax.numpy as jnp
@@ -242,6 +249,73 @@ def table2_bits(fast=False):
         emit("table2_bits", f"{name}_wire", f"{wf.layout}/{wf.dtype}")
 
 
+def _time_donated_rounds(step, state, batch, mask, iters, warmup):
+    """Time a donated round step by threading the state through (the donated
+    input is consumed each call, so the loop must carry it)."""
+    for _ in range(warmup):
+        state, m = step(state, batch, mask)
+    jax.block_until_ready((state, m))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state, m = step(state, batch, mask)
+    jax.block_until_ready((state, m))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def fed_round_step(fast=False):
+    """Wall-clock of one jitted federated round (realistic MLP, n_clients
+    sweep): legacy dense-sign-matrix aggregation vs the fused sign-reduce
+    path, plus the isolated server-aggregation step on the same payload
+    shapes. This is the perf baseline later PRs are compared against."""
+    from repro.core import wire
+    dim, classes, width = 256, 10, (128 if fast else 512)
+    init, loss_fn, _ = mlp_loss_builder(dim, classes, width=width)
+    params = init(jax.random.PRNGKey(0))
+    d = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    emit("fed_round_step", "model_coords", d)
+    micro = 8
+    iters, warmup = (3, 1) if fast else (10, 3)
+    for n in ([8, 32] if fast else [8, 32, 64]):
+        cfg = fedavg.FedConfig(n_clients=n, client_lr=0.05,
+                               server_lr=sign_slr(0.01, 1, 0.05, 0.05))
+        kx, ky = jax.random.split(jax.random.PRNGKey(2))
+        batch = {"x": jax.random.normal(kx, (1, n, 1, micro, dim)),
+                 "y": jax.random.randint(ky, (1, n, 1, micro), 0, classes)}
+        mask = jnp.ones((1, n))
+        times = {}
+        for label, backend in [("dense", "dense"), ("fused", "auto")]:
+            comp = compression.make_compressor("zsign", z=1, sigma=0.05,
+                                               agg_backend=backend)
+            step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg),
+                           donate_argnums=0)
+            # fresh param copies: the donated step consumes its state buffers
+            state = fedavg.init_server_state(
+                jax.tree.map(jnp.array, params), cfg, comp,
+                jax.random.PRNGKey(1))
+            times[label] = _time_donated_rounds(step, state, batch, mask,
+                                                iters, warmup)
+            emit("fed_round_step", f"round_{label}_us_n{n}",
+                 round(times[label], 1))
+        emit("fed_round_step", f"round_speedup_n{n}",
+             round(times["dense"] / times["fused"], 2))
+
+        # isolated server aggregation on the same wire shapes: the term the
+        # fused path actually changes (the local-SGD compute above is
+        # backend-invariant).
+        nb = -(-d // 8)
+        payload = jax.random.randint(jax.random.PRNGKey(3), (n, nb), 0, 256,
+                                     jnp.int32).astype(jnp.uint8)
+        live = jnp.ones((n,), jnp.float32)
+        agg = {"dense": jax.jit(wire.unpack_sum_dense),
+               "fused": jax.jit(wire.unpack_sum)}
+        aus = {k: timeit(f, payload, live, iters=max(iters, 10),
+                         warmup=warmup + 2) for k, f in agg.items()}
+        for k, v in aus.items():
+            emit("fed_round_step", f"agg_{k}_us_n{n}", round(v, 1))
+        emit("fed_round_step", f"agg_speedup_n{n}",
+             round(aus["dense"] / aus["fused"], 2))
+
+
 def kernel_throughput(fast=False):
     """Pallas compression kernel vs pure-jnp reference (interpret mode on CPU
     measures correctness-path overhead; compiled-TPU numbers on hardware)."""
@@ -266,22 +340,50 @@ def kernel_throughput(fast=False):
     emit("kernel_throughput", f"codec_pack_flat_GBps_{size}",
          round(size * 4 / (us_pack * 1e-6) / 1e9, 2))
 
+    # server-side weighted sign-reduce: legacy dense-matrix decode vs the
+    # fused paths (mask popcount + general bit-sliced) on a 32-client stack.
+    n, nb = 32, size // 8
+    payload = jax.random.randint(jax.random.PRNGKey(2), (n, nb), 0, 256,
+                                 jnp.int32).astype(jnp.uint8)
+    live = jnp.ones((n,), jnp.float32)
+    for label, fn in [("dense", wire.unpack_sum_dense),
+                      ("mask", wire.unpack_sum_mask),
+                      ("weighted", wire.unpack_sum)]:
+        us = timeit(jax.jit(fn), payload, live, iters=5 if fast else 20)
+        emit("kernel_throughput", f"sign_reduce_{label}_us_n{n}_{size}",
+             round(us, 1))
+    emit("kernel_throughput", f"sign_reduce_wire_bytes_n{n}_{size}", n * nb)
+
 
 BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
            fig5_local_steps, fig6_plateau, fig16_qsgd, fig17_dp, table2_bits,
-           kernel_throughput]
+           kernel_throughput, fed_round_step]
+
+_JSON_FILES = {"fed_round_step": "BENCH_round.json",
+               "kernel_throughput": "BENCH_kernels.json"}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_round.json / BENCH_kernels.json")
     args = ap.parse_args()
     print("name,metric,value")
     for b in BENCHES:
         if args.only and b.__name__ != args.only:
             continue
         b(fast=args.fast)
+    if args.json:
+        by = {}
+        for name, metric, value in ROWS:
+            by.setdefault(name, {})[metric] = value
+        for bench, path in _JSON_FILES.items():
+            if bench in by:
+                with open(path, "w") as f:
+                    json.dump(by[bench], f, indent=1, sort_keys=True)
+                print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,19 @@ All decoders are linear in the per-client encodings, so the server may
 aggregate one parallel group per collective or scan-accumulate sums across
 sequential client groups — both paths produce identical estimates.
 
+Every sign-family ``aggregate`` (zsign, zsign_packed, stosign, and efsign,
+whose weights are ``mask * scale``) reduces DIRECTLY in the compressed
+domain through :func:`sign_reduce`: one fused weighted sign-reduce over the
+stacked (n_clients, n_bytes) uint8 payload, selected by the compressor's
+``agg_backend`` field ("auto" picks the Pallas kernel on TPU and the
+LUT-gather jnp path elsewhere; "pallas"/"jnp" force one; "dense" is the
+legacy dense-sign-matrix path kept only for benchmarks/tests). The server's
+per-round memory traffic is therefore ~1 bit/coord/client instead of the
+32 bits/coord/client the old vmap(unpack_signs) + einsum decode cost. The
+engine (core/fedavg.py) and launchers thread ``agg_backend`` through
+``build_round_step`` so deployments can pin a backend without rebuilding
+compressors.
+
 Wire-size accounting: ``wire_bits_per_coord`` (mirrored in ``wire_format()``)
 is the logical uplink cost per model coordinate and is derived from the
 compressor's own hyper-parameters (e.g. 64*frac for top-k, ceil(log2(2s+1))
@@ -40,6 +53,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import noise as znoise
+from repro.core import wire
 from repro.core.wire import (WireFormat, pack_flat, pack_signs,
                              unpack_signs, unpack_sum)
 
@@ -47,8 +61,45 @@ __all__ = [
     "Compressor", "ZSignCompressor", "StoSignCompressor", "EFSignCompressor",
     "QSGDCompressor", "TopKCompressor", "DPGaussianCompressor",
     "PackedZSignCompressor", "make_compressor", "available", "global_norm",
-    "pack_signs", "unpack_signs",
+    "pack_signs", "unpack_signs", "sign_reduce", "AGG_BACKENDS",
 ]
+
+#: aggregation backends for the sign-family weighted reduce
+AGG_BACKENDS = ("auto", "jnp", "pallas", "dense")
+
+
+def sign_reduce(packed: jax.Array, weights: jax.Array,
+                backend: str = "auto") -> jax.Array:
+    """Weighted sign-reduce over stacked bitpacked payloads.
+
+    (n_clients, n_bytes) u8 + (n_clients,) f32 -> (8*n_bytes,) f32 weighted
+    sum of the +/-1 signs, without ever materializing the dense
+    (n_clients, d) fp32 sign matrix. Correct for ARBITRARY per-client
+    weights on every backend (0/1 participation masks, data-size
+    proportional weights, EF mask * scale). ``backend``:
+
+      auto    Pallas kernel on TPU, wire.unpack_sum elsewhere (the CPU
+              LUT-gather path, bit-identical to the kernel)
+      pallas  force the fused kernel (interpret mode off-TPU)
+      jnp     force wire.unpack_sum
+      dense   legacy dense-matrix path (wire.unpack_sum_dense) — oracle and
+              benchmark baseline only
+
+    (wire.unpack_sum_mask is a further popcount specialization for weights
+    KNOWN to be 0/1; it is deliberately not dispatched here because the
+    membership contract cannot be checked on traced values.)
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "pallas":
+        from repro.kernels.zsign import ops as K
+        return K.sign_reduce(packed, weights)
+    if backend == "dense":
+        return wire.unpack_sum_dense(packed, weights)
+    if backend != "jnp":
+        raise ValueError(f"unknown agg backend {backend!r}; "
+                         f"expected one of {AGG_BACKENDS}")
+    return unpack_sum(packed, weights)
 
 
 def global_norm(tree) -> jax.Array:
@@ -106,6 +157,7 @@ class ZSignCompressor(Compressor):
     sigma: float = 0.01
     wire_bits_per_coord: float = 1.0
     name: str = "zsign"
+    agg_backend: str = "auto"   # sign_reduce backend for server aggregation
 
     def wire_format(self) -> WireFormat:
         return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked")
@@ -122,7 +174,7 @@ class ZSignCompressor(Compressor):
 
     def aggregate(self, payload, mask, n_coords):
         del n_coords
-        return unpack_sum(payload, mask)
+        return sign_reduce(payload, mask, self.agg_backend)
 
     def decode_mean(self, flat_mean, sigma=None):
         if sigma is None:
@@ -139,6 +191,7 @@ class StoSignCompressor(Compressor):
     Bitpacked 1-bit wire format."""
     wire_bits_per_coord: float = 1.0
     name: str = "stosign"
+    agg_backend: str = "auto"
 
     def wire_format(self) -> WireFormat:
         return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked")
@@ -151,7 +204,7 @@ class StoSignCompressor(Compressor):
 
     def aggregate(self, payload, mask, n_coords):
         del n_coords
-        return unpack_sum(payload, mask)
+        return sign_reduce(payload, mask, self.agg_backend)
 
     def decode_mean(self, flat_mean, sigma=None):
         # majority-vote style: server applies its own stepsize to mean sign.
@@ -174,6 +227,7 @@ class EFSignCompressor(Compressor):
     wire_bits_per_coord: float = 1.0
     name: str = "efsign"
     use_kernel: bool = False   # fused Pallas EF step (kernels/efsign)
+    agg_backend: str = "auto"
 
     def wire_format(self) -> WireFormat:
         return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked+scale")
@@ -198,8 +252,11 @@ class EFSignCompressor(Compressor):
         return {"packed": packed, "scale": scale}, res
 
     def aggregate(self, payload, mask, n_coords):
+        # weights = mask * per-client scale: the fused reduce handles the
+        # scale-weighted sum directly in the compressed domain.
         del n_coords
-        return unpack_sum(payload["packed"], mask * payload["scale"])
+        return sign_reduce(payload["packed"], mask * payload["scale"],
+                           self.agg_backend)
 
     def decode_mean(self, flat_mean, sigma=None):
         del sigma
@@ -239,8 +296,17 @@ class TopKCompressor(Compressor):
     """Beyond-paper sparsifier baseline: keep the top-k fraction of the flat
     buffer by magnitude (GLOBAL top-k across all tensors) with per-client
     error feedback. COO wire format: (values, indices), 64*frac bits/coord.
+
+    Selection runs as a two-stage chunked top-k when d exceeds ``chunk``:
+    per-chunk ``lax.top_k`` candidates, then a final top-k over the
+    candidate pool — O(d log k / chunk)-ish work instead of one full-buffer
+    sort-like pass over all d coordinates, and exactly equivalent to the
+    single-stage selection (every global top-k element is in its own chunk's
+    top-k; tie-breaking by lowest index is preserved because candidates are
+    ordered by (chunk, rank) — verified exhaustively in tests).
     """
     frac: float = 0.01
+    chunk: int = 65536  # two-stage selection above this many coordinates
     wire_bits_per_coord: float = 0.64  # overwritten in __post_init__
     name: str = "topk"
 
@@ -254,11 +320,27 @@ class TopKCompressor(Compressor):
     def init_state(self, n_coords: int):
         return jnp.zeros((n_coords,), jnp.float32)
 
+    def _select(self, score: jax.Array, k: int) -> jax.Array:
+        """Indices of the k largest scores (ties -> lowest index first)."""
+        d = score.shape[0]
+        if d <= self.chunk or k >= self.chunk:
+            _, idx = jax.lax.top_k(score, k)
+            return idx
+        n_chunks = -(-d // self.chunk)
+        pad = n_chunks * self.chunk - d
+        s = jnp.pad(score, (0, pad), constant_values=-jnp.inf)
+        cand_val, cand_idx = jax.lax.top_k(s.reshape(n_chunks, self.chunk), k)
+        base = (jnp.arange(n_chunks, dtype=cand_idx.dtype)[:, None]
+                * self.chunk)
+        cand_idx = (cand_idx + base).reshape(-1)
+        _, sel = jax.lax.top_k(cand_val.reshape(-1), k)
+        return cand_idx[sel]
+
     def encode(self, key, flat, state, sigma=None):
         del key, sigma
         p = flat + state
         k = max(1, int(p.shape[0] * self.frac))
-        _, idx = jax.lax.top_k(jnp.abs(p), k)
+        idx = self._select(jnp.abs(p), k)
         return {"values": p[idx], "indices": idx}, p.at[idx].set(0.0)
 
     def aggregate(self, payload, mask, n_coords):
@@ -288,9 +370,11 @@ class DPGaussianCompressor(Compressor):
 @dataclasses.dataclass(frozen=True)
 class PackedZSignCompressor(ZSignCompressor):
     """z-sign through the Pallas TPU kernels (kernels/zsign): encode fuses
-    noise-add + sign + 8:1 bitpack into one VMEM pass; the server unpack+sum
-    runs the companion kernel per client row. Bit-for-bit identical wire
-    bytes to the pure-jnp ``pack_flat`` path (verified in tests), just fused.
+    noise-add + sign + 8:1 bitpack into one VMEM pass; server aggregation is
+    the fused ``sign_reduce`` weighted reduce (one kernel launch for the
+    whole client stack — inherited from ZSignCompressor, NOT a per-client-row
+    kernel dispatch). Bit-for-bit identical wire bytes to the pure-jnp
+    ``pack_flat`` path (verified in tests), just fused.
     Payload is uint8 of ceil(d/8192)*1024 bytes (kernel tile padding; the
     logical cost stays 1 bit/coord — see wire.py accounting notes).
     """
@@ -301,14 +385,6 @@ class PackedZSignCompressor(ZSignCompressor):
         sig = self.sigma if sigma is None else sigma
         noise = znoise.sample_z_noise(key, flat.shape, self.z)
         return K.zsign_compress(flat, noise, sig), state
-
-    def aggregate(self, payload, mask, n_coords):
-        from repro.kernels.zsign import ops as K
-        del n_coords
-        n, nb = payload.shape
-        signs = jax.vmap(
-            lambda row: K.zsign_decompress_sum(row[None], nb * 8))(payload)
-        return jnp.einsum("nd,n->d", signs, mask)
 
 
 _REGISTRY = {

@@ -7,7 +7,8 @@ One *round step* is a single jitted function:
         -> flatten ONCE to a 1-D fp32 wire buffer (core/wire.TreeSpec)
         -> compressor.encode  (the bitpacked 1-bit uplink payload)
     -> participation-masked flat aggregation over the client axis
-       (uint8 collective + unpack-sum == the compressed all-reduce)
+       (uint8 collective + fused weighted sign-reduce == the compressed
+       all-reduce; sign families never re-inflate the dense sign matrix)
     -> compressor.decode_mean -> unflatten ONCE -> server optimizer update.
 
 The engine never touches per-leaf encodings: every compressor speaks the flat
@@ -93,7 +94,7 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
                      *, dynamic_sigma: bool = False,
                      param_constraint: Optional[Callable] = None,
                      wire_constraint: Optional[Callable] = None,
-                     spmd_axes=None):
+                     spmd_axes=None, agg_backend: Optional[str] = None):
     """Returns round_step(state, batch, mask) -> (state, RoundMetrics).
 
     loss_fn(params, batch_slice) -> scalar loss. ``batch`` is a pytree whose
@@ -106,7 +107,13 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
     smaller than the params and feeds one collective) so the unflatten back
     to sharded parameter layouts is a local slice, never a reshard (see
     launch/sharding.py wire_state_specs for the per-client residual layout).
+    ``agg_backend`` overrides the sign-family server-aggregation backend
+    ("auto" | "jnp" | "pallas" | "dense" — see compression.sign_reduce) on
+    compressors that expose one; launchers thread their CLI selector here.
     """
+    if agg_backend is not None and any(
+            f.name == "agg_backend" for f in dataclasses.fields(compressor)):
+        compressor = dataclasses.replace(compressor, agg_backend=agg_backend)
     opt = _server_optimizer(cfg)
     gamma = cfg.client_lr
     constrain = param_constraint or (lambda t: t)

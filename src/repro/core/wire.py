@@ -18,6 +18,14 @@ Key pieces:
                    the pure-jnp 8:1 bitpack shared by every sign-family
                    compressor (the Pallas kernel in kernels/zsign is the
                    fused fast path, bit-for-bit identical — see tests).
+  ``unpack_sum`` / ``unpack_sum_mask``
+                   the server side of the 1-bit uplink: weighted sign sum
+                   computed directly on the packed bytes (butterfly bit-
+                   transpose, then weighted-LUT gather / popcount), never
+                   materializing the dense (n_clients, d) fp32 sign matrix.
+                   These are the CPU paths; the Pallas ``sign_reduce`` kernel
+                   (kernels/zsign) is the TPU fast path, bit-identical by
+                   construction (same blocked client accumulation order).
 
 Wire-size accounting: ``WireFormat.bits_per_coord`` is the *logical* cost per
 model coordinate (1.0 for bitpacked signs, 32.0 for dense fp32, 64*frac for
@@ -143,8 +151,129 @@ def pack_flat(flat: jax.Array) -> jax.Array:
     return pack_signs(jnp.where(y >= 0, jnp.int8(1), jnp.int8(-1)))
 
 
+# Clients per accumulation block. MUST match kernels/zsign/zsign.CLIENT_BLK:
+# the jnp fallback below accumulates in the same blocked client order as the
+# Pallas sign_reduce kernel, so the CPU path and the TPU kernel produce
+# bit-identical f32 sums for ANY per-client weights (not just 0/1 masks).
+SIGN_REDUCE_CLIENT_BLK = 8
+
+
+def _bit_transpose_blocks(pm: jax.Array, n_blocks: int,
+                          n_bytes: int) -> jax.Array:
+    """(n_blocks*8, n_bytes) u8 -> (n_blocks, 8, n_bytes) u8 bitplanes.
+
+    Three butterfly stages (Hacker's Delight 7-3, vectorized over all bytes)
+    transpose each block's 8x8 bit tile: plane k's byte j holds, in bit i,
+    bit k of client i's byte j — i.e. one byte now carries 8 CLIENTS' bits
+    for a single coordinate. ~24 u8 passes over the wire bytes, no
+    per-coordinate expansion.
+    """
+    u8 = jnp.uint8
+    x = pm.reshape(n_blocks, 2, 2, 2, n_bytes)
+    t, b = x[:, 0], x[:, 1]
+    x = jnp.stack([(t & u8(0x0F)) | ((b & u8(0x0F)) << 4),
+                   ((t & u8(0xF0)) >> 4) | (b & u8(0xF0))], axis=1)
+    t, b = x[:, :, 0], x[:, :, 1]
+    x = jnp.stack([(t & u8(0x33)) | ((b & u8(0x33)) << 2),
+                   ((t & u8(0xCC)) >> 2) | (b & u8(0xCC))], axis=2)
+    t, b = x[:, :, :, 0], x[:, :, :, 1]
+    x = jnp.stack([(t & u8(0x55)) | ((b & u8(0x55)) << 1),
+                   ((t & u8(0xAA)) >> 1) | (b & u8(0xAA))], axis=3)
+    return x.reshape(n_blocks, 8, n_bytes)
+
+
 def unpack_sum(packed: jax.Array, weights: jax.Array) -> jax.Array:
     """(n_clients, n_bytes) u8, (n_clients,) f32 -> (8*n_bytes,) weighted sum
-    of the +/-1 signs — the server side of the 1-bit all-gather."""
+    of the +/-1 signs — the server side of the 1-bit all-gather.
+
+    LUT over transposed bitplanes: each block of 8 clients is bit-TRANSPOSED
+    (``_bit_transpose_blocks``) so one byte holds the block's 8 sign bits for
+    a single coordinate, then a per-block 256-entry table
+    ``LUT[v] = sum_i (bit i of v ? +w_i : -w_i)`` turns the weighted
+    8-client reduce into one cache-resident gather per coordinate. The dense
+    (n_clients, d) fp32 sign matrix (32 bits/coord/client) that the
+    pre-fused server decode materialized never exists — the fp32 working set
+    is the output-sized accumulator only (~5-10x faster than the dense path
+    on CPU at n_clients >= 32; see BENCH_kernels.json / BENCH_round.json). Dead clients
+    (weight 0) contribute exactly 0.
+
+    Accumulation order mirrors the Pallas ``sign_reduce`` kernel: clients
+    are padded to SIGN_REDUCE_CLIENT_BLK with zero weight, the in-block
+    8-element reduce happens at LUT build time in client order, and block
+    partials are added sequentially — bit-exact vs the kernel for ANY fp32
+    weights (verified in tests/test_sign_reduce.py), exact vs any order for
+    0/1 masks (integer sums), and within 1 ulp/client of the legacy dense
+    path (``unpack_sum_dense``).
+    """
+    n, n_bytes = packed.shape
+    blk = SIGN_REDUCE_CLIENT_BLK
+    cpad = (-n) % blk
+    if cpad:
+        packed = jnp.pad(packed, ((0, cpad), (0, 0)))
+    w = weights.astype(jnp.float32)
+    if cpad:
+        w = jnp.pad(w, (0, cpad))
+    n_blocks = (n + cpad) // blk
+    planes = _bit_transpose_blocks(packed, n_blocks, n_bytes)
+    v = jnp.arange(256, dtype=jnp.uint8)
+    vbits = ((v[:, None] >> jnp.arange(8, dtype=jnp.uint8))
+             & jnp.uint8(1)) > 0                            # (256, 8)
+    wb = w.reshape(n_blocks, blk)
+    lut = jnp.sum(jnp.where(vbits[None], wb[:, None, :], -wb[:, None, :]),
+                  axis=-1)                                  # (n_blocks, 256)
+    acc = jnp.take(lut[0], planes[0].astype(jnp.int32), axis=0)   # (8, nb)
+    for b in range(1, n_blocks):
+        acc = acc + jnp.take(lut[b], planes[b].astype(jnp.int32), axis=0)
+    # acc[k, byte] is the weighted sum for coordinate byte*8 + k
+    return jnp.swapaxes(acc, 0, 1).reshape(-1)
+
+
+def unpack_sum_mask(packed: jax.Array, mask: jax.Array) -> jax.Array:
+    """(n_clients, n_bytes) u8, (n_clients,) 0/1 mask -> (8*n_bytes,) f32
+    masked sum of the +/-1 signs — the popcount fast path.
+
+    For membership weights the weighted sum collapses to an integer bit
+    count: sum_live(2b - 1) = 2*count - n_live. The count is computed
+    entirely in the uint8 wire domain: dead clients' bytes are zeroed, each
+    block of 8 clients is bit-TRANSPOSED in three butterfly stages (Hacker's
+    Delight 7-3, vectorized over all bytes) so one byte holds 8 clients'
+    bits for a single coordinate, then ``lax.population_count`` + a tiny
+    cross-block add yield the per-coordinate count. ~24 u8 passes over the
+    wire bytes total — no per-coordinate expansion to int8/fp32 at all
+    (~9x over the dense path on CPU at n_clients = 32, on par with the
+    weighted LUT gather of ``unpack_sum``; see BENCH_kernels.json). Exact
+    by construction (integer counts), so it is bit-identical to
+    ``unpack_sum``, ``unpack_sum_dense`` and the Pallas kernel for any 0/1
+    mask.
+
+    The mask is treated as MEMBERSHIP (w > 0 participates); fractional
+    weights must use :func:`unpack_sum`. Because that contract cannot be
+    checked on traced values, compressors do NOT dispatch here — this is an
+    opt-in specialization for call sites that guarantee a 0/1 mask (and the
+    wire-level benchmark of the popcount technique in benchmarks/run.py).
+    """
+    n, n_bytes = packed.shape
+    pm = packed * (mask > 0).astype(jnp.uint8)[:, None]
+    cpad = (-n) % 8
+    if cpad:
+        pm = jnp.pad(pm, ((0, cpad), (0, 0)))
+    n_blocks = (n + cpad) // 8
+    planes = _bit_transpose_blocks(pm, n_blocks, n_bytes)
+    cnt = jax.lax.population_count(planes)          # (blocks, 8, n_bytes) u8
+    acc_dtype = jnp.uint8 if n <= 255 else jnp.int32
+    c = jnp.sum(cnt, axis=0, dtype=acc_dtype) if n_blocks > 1 else cnt[0]
+    # c[k, byte] counts set bit-k across live clients; coord = byte*8 + k
+    bitsum = jnp.swapaxes(c, 0, 1).reshape(-1).astype(jnp.float32)
+    return 2.0 * bitsum - jnp.sum(mask)
+
+
+def unpack_sum_dense(packed: jax.Array, weights: jax.Array) -> jax.Array:
+    """Legacy dense-matrix weighted sign sum (pre-fused server decode).
+
+    Materializes the full (n_clients, d) fp32 sign matrix before the einsum
+    — a 32x working-set blowup over the wire bytes. Kept ONLY as the oracle
+    for the sign-reduce equivalence tests and as the "old" side of the
+    ``fed_round_step`` benchmark; no production path calls it.
+    """
     signs = jax.vmap(unpack_signs)(packed).astype(jnp.float32)
     return jnp.einsum("nd,n->d", signs, weights)

@@ -1,1 +1,2 @@
-from repro.kernels.zsign.ops import zsign_compress, zsign_decompress_sum  # noqa: F401
+from repro.kernels.zsign.ops import (sign_reduce, zsign_compress,  # noqa: F401
+                                     zsign_decompress_sum)

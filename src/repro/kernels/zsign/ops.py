@@ -41,6 +41,32 @@ def zsign_compress(x: jax.Array, noise: jax.Array, sigma,
     return packed.reshape(-1)
 
 
+@partial(jax.jit, static_argnames=("interpret",))
+def sign_reduce(packed: jax.Array, weights: jax.Array,
+                *, interpret: bool | None = None) -> jax.Array:
+    """Fused weighted sign-reduce: (n_clients, n_bytes) u8 + (n_clients,)
+    f32 -> (8*n_bytes,) f32 weighted sum of the +/-1 signs.
+
+    ONE kernel launch for the whole client stack (clients folded into the
+    grid, VMEM accumulator per output tile) — replaces the per-client-row
+    vmap over ``zsign_decompress_sum``. Clients are padded to CLIENT_BLK
+    with zero weight, bytes to the (ROWS_BLK * LANE) tile; both pads
+    contribute exactly 0.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    n, nbytes = packed.shape
+    bpad = (-nbytes) % (K.ROWS_BLK * K.LANE)
+    cpad = (-n) % K.CLIENT_BLK
+    if bpad or cpad:
+        packed = jnp.pad(packed, ((0, cpad), (0, bpad)))
+    w = weights.astype(jnp.float32)
+    if cpad:
+        w = jnp.pad(w, (0, cpad))
+    p3 = packed.reshape(n + cpad, -1, K.LANE)
+    s = K.sign_reduce_pallas(p3, w.reshape(-1, 1), interpret=interpret)
+    return s.reshape(-1)[: nbytes * 8]
+
+
 @partial(jax.jit, static_argnames=("n_coords", "interpret"))
 def zsign_decompress_sum(packed: jax.Array, n_coords: int,
                          *, interpret: bool | None = None) -> jax.Array:

@@ -26,3 +26,17 @@ def zsign_decompress_sum_ref(packed: jax.Array) -> jax.Array:
     bits = (packed[..., None] & weights) > 0                  # (n, L/8, 8)
     pm = jnp.where(bits, 1.0, -1.0).reshape(n, -1)
     return jnp.sum(pm, axis=0)
+
+
+def sign_reduce_ref(packed: jax.Array, weights: jax.Array) -> jax.Array:
+    """Dense-matrix oracle for the fused weighted sign-reduce.
+
+    (n_clients, L/8) uint8 + (n_clients,) f32 -> (L,) f32 weighted sum of
+    {-1,+1}, deliberately materializing the full (n_clients, L) fp32 sign
+    matrix — the thing the production paths must never do.
+    """
+    n = packed.shape[0]
+    bit_w = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    bits = (packed[..., None] & bit_w) > 0                    # (n, L/8, 8)
+    pm = jnp.where(bits, 1.0, -1.0).reshape(n, -1)
+    return jnp.einsum("nd,n->d", pm, weights.astype(jnp.float32))

@@ -1,11 +1,19 @@
 """Pallas TPU kernels for z-SignFedAvg's compression hot path.
 
-Two kernels:
+Three kernels:
 
   _compress_kernel:  y = x + sigma*noise; pack Sign(y) bits -> uint8
                      (fused elementwise + 8:1 bitpack; 1 byte out per 8 in)
   _unpack_sum_kernel: (n_clients, ...) packed uint8 -> sum of {-1,+1} fp32
-                     (the server-side aggregation after the 1-bit all-gather)
+                     (legacy whole-stack unpack; kept as kernel oracle)
+  _sign_reduce_kernel: (n_clients, ...) packed uint8 + (n_clients,) fp32
+                     weights -> weighted sum of {-1,+1} fp32, with the client
+                     axis folded into the grid and a VMEM accumulator per
+                     output tile. This is the fused server aggregation: the
+                     dense (n_clients, d) fp32 sign matrix never exists —
+                     each grid step expands one CLIENT_BLK x tile slab of
+                     wire bytes in VMEM, multiplies by the per-client
+                     weights, and accumulates into the revisited output tile.
 
 TPU adaptation notes (DESIGN.md §2): the compressor is bandwidth-bound
 elementwise work, so the kernels stream HBM->VMEM in (ROWS_BLK, 1024) tiles
@@ -27,6 +35,7 @@ LANE = 128
 PACK = 8
 COLS = LANE * PACK          # 1024 elements per row
 ROWS_BLK = 8                # 8192 elements per block
+CLIENT_BLK = 8              # clients per sign-reduce grid step
 
 
 def _compress_kernel(x_ref, n_ref, sig_ref, o_ref):
@@ -78,3 +87,48 @@ def unpack_sum_pallas(packed: jax.Array, *, interpret: bool) -> jax.Array:
         out_shape=jax.ShapeDtypeStruct((rows, COLS), jnp.float32),
         interpret=interpret,
     )(packed)
+
+
+def _sign_reduce_kernel(p_ref, w_ref, o_ref):
+    c = pl.program_id(1)
+    p = p_ref[...]                                   # (CB, R, 128) u8
+    w = w_ref[...].reshape(-1, 1, 1, 1)              # (CB, 1, 1, 1) f32
+    bitw = (jnp.uint8(1) << jnp.arange(PACK, dtype=jnp.uint8))
+    bits = (p[..., None] & bitw) > 0                 # (CB, R, 128, 8)
+    pm = jnp.where(bits, jnp.float32(1), jnp.float32(-1))
+    part = jnp.sum(pm * w, axis=0)                   # (R, 128, 8)
+    part = part.reshape(part.shape[0], COLS)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(c != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + part
+
+
+def sign_reduce_pallas(packed: jax.Array, weights: jax.Array,
+                       *, interpret: bool) -> jax.Array:
+    """packed: (n_clients, rows, 128) u8, weights: (n_clients, 1) f32 ->
+    (rows, 1024) f32 weighted sum of signs.
+
+    n_clients % CLIENT_BLK == 0 and rows % ROWS_BLK == 0 (caller pads; dead
+    or padded clients carry weight 0 and contribute exactly 0). The client
+    axis is the INNER grid dimension, so each output tile stays resident in
+    VMEM while every client block streams past it — the server's working set
+    is one wire slab + one fp32 tile, never the (n_clients, d) sign matrix.
+    """
+    n, rows, _ = packed.shape
+    grid = (rows // ROWS_BLK, n // CLIENT_BLK)
+    return pl.pallas_call(
+        _sign_reduce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((CLIENT_BLK, ROWS_BLK, LANE), lambda i, c: (c, i, 0)),
+            pl.BlockSpec((CLIENT_BLK, 1), lambda i, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_BLK, COLS), lambda i, c: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, COLS), jnp.float32),
+        interpret=interpret,
+    )(packed, weights.astype(jnp.float32))

@@ -56,7 +56,7 @@ def _dryrun_model(arch, shape):
     return arch.model
 
 
-def build_train_cell(arch, shape, mesh):
+def build_train_cell(arch, shape, mesh, agg_backend="auto"):
     """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
     arch = __import__("dataclasses").replace(arch, model=_dryrun_model(arch, shape))
     bundle = build_model(arch.model)
@@ -82,7 +82,8 @@ def build_train_cell(arch, shape, mesh):
         bundle.loss_fn, comp, fcfg,
         spmd_axes=(plan.client_axes if plan.client_axes else None),
         param_constraint=param_constraint,
-        wire_constraint=lambda f: jax.lax.with_sharding_constraint(f, rep))
+        wire_constraint=lambda f: jax.lax.with_sharding_constraint(f, rep),
+        agg_backend=agg_backend)
 
     state_shapes = jax.eval_shape(
         lambda p: fedavg.init_server_state(p, fcfg, comp,
@@ -103,8 +104,10 @@ def build_train_cell(arch, shape, mesh):
         (plan.client_groups, plan.n_clients), jnp.float32)
     mask_sh = NamedSharding(mesh, P(None, SH._axes_entry(plan.client_axes)))
 
+    # donate the server state: in-place params/opt/residual update shows up
+    # in the compiled memory analysis as aliased buffers, not copies
     fn = jax.jit(step, in_shardings=(state_sh, bsh, mask_sh),
-                 out_shardings=(state_sh, rep))
+                 out_shardings=(state_sh, rep), donate_argnums=0)
     return fn, (state_shapes, batch_shapes, mask_shape), plan
 
 
@@ -334,7 +337,8 @@ def analyze(fn, arg_shapes, mesh, label: str) -> dict:
     return res
 
 
-def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool) -> dict:
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             agg_backend: str = "auto") -> dict:
     arch = get_arch(arch_id)
     shape = SHAPES[shape_name]
     bundle = build_model(arch.model)
@@ -345,7 +349,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool) -> dict:
     plan0 = SH.make_plan(arch, shape, mesh)
     with mesh, sharding_hints(mesh, plan0.seq_axes, plan0.micro_axes):
         if shape.kind == "train":
-            fn, args, plan = build_train_cell(arch, shape, mesh)
+            fn, args, plan = build_train_cell(arch, shape, mesh, agg_backend)
         elif shape.kind == "prefill":
             fn, args, plan = build_prefill_cell(arch, shape, mesh)
         else:
@@ -379,6 +383,8 @@ def main():
     ap.add_argument("--shape", default="all")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--agg-backend", default="auto",
+                    choices=list(compression.AGG_BACKENDS))
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -391,7 +397,8 @@ def main():
         for shape_name in shapes:
             for mp in meshes:
                 try:
-                    res = run_cell(arch_id, shape_name, multi_pod=mp)
+                    res = run_cell(arch_id, shape_name, multi_pod=mp,
+                                   agg_backend=args.agg_backend)
                 except Exception as e:  # record the failure, keep sweeping
                     res = {"label": f"{arch_id}/{shape_name}/"
                            f"{'multi' if mp else 'single'}",

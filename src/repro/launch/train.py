@@ -40,6 +40,11 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--compressor", default="zsign",
                     choices=list(compression.available()))
+    ap.add_argument("--agg-backend", default="auto",
+                    choices=list(compression.AGG_BACKENDS),
+                    help="sign-family server aggregation backend "
+                         "(auto = Pallas kernel on TPU, bit-sliced jnp "
+                         "elsewhere)")
     ap.add_argument("--z", type=int, default=1, help="1=Gaussian, 0=uniform")
     ap.add_argument("--sigma", type=float, default=0.01,
                     help="z-sign noise scale / dpgauss noise stddev")
@@ -73,8 +78,12 @@ def main():
     cfg = fedavg.FedConfig(n_clients=args.clients, client_groups=args.groups,
                            local_steps=args.local_steps,
                            client_lr=args.client_lr, server_lr=args.server_lr)
+    # donate the server state: params + opt state + residual buffers update
+    # in place on device instead of being copied every round
     step = jax.jit(fedavg.build_round_step(bundle.loss_fn, comp, cfg,
-                                           dynamic_sigma=args.plateau))
+                                           dynamic_sigma=args.plateau,
+                                           agg_backend=args.agg_backend),
+                   donate_argnums=0)
 
     params = bundle.init(jax.random.PRNGKey(0))
     n_params = sum(p.size for p in jax.tree_util.tree_leaves(params))

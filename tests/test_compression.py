@@ -262,6 +262,49 @@ def test_efsign_zero_coord_residual_matches_wire():
                                atol=1e-6)
 
 
+@pytest.mark.parametrize("d,frac,chunk", [
+    (100, 0.1, 16), (100, 0.25, 32), (257, 0.05, 64), (1000, 0.013, 128),
+    (64, 0.5, 16),
+])
+def test_topk_chunked_exact_equivalence_small_d(d, frac, chunk):
+    """Two-stage chunked selection == single full-buffer lax.top_k exactly,
+    including tie-breaking (quantized values force cross-chunk ties)."""
+    rng = np.random.RandomState(d + chunk)
+    # heavy quantization -> many exact ties across chunks
+    p = jnp.asarray(np.round(rng.randn(d) * 2) / 2, jnp.float32)
+    comp = C.TopKCompressor(name="topk", frac=frac, chunk=chunk)
+    ref = C.TopKCompressor(name="topk", frac=frac, chunk=1 << 62)
+    k = max(1, int(d * frac))
+    idx = comp._select(jnp.abs(p), k)
+    _, idx_ref = jax.lax.top_k(jnp.abs(p), k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
+    # full encode path (values + EF residual) identical too
+    e1, s1 = comp.encode(None, p, comp.init_state(d))
+    e2, s2 = ref.encode(None, p, ref.init_state(d))
+    np.testing.assert_array_equal(np.asarray(e1["indices"]),
+                                  np.asarray(e2["indices"]))
+    np.testing.assert_array_equal(np.asarray(e1["values"]),
+                                  np.asarray(e2["values"]))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_topk_chunked_distribution_large_d():
+    """Large d (two-stage path active at the default chunk): the selected
+    set is exactly the true top-k value multiset."""
+    d = 300_000
+    comp = C.TopKCompressor(name="topk", frac=0.001)
+    assert d > comp.chunk  # the chunked path actually runs
+    p = jnp.asarray(np.random.RandomState(0).randn(d), jnp.float32)
+    e, _ = comp.encode(None, p, comp.init_state(d))
+    k = max(1, int(d * comp.frac))
+    want = np.sort(np.partition(np.abs(np.asarray(p)), -k)[-k:])[::-1]
+    np.testing.assert_allclose(np.sort(np.abs(np.asarray(e["values"])))[::-1],
+                               want)
+    # indices consistent with values
+    np.testing.assert_allclose(np.asarray(p)[np.asarray(e["indices"])],
+                               np.asarray(e["values"]))
+
+
 def test_efsign_scale_weighted_aggregate():
     """EF aggregation weights each client's signs by its own fp32 scale."""
     comp = C.make_compressor("efsign")

@@ -186,11 +186,14 @@ def test_stateful_masked_groups_match_vmap_path():
         st1, _ = step1(st1, {"y": y}, mask)
         st2, _ = step2(st2, {"y": y.reshape(2, 4, 1, d)},
                        mask.reshape(2, 4))
+    # group-split equivalence is exact only up to f32 association: the scan
+    # path adds two 4-client partial sums while the vmap path reduces all 8
+    # clients at once, and efsign's weights are per-client fp32 scales
     np.testing.assert_allclose(np.asarray(st1.params["x"]),
-                               np.asarray(st2.params["x"]), rtol=1e-5)
+                               np.asarray(st2.params["x"]), rtol=5e-5)
     np.testing.assert_allclose(
         np.asarray(st1.comp_state).reshape(8, -1),
-        np.asarray(st2.comp_state).reshape(8, -1), rtol=1e-5)
+        np.asarray(st2.comp_state).reshape(8, -1), rtol=5e-5)
 
 
 def test_uplink_bits_zsign_vs_identity():
