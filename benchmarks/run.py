@@ -16,8 +16,11 @@ perf-trajectory files every later perf PR is compared against:
   fig17_dp               Fig. 17 DP-SignFedAvg vs DP-FedAvg across eps
   table2_bits            Table 2 uplink bits per round per algorithm
   kernel_throughput      compression kernel us/call + bytes moved
+  client_encode          client encode: dense draw vs counter-based fused,
+                         per backend and per z (rows in BENCH_kernels.json)
   fed_round_step         full jitted round + server aggregation wall-clock,
-                         legacy dense-matrix vs fused sign-reduce
+                         legacy dense round (dense noise draw + dense
+                         sign-matrix aggregation) vs fully-fused
 """
 from __future__ import annotations
 
@@ -249,71 +252,112 @@ def table2_bits(fast=False):
         emit("table2_bits", f"{name}_wire", f"{wf.layout}/{wf.dtype}")
 
 
-def _time_donated_rounds(step, state, batch, mask, iters, warmup):
+def _time_donated_rounds(step, state, batch, mask, iters, warmup, reps=3):
     """Time a donated round step by threading the state through (the donated
-    input is consumed each call, so the loop must carry it)."""
+    input is consumed each call, so the loop must carry it). Reports the
+    BEST of ``reps`` timed windows — the standard robust timer on a small
+    shared box, where a background burst inside any single window would
+    otherwise dominate the mean."""
     for _ in range(warmup):
         state, m = step(state, batch, mask)
     jax.block_until_ready((state, m))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        state, m = step(state, batch, mask)
-    jax.block_until_ready((state, m))
-    return (time.perf_counter() - t0) / iters * 1e6
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, m = step(state, batch, mask)
+        jax.block_until_ready((state, m))
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
 
 
 def fed_round_step(fast=False):
     """Wall-clock of one jitted federated round (realistic MLP, n_clients
-    sweep): legacy dense-sign-matrix aggregation vs the fused sign-reduce
-    path, plus the isolated server-aggregation step on the same payload
-    shapes. This is the perf baseline later PRs are compared against."""
+    sweep): the fully-dense legacy round (dense noise draw on the client +
+    dense-sign-matrix aggregation on the server) vs the fully-fused round
+    (counter-based fused encode + fused sign-reduce), plus the isolated
+    server-aggregation step on the same payload shapes and a
+    client_groups > 1 pair exercising the compressed-domain group scan.
+    This is the perf baseline later PRs are compared against."""
     from repro.core import wire
-    dim, classes, width = 256, 10, (128 if fast else 512)
+    # width 1024 (~1.3M coords, PR 3; PR 2 ran width 512 / 0.4M): at 512 the
+    # per-client matmuls are too small to use even a 2-core box, so engine
+    # overheads — identical on both paths — drowned the compression terms
+    # this benchmark exists to compare.
+    dim, classes, width = 256, 10, (128 if fast else 1024)
     init, loss_fn, _ = mlp_loss_builder(dim, classes, width=width)
     params = init(jax.random.PRNGKey(0))
     d = sum(p.size for p in jax.tree_util.tree_leaves(params))
     emit("fed_round_step", "model_coords", d)
     micro = 8
-    iters, warmup = (3, 1) if fast else (10, 3)
-    for n in ([8, 32] if fast else [8, 32, 64]):
-        cfg = fedavg.FedConfig(n_clients=n, client_lr=0.05,
+    iters, warmup = (3, 1) if fast else (5, 2)
+
+    def time_round(n, groups, agg, enc, mask_flag=False, legacy=False):
+        cfg = fedavg.FedConfig(n_clients=n, client_groups=groups,
+                               client_lr=0.05,
                                server_lr=sign_slr(0.01, 1, 0.05, 0.05))
         kx, ky = jax.random.split(jax.random.PRNGKey(2))
-        batch = {"x": jax.random.normal(kx, (1, n, 1, micro, dim)),
-                 "y": jax.random.randint(ky, (1, n, 1, micro), 0, classes)}
-        mask = jnp.ones((1, n))
+        batch = {"x": jax.random.normal(kx, (groups, n, 1, micro, dim)),
+                 "y": jax.random.randint(ky, (groups, n, 1, micro), 0,
+                                         classes)}
+        mask = jnp.ones((groups, n))
+        comp = compression.make_compressor("zsign", z=1, sigma=0.05,
+                                           agg_backend=agg,
+                                           encode_backend=enc)
+        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg,
+                                               weights_are_mask=mask_flag,
+                                               legacy_client_path=legacy),
+                       donate_argnums=0)
+        # fresh param copies: the donated step consumes its state buffers
+        state = fedavg.init_server_state(
+            jax.tree.map(jnp.array, params), cfg, comp, jax.random.PRNGKey(1))
+        return _time_donated_rounds(step, state, batch, mask, iters, warmup)
+
+    # "dense" measures the full pre-PR3 round (dense noise draw + dense
+    # sign-matrix aggregation + legacy client step); "fused" is the current
+    # default path, so the speedup is the real round-over-round delta.
+    for n in ([8, 32] if fast else [8, 32, 64]):
         times = {}
-        for label, backend in [("dense", "dense"), ("fused", "auto")]:
-            comp = compression.make_compressor("zsign", z=1, sigma=0.05,
-                                               agg_backend=backend)
-            step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg),
-                           donate_argnums=0)
-            # fresh param copies: the donated step consumes its state buffers
-            state = fedavg.init_server_state(
-                jax.tree.map(jnp.array, params), cfg, comp,
-                jax.random.PRNGKey(1))
-            times[label] = _time_donated_rounds(step, state, batch, mask,
-                                                iters, warmup)
+        for label, (agg, enc) in [("dense", ("dense", "reference")),
+                                  ("fused", ("auto", "auto"))]:
+            times[label] = time_round(n, 1, agg, enc, legacy=(label == "dense"))
             emit("fed_round_step", f"round_{label}_us_n{n}",
                  round(times[label], 1))
         emit("fed_round_step", f"round_speedup_n{n}",
              round(times["dense"] / times["fused"], 2))
+        if n == 32:
+            t_mask = time_round(n, 1, "auto", "auto", mask_flag=True)
+            emit("fed_round_step", "round_fused_mask_us_n32",
+                 round(t_mask, 1))
 
         # isolated server aggregation on the same wire shapes: the term the
-        # fused path actually changes (the local-SGD compute above is
+        # fused agg backend actually changes (the local-SGD compute above is
         # backend-invariant).
         nb = -(-d // 8)
         payload = jax.random.randint(jax.random.PRNGKey(3), (n, nb), 0, 256,
                                      jnp.int32).astype(jnp.uint8)
         live = jnp.ones((n,), jnp.float32)
-        agg = {"dense": jax.jit(wire.unpack_sum_dense),
-               "fused": jax.jit(wire.unpack_sum)}
+        aggf = {"dense": jax.jit(wire.unpack_sum_dense),
+                "fused": jax.jit(wire.unpack_sum)}
         aus = {k: timeit(f, payload, live, iters=max(iters, 10),
-                         warmup=warmup + 2) for k, f in agg.items()}
+                         warmup=warmup + 2) for k, f in aggf.items()}
         for k, v in aus.items():
             emit("fed_round_step", f"agg_{k}_us_n{n}", round(v, 1))
         emit("fed_round_step", f"agg_speedup_n{n}",
              round(aus["dense"] / aus["fused"], 2))
+
+    # sequential client groups: the scan now stacks wire payloads and the
+    # server reduces the (G*N, n_bytes) stack once (cross-group working set
+    # 1 bit/coord) vs the legacy dense draw + dense per-group aggregation.
+    g, n = (2, 8) if fast else (4, 8)
+    tg = {}
+    for label, (agg, enc) in [("dense", ("dense", "reference")),
+                              ("fused", ("auto", "auto"))]:
+        tg[label] = time_round(n, g, agg, enc, legacy=(label == "dense"))
+        emit("fed_round_step", f"round_{label}_us_g{g}n{n}",
+             round(tg[label], 1))
+    emit("fed_round_step", f"round_speedup_g{g}n{n}",
+         round(tg["dense"] / tg["fused"], 2))
 
 
 def kernel_throughput(fast=False):
@@ -355,12 +399,60 @@ def kernel_throughput(fast=False):
     emit("kernel_throughput", f"sign_reduce_wire_bytes_n{n}_{size}", n * nb)
 
 
+def client_encode(fast=False):
+    """Client-side encode: dense jax.random draw + pack ("reference") vs the
+    fused counter-based paths, per backend and per z, on a realistic flat
+    buffer. The fused rows are what zsign/stosign/zsign_packed now run by
+    default; "jnp_chunked" is the bounded-memory scan variant; "pallas" runs
+    in interpret mode on CPU (correctness-path cost only — compiled numbers
+    need hardware)."""
+    size = 2 ** 16 if fast else 2 ** 20
+    iters, warmup = (3, 1) if fast else (20, 5)
+    x = jax.random.normal(jax.random.PRNGKey(0), (size,))
+    key = jax.random.PRNGKey(1)
+    emit("client_encode", "encode_coords", size)
+    for z, zname in [(1, "z1"), (0, "zinf")]:
+        times = {}
+        cases = [("reference", dict(encode_backend="reference")),
+                 ("fused_jnp", dict(encode_backend="jnp")),
+                 ("fused_jnp_chunked", dict(encode_backend="jnp",
+                                            encode_chunk_tiles=4))]
+        if not fast:
+            cases.append(("fused_pallas", dict(encode_backend="pallas")))
+        for label, kw in cases:
+            comp = compression.make_compressor("zsign", z=z, sigma=0.05, **kw)
+            fn = jax.jit(lambda k, f: comp.encode(k, f, None)[0])
+            us = timeit(fn, key, x, iters=(1 if label == "fused_pallas"
+                                           else iters), warmup=warmup)
+            times[label] = us
+            emit("client_encode", f"encode_{label}_us_{zname}_{size}",
+                 round(us, 1))
+            emit("client_encode", f"encode_{label}_GBps_{zname}_{size}",
+                 round(size * 4 / (us * 1e-6) / 1e9, 2))
+        emit("client_encode", f"encode_fused_speedup_{zname}_{size}",
+             round(times["reference"] / times["fused_jnp"], 2))
+    # stosign rides the z=inf fused path with sigma = ||flat||
+    for label, kw in [("reference", dict(encode_backend="reference")),
+                      ("fused_jnp", dict(encode_backend="jnp"))]:
+        comp = compression.make_compressor("stosign", **kw)
+        fn = jax.jit(lambda k, f: comp.encode(k, f, None)[0])
+        us = timeit(fn, key, x, iters=iters, warmup=warmup)
+        emit("client_encode", f"encode_stosign_{label}_us_{size}",
+             round(us, 1))
+
+
 BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
            fig5_local_steps, fig6_plateau, fig16_qsgd, fig17_dp, table2_bits,
-           kernel_throughput, fed_round_step]
+           kernel_throughput, client_encode, fed_round_step]
 
-_JSON_FILES = {"fed_round_step": "BENCH_round.json",
-               "kernel_throughput": "BENCH_kernels.json"}
+# several benches may merge into one JSON file (kernel + encode rows).
+# The key prefix ATTRIBUTES existing rows to their bench so a re-run bench
+# replaces ALL of its old rows (renamed/removed metrics included) while
+# other benches' rows survive a --only run; every metric a bench emits must
+# carry its prefix ("" = the file's default owner).
+_JSON_FILES = {"fed_round_step": ("BENCH_round.json", ""),
+               "kernel_throughput": ("BENCH_kernels.json", ""),
+               "client_encode": ("BENCH_kernels.json", "encode_")}
 
 
 def main() -> None:
@@ -379,11 +471,38 @@ def main() -> None:
         by = {}
         for name, metric, value in ROWS:
             by.setdefault(name, {})[metric] = value
-        for bench, path in _JSON_FILES.items():
+        ran_by_file = {}
+        for bench, (path, prefix) in _JSON_FILES.items():
             if bench in by:
-                with open(path, "w") as f:
-                    json.dump(by[bench], f, indent=1, sort_keys=True)
-                print(f"# wrote {path}")
+                ran_by_file.setdefault(path, []).append((bench, prefix))
+        for path, ran in ran_by_file.items():
+            prefixes = {pfx for b, (p, pfx) in _JSON_FILES.items()
+                        if p == path}
+
+            def owner(key):
+                # longest matching prefix wins ("" is the default owner)
+                best = ""
+                for pfx in prefixes:
+                    if pfx and key.startswith(pfx) and len(pfx) > len(best):
+                        best = pfx
+                return best
+
+            ran_prefixes = {pfx for _, pfx in ran}
+            merged = {}
+            try:
+                with open(path) as f:
+                    # keep only rows owned by benches that did NOT run —
+                    # a re-run bench replaces all of its rows, including
+                    # renamed or removed metrics
+                    merged = {k: v for k, v in json.load(f).items()
+                              if owner(k) not in ran_prefixes}
+            except (OSError, ValueError):
+                pass
+            for bench, _ in ran:
+                merged.update(by[bench])
+            with open(path, "w") as f:
+                json.dump(merged, f, indent=1, sort_keys=True)
+            print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -37,11 +37,33 @@ engine (core/fedavg.py) and launchers thread ``agg_backend`` through
 ``build_round_step`` so deployments can pin a backend without rebuilding
 compressors.
 
+The client encode side mirrors the server: every sign-family encode streams
+through a FUSED path selected by ``encode_backend`` ("auto" | "jnp" |
+"pallas" | "reference"). The fused paths derive their noise from a counter
+(threefry2x32 of the client key and the global element index — core/noise.py)
+and sample each wire bit directly from its exact Bernoulli law
+[u > 1 - P_z(x/sigma)] (the inverse-CDF coupling: identically distributed to
+Sign(x + sigma*xi_z), not an approximation), so the (d,) fp32 noise buffer —
+which the vmap over clients used to stack into an (n_clients, d) HBM surface
+32x the wire size — never exists. "pallas" generates the randomness inside
+each kernel grid tile (kernels/zsign ``zsign_encode_fused``; what the old
+"on real TPU the noise would be generated in-kernel" note promised, now
+real); "jnp" is ``fused_sign_encode_jnp``, bit-exact against the kernel for
+the same key (single elementwise fusion by default — XLA allocates no f32
+temp, verified by compiled-memory tests — or an explicitly chunked scan via
+``encode_chunk_tiles`` that bounds the live noise window to a few tiles);
+"auto" picks pallas on TPU, jnp elsewhere; "reference" keeps the dense
+jax.random draw as the statistical oracle. Finite z > 1 has no cheap inverse
+CDF and always takes the dense path. Sto-Sign reuses the z=inf fused path
+with sigma = ||flat|| computed as a prior reduction.
+
 Wire-size accounting: ``wire_bits_per_coord`` (mirrored in ``wire_format()``)
 is the logical uplink cost per model coordinate and is derived from the
 compressor's own hyper-parameters (e.g. 64*frac for top-k, ceil(log2(2s+1))
 for QSGD) — metrics multiply it by the true coordinate count, never by the
-padded buffer length.
+padded buffer length. Fused-encode payloads are tile-padded
+(ceil(d/8192)*1024 bytes, like the Pallas kernel); the logical cost stays
+1 bit/coord.
 """
 from __future__ import annotations
 
@@ -61,15 +83,83 @@ __all__ = [
     "Compressor", "ZSignCompressor", "StoSignCompressor", "EFSignCompressor",
     "QSGDCompressor", "TopKCompressor", "DPGaussianCompressor",
     "PackedZSignCompressor", "make_compressor", "available", "global_norm",
-    "pack_signs", "unpack_signs", "sign_reduce", "AGG_BACKENDS",
+    "pack_signs", "unpack_signs", "sign_reduce", "fused_sign_encode_jnp",
+    "AGG_BACKENDS", "ENCODE_BACKENDS",
 ]
 
 #: aggregation backends for the sign-family weighted reduce
 AGG_BACKENDS = ("auto", "jnp", "pallas", "dense")
 
+#: client-encode backends for the sign family ("reference" = dense draw)
+ENCODE_BACKENDS = ("auto", "jnp", "pallas", "reference")
+
+#: fused-encode tile, in elements. MUST equal kernels/zsign ops.TILE — the
+#: jnp fallback reproduces the kernel's per-tile counter stream (asserted in
+#: tests without importing the Pallas stack here).
+ENCODE_TILE = 8192
+
+
+def _resolve_encode_backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("jnp", "pallas", "reference"):
+        raise ValueError(f"unknown encode backend {backend!r}; "
+                         f"expected one of {ENCODE_BACKENDS}")
+    return backend
+
+
+def fused_sign_encode_jnp(flat: jax.Array, key, sigma, *, z: int,
+                          add_noise: bool = True,
+                          chunk_tiles: int = 0) -> jax.Array:
+    """Counter-based fused encode, pure jnp — bit-exact vs the Pallas kernel.
+
+    (d,) f32 -> tile-padded bitpacked uint8 (ceil(d/8192)*1024 bytes), the
+    identical byte stream ``kernels/zsign ops.zsign_encode_fused`` produces
+    for the same key (same global element counters, same per-tile word
+    layout, same f32 threshold math — see noise.tile_u01 /
+    noise.stochastic_sign_bits).
+
+    ``chunk_tiles == 0`` (default): one elementwise pass. The jaxpr shows a
+    (d_pad,) f32 uniform intermediate, but XLA fuses the whole
+    threefry -> threshold -> bitpack chain into the uint8 output — compiled
+    temp allocation is ~0 bytes where the dense draw allocates 2 x 4d
+    (pinned by tests/test_encode_fused.py), and it is the fastest CPU path.
+
+    ``chunk_tiles > 0``: lax.scan over chunks of that many 8192-element
+    tiles, bounding even the jaxpr-level live window to
+    (chunk_tiles * 8192,) f32 per client — the memory-guarantee-by-
+    construction variant (scan carries ~30-80ms of loop overhead per round
+    on small CPUs, so it is opt-in rather than the default).
+    """
+    d = flat.shape[0]
+    tile = ENCODE_TILE
+    n_tiles = -(-d // tile)
+    dpad = n_tiles * tile
+    flat = jnp.pad(flat.astype(jnp.float32), (0, dpad - d))
+    if not add_noise:
+        return pack_flat(flat)
+    k0, k1 = znoise.key_words(key)
+
+    def tiles_packed(x_chunk, first_tile, n):
+        u = jax.vmap(lambda t: znoise.tile_u01(k0, k1, t * tile, tile))(
+            first_tile + jnp.arange(n, dtype=jnp.uint32)).reshape(-1)
+        return wire.pack_bool(znoise.stochastic_sign_bits(x_chunk, u, sigma, z))
+
+    if chunk_tiles <= 0 or n_tiles <= chunk_tiles:
+        return tiles_packed(flat, jnp.uint32(0), n_tiles)
+    n_chunks = -(-n_tiles // chunk_tiles)
+    cpad = n_chunks * chunk_tiles * tile - dpad
+    x2 = jnp.pad(flat, (0, cpad)).reshape(n_chunks, chunk_tiles * tile)
+    starts = jnp.arange(n_chunks, dtype=jnp.uint32) * jnp.uint32(chunk_tiles)
+    _, packed = jax.lax.scan(
+        lambda _, xs: (None, tiles_packed(xs[0], xs[1], chunk_tiles)),
+        None, (x2, starts))
+    return packed.reshape(-1)[: dpad // 8]
+
 
 def sign_reduce(packed: jax.Array, weights: jax.Array,
-                backend: str = "auto") -> jax.Array:
+                backend: str = "auto", *,
+                weights_are_mask: bool = False) -> jax.Array:
     """Weighted sign-reduce over stacked bitpacked payloads.
 
     (n_clients, n_bytes) u8 + (n_clients,) f32 -> (8*n_bytes,) f32 weighted
@@ -85,9 +175,13 @@ def sign_reduce(packed: jax.Array, weights: jax.Array,
       dense   legacy dense-matrix path (wire.unpack_sum_dense) — oracle and
               benchmark baseline only
 
-    (wire.unpack_sum_mask is a further popcount specialization for weights
-    KNOWN to be 0/1; it is deliberately not dispatched here because the
-    membership contract cannot be checked on traced values.)
+    ``weights_are_mask`` is a STATIC caller guarantee that every weight is
+    0 or 1 (a participation mask). The membership contract cannot be checked
+    on traced values, so it is plumbed from whoever constructs the mask (the
+    round engine via ``build_round_step(weights_are_mask=True)``); when set,
+    the jnp backend dispatches to the popcount specialization
+    ``wire.unpack_sum_mask`` (bit-identical for any 0/1 mask — integer
+    sums). Weighted/EF calls keep the LUT path.
     """
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
@@ -99,6 +193,8 @@ def sign_reduce(packed: jax.Array, weights: jax.Array,
     if backend != "jnp":
         raise ValueError(f"unknown agg backend {backend!r}; "
                          f"expected one of {AGG_BACKENDS}")
+    if weights_are_mask:
+        return wire.unpack_sum_mask(packed, weights)
     return unpack_sum(packed, weights)
 
 
@@ -142,6 +238,19 @@ class Compressor:
         del n_coords
         return jnp.einsum("nd,n->d", payload.astype(jnp.float32), mask)
 
+    def stacks_group_payloads(self) -> bool:
+        """Whether the engine's sequential-group scan should emit the raw
+        payload stack (aggregated ONCE over all groups x clients at the end)
+        instead of accumulating per-group decoded f32 sums.
+
+        True exactly when the wire layout is compressed (bitpacked signs,
+        COO top-k): the stacked payloads are then far smaller than
+        client_groups dense f32 partials, and the whole cross-group
+        reduction happens in the compressed domain. Dense fp32 layouts keep
+        the accumulate-in-scan path, whose live state is one (d,) buffer.
+        """
+        return self.wire_format().layout != "dense"
+
 
 @dataclasses.dataclass(frozen=True)
 class ZSignCompressor(Compressor):
@@ -151,30 +260,55 @@ class ZSignCompressor(Compressor):
     transmitted as a bitpacked uint8 buffer (8 coords/byte — the TRUE 1-bit
     uplink). decode scales by eta_z * sigma — the asymptotically-unbiased
     estimator of Lemma 1. sigma == 0.0 recovers vanilla SignSGD (biased;
-    diverges on the paper's counterexample — reproduced in tests).
+    diverges on the paper's counterexample — reproduced in tests), with the
+    noise draw gated off entirely on every backend.
+
+    ``encode_backend`` selects the client-side path (module docstring): the
+    fused counter-based encoders for z in {inf, 1} ("auto"/"jnp"/"pallas",
+    all bit-exact against each other for the same key), or the dense
+    jax.random draw ("reference", and always for finite z > 1).
     """
     z: int = 1
     sigma: float = 0.01
     wire_bits_per_coord: float = 1.0
     name: str = "zsign"
     agg_backend: str = "auto"   # sign_reduce backend for server aggregation
+    encode_backend: str = "auto"    # client fused-encode backend
+    encode_chunk_tiles: int = 0     # >0: chunked-scan jnp fallback window
+    weights_are_mask: bool = False  # engine guarantee: weights are 0/1
 
     def wire_format(self) -> WireFormat:
         return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked")
 
-    def _noisy(self, key, flat, sigma):
-        add_noise = (sigma is not None) or self.sigma > 0.0
-        sig = self.sigma if sigma is None else sigma
+    def _encode_dense(self, key, flat, sig, add_noise):
+        """Dense-draw statistical oracle (and the finite z > 1 path)."""
         if add_noise:
             flat = flat + sig * znoise.sample_z_noise(key, flat.shape, self.z)
-        return flat
+        return pack_flat(flat)
 
     def encode(self, key, flat, state, sigma=None):
-        return pack_flat(self._noisy(key, flat, sigma)), state
+        # the ONE place the noise gate is decided: a static sigma of 0.0
+        # (vanilla SignSGD) disables the draw on every backend; a dynamic
+        # sigma (sigma is not None, possibly traced) always flows through —
+        # a runtime 0 degrades exactly inside stochastic_sign_bits.
+        add_noise = (sigma is not None) or self.sigma > 0.0
+        sig = self.sigma if sigma is None else sigma
+        backend = _resolve_encode_backend(self.encode_backend)
+        if backend == "reference" or (add_noise
+                                      and not znoise.counter_supported(self.z)):
+            return self._encode_dense(key, flat, sig, add_noise), state
+        if backend == "pallas":
+            from repro.kernels.zsign import ops as K
+            return K.zsign_encode_fused(flat, key, sig, z=self.z,
+                                        add_noise=add_noise), state
+        return fused_sign_encode_jnp(flat, key, sig, z=self.z,
+                                     add_noise=add_noise,
+                                     chunk_tiles=self.encode_chunk_tiles), state
 
     def aggregate(self, payload, mask, n_coords):
         del n_coords
-        return sign_reduce(payload, mask, self.agg_backend)
+        return sign_reduce(payload, mask, self.agg_backend,
+                           weights_are_mask=self.weights_are_mask)
 
     def decode_mean(self, flat_mean, sigma=None):
         if sigma is None:
@@ -188,10 +322,16 @@ class ZSignCompressor(Compressor):
 class StoSignCompressor(Compressor):
     """Sto-SignSGD [Safaryan & Richtarik '21] as unified by the paper:
     z = inf with the *input-dependent* noise scale sigma_i = ||flat_i||_2.
-    Bitpacked 1-bit wire format."""
+    Bitpacked 1-bit wire format. The fused encode backends reuse the z=inf
+    counter path with sigma = ||flat|| computed as a prior reduction (the
+    norm is a traced scalar; the threshold kernel takes dynamic sigma), so
+    this baseline also never materializes a dense noise buffer."""
     wire_bits_per_coord: float = 1.0
     name: str = "stosign"
     agg_backend: str = "auto"
+    encode_backend: str = "auto"
+    encode_chunk_tiles: int = 0
+    weights_are_mask: bool = False
 
     def wire_format(self) -> WireFormat:
         return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked")
@@ -199,12 +339,20 @@ class StoSignCompressor(Compressor):
     def encode(self, key, flat, state, sigma=None):
         del sigma
         nrm = jnp.linalg.norm(flat)
-        xi = jax.random.uniform(key, flat.shape, minval=-1.0, maxval=1.0)
-        return pack_flat(flat + nrm * xi), state
+        backend = _resolve_encode_backend(self.encode_backend)
+        if backend == "reference":
+            xi = jax.random.uniform(key, flat.shape, minval=-1.0, maxval=1.0)
+            return pack_flat(flat + nrm * xi), state
+        if backend == "pallas":
+            from repro.kernels.zsign import ops as K
+            return K.zsign_encode_fused(flat, key, nrm, z=znoise.Z_INF), state
+        return fused_sign_encode_jnp(flat, key, nrm, z=znoise.Z_INF,
+                                     chunk_tiles=self.encode_chunk_tiles), state
 
     def aggregate(self, payload, mask, n_coords):
         del n_coords
-        return sign_reduce(payload, mask, self.agg_backend)
+        return sign_reduce(payload, mask, self.agg_backend,
+                           weights_are_mask=self.weights_are_mask)
 
     def decode_mean(self, flat_mean, sigma=None):
         # majority-vote style: server applies its own stepsize to mean sign.
@@ -369,22 +517,31 @@ class DPGaussianCompressor(Compressor):
 
 @dataclasses.dataclass(frozen=True)
 class PackedZSignCompressor(ZSignCompressor):
-    """z-sign through the Pallas TPU kernels (kernels/zsign): encode fuses
-    noise-add + sign + 8:1 bitpack into one VMEM pass; server aggregation is
-    the fused ``sign_reduce`` weighted reduce (one kernel launch for the
-    whole client stack — inherited from ZSignCompressor, NOT a per-client-row
-    kernel dispatch). Bit-for-bit identical wire bytes to the pure-jnp
-    ``pack_flat`` path (verified in tests), just fused.
+    """z-sign pinned to the Pallas TPU kernels (kernels/zsign): encode
+    generates its noise IN-KERNEL from the per-(client, tile) counter stream
+    and fuses threshold + sign + 8:1 bitpack into one VMEM pass
+    (``zsign_encode_fused``; default ``encode_backend="pallas"``, interpret
+    mode off-TPU); server aggregation is the fused ``sign_reduce`` weighted
+    reduce (one kernel launch for the whole client stack — inherited from
+    ZSignCompressor). Wire bytes are bit-for-bit identical to the jnp fused
+    path for the same key (verified in tests). The dense-noise kernel
+    (``zsign_compress``, noise as an HBM input) remains the "reference"
+    backend and the finite z > 1 path; its sigma == 0 mode skips the noise
+    draw entirely instead of drawing and discarding a full dense buffer.
     Payload is uint8 of ceil(d/8192)*1024 bytes (kernel tile padding; the
     logical cost stays 1 bit/coord — see wire.py accounting notes).
     """
     name: str = "zsign_packed"
+    encode_backend: str = "pallas"
 
-    def encode(self, key, flat, state, sigma=None):
+    def _encode_dense(self, key, flat, sig, add_noise):
         from repro.kernels.zsign import ops as K
-        sig = self.sigma if sigma is None else sigma
+        if not add_noise:
+            # vanilla-SignSGD mode: no noise is drawn (flat doubles as a
+            # dummy operand; sigma == 0 makes it a no-op inside the kernel)
+            return K.zsign_compress(flat, flat, 0.0)
         noise = znoise.sample_z_noise(key, flat.shape, self.z)
-        return K.zsign_compress(flat, noise, sig), state
+        return K.zsign_compress(flat, noise, sig)
 
 
 _REGISTRY = {

@@ -20,6 +20,14 @@ Parallel clients live on a vmapped leading axis that the launcher shards over
 mesh ``client_axes`` (data and/or pod); sequential client *groups* are an
 outer ``lax.scan`` so arbitrarily many clients run per round with one replica
 of storage — the decoders are linear so group-sum aggregation is exact.
+For compressed wire layouts (every sign family, COO top-k) the scan emits
+the raw payload stack as its per-step OUTPUT (plus the per-group weights)
+and the server runs ONE ``aggregate`` over the (client_groups * n_clients,
+n_bytes) stack at the end — the cross-group working set is ~1 bit/coord,
+never client_groups dense f32 partials. Dense fp32 layouts (identity, QSGD,
+dpgauss) keep the accumulate-in-carry scan, whose live state is a single
+(d,) buffer (stacking would cost G*N*d f32). The choice is the compressor's
+``stacks_group_payloads()``.
 Per-client compressor state (EF / top-k residuals) is a flat fp32 buffer of
 shape (client_groups, n_clients, n_coords); dead clients keep their previous
 residual bit-exactly (the state update is participation-masked).
@@ -94,7 +102,10 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
                      *, dynamic_sigma: bool = False,
                      param_constraint: Optional[Callable] = None,
                      wire_constraint: Optional[Callable] = None,
-                     spmd_axes=None, agg_backend: Optional[str] = None):
+                     spmd_axes=None, agg_backend: Optional[str] = None,
+                     encode_backend: Optional[str] = None,
+                     weights_are_mask: bool = False,
+                     legacy_client_path: bool = False):
     """Returns round_step(state, batch, mask) -> (state, RoundMetrics).
 
     loss_fn(params, batch_slice) -> scalar loss. ``batch`` is a pytree whose
@@ -108,12 +119,27 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
     to sharded parameter layouts is a local slice, never a reshard (see
     launch/sharding.py wire_state_specs for the per-client residual layout).
     ``agg_backend`` overrides the sign-family server-aggregation backend
-    ("auto" | "jnp" | "pallas" | "dense" — see compression.sign_reduce) on
-    compressors that expose one; launchers thread their CLI selector here.
+    ("auto" | "jnp" | "pallas" | "dense" — see compression.sign_reduce) and
+    ``encode_backend`` the client fused-encode backend ("auto" | "jnp" |
+    "pallas" | "reference") on compressors that expose them; launchers
+    thread their CLI selectors here. ``weights_are_mask=True`` is the
+    caller's STATIC guarantee that the masks it will pass are exactly 0/1
+    membership (as the participation sampler produces) — it unlocks the
+    popcount aggregation specialization; leave False for fractional
+    (data-size-proportional) weights. ``legacy_client_path=True`` restores
+    the pre-fused client step (always scan over E local steps, even E == 1,
+    and form the pseudo-gradient by updating the weights and subtracting
+    them back) — kept ONLY so the benchmark's dense baseline measures what
+    the legacy round actually cost; production callers leave it False.
     """
-    if agg_backend is not None and any(
-            f.name == "agg_backend" for f in dataclasses.fields(compressor)):
-        compressor = dataclasses.replace(compressor, agg_backend=agg_backend)
+    fields = {f.name for f in dataclasses.fields(compressor)}
+    overrides = {k: v for k, v in [("agg_backend", agg_backend),
+                                   ("encode_backend", encode_backend)]
+                 if v is not None and k in fields}
+    if weights_are_mask and "weights_are_mask" in fields:
+        overrides["weights_are_mask"] = True
+    if overrides:
+        compressor = dataclasses.replace(compressor, **overrides)
     opt = _server_optimizer(cfg)
     gamma = cfg.client_lr
     constrain = param_constraint or (lambda t: t)
@@ -130,22 +156,37 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
         return x_e, jnp.mean(losses)
 
     def client_update(spec, params0, client_batch, key, cstate, sigma):
-        x_e, loss = local_sgd(params0, client_batch)
-        pseudo = jax.tree.map(
-            lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)) / gamma,
-            params0, x_e)
-        # the ONE flatten: pytree -> contiguous fp32 wire buffer
-        flat = spec.flatten(pseudo)
+        if cfg.local_steps == 1 and not legacy_client_path:
+            # E == 1: the pseudo-gradient (x0 - x1)/gamma IS the batch
+            # gradient, so neither the updated weights nor the subtraction
+            # back need to exist (and a length-1 lax.scan would lower to an
+            # XLA while loop whose params-tree carry is copied at the loop
+            # boundary — an (n_clients x params) copy per round for zero
+            # sequencing). ~2x less client-side memory traffic around the
+            # flatten on the CPU benchmark; identical up to f32 rounding
+            # (this path skips the (gamma*g)/gamma round-trip).
+            loss, g = jax.value_and_grad(loss_fn)(
+                params0, jax.tree.map(lambda x: x[0], client_batch))
+            flat = spec.flatten(g)
+        else:
+            x_e, loss = local_sgd(params0, client_batch)
+            pseudo = jax.tree.map(
+                lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32))
+                / gamma,
+                params0, x_e)
+            # the ONE flatten: pytree -> contiguous fp32 wire buffer
+            flat = spec.flatten(pseudo)
         if cfg.dp_clip > 0.0:
             flat = _clip_flat(flat, cfg.dp_clip)
         enc, new_cstate = compressor.encode(
             key, flat, cstate, sigma=sigma if dynamic_sigma else None)
         return enc, new_cstate, loss
 
-    def group_round(spec, params, group_batch, keys, group_cstate, mask_g,
-                    sigma):
-        """One parallel group of n_clients: returns masked SUM of encodings
-        as a single flat fp32 buffer."""
+    def group_encode(spec, params, group_batch, keys, group_cstate, mask_g,
+                     sigma):
+        """One parallel group of n_clients: returns the client-stacked
+        payloads (NOT yet aggregated), the participation-masked new state,
+        and the masked loss sum."""
         cu = lambda *a: client_update(spec, *a)
         if cfg.n_clients == 1:
             # sequential-client (big-arch) mode: skip the vmap — a size-1
@@ -167,16 +208,23 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
                          0 if group_cstate is not None else None, None),
                 spmd_axis_name=spmd_axes,
             )(params, group_batch, keys, group_cstate, sigma)
-        # participation mask: dead clients contribute zero; stateful
-        # compressors keep their previous residual bit-exactly.
-        enc_sum = constrain_wire(
-            compressor.aggregate(enc, mask_g, spec.n_coords))
+        # participation mask: dead clients contribute zero (weight 0 in the
+        # aggregate); stateful compressors keep their residual bit-exactly.
         if group_cstate is not None:
             new_cstate = jax.tree.map(
                 lambda new, old: jnp.where(
                     mask_g.reshape((-1,) + (1,) * (new.ndim - 1)) > 0, new, old),
                 new_cstate, group_cstate)
         loss_sum = jnp.sum(losses * mask_g)
+        return enc, new_cstate, loss_sum
+
+    def group_round(spec, params, group_batch, keys, group_cstate, mask_g,
+                    sigma):
+        """group_encode + masked aggregation to one flat fp32 SUM buffer."""
+        enc, new_cstate, loss_sum = group_encode(
+            spec, params, group_batch, keys, group_cstate, mask_g, sigma)
+        enc_sum = constrain_wire(
+            compressor.aggregate(enc, mask_g, spec.n_coords))
         return enc_sum, new_cstate, loss_sum
 
     def round_step(state: ServerState, batch, mask):
@@ -195,7 +243,30 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
                 sigma)
             new_cstate = (None if new_cstate_g is None
                           else jax.tree.map(lambda x: x[None], new_cstate_g))
+        elif compressor.stacks_group_payloads():
+            # compressed-domain group scan: the scan OUTPUT is the stacked
+            # wire payloads (1 bit/coord for sign families), and the server
+            # runs ONE aggregate over the (G*N, ...) stack — no per-group
+            # dense f32 partials ever exist.
+            def body(loss_acc, xs):
+                g_batch, keys_g, cstate_g, mask_g = xs
+                enc, new_cstate_g, loss_sum = group_encode(
+                    spec, state.params, g_batch, keys_g, cstate_g, mask_g,
+                    sigma)
+                return loss_acc + loss_sum, (enc, new_cstate_g)
+
+            loss_sum, (enc_stack, new_cstate) = jax.lax.scan(
+                body, jnp.zeros(()),
+                (batch, all_keys, state.comp_state, mask))
+            gn = cfg.client_groups * cfg.n_clients
+            enc_all = jax.tree.map(
+                lambda e: e.reshape((gn,) + e.shape[2:]), enc_stack)
+            enc_sum = constrain_wire(
+                compressor.aggregate(enc_all, mask.reshape(-1),
+                                     spec.n_coords))
         else:
+            # dense fp32 wire: accumulate the decoded group sums in the
+            # scan carry (stacking G*N dense payloads would cost G*N*d f32)
             def body(carry, xs):
                 enc_acc, loss_acc = carry
                 g_batch, keys_g, cstate_g, mask_g = xs

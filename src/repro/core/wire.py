@@ -122,11 +122,22 @@ def tree_spec(tree) -> TreeSpec:
 # Pallas kernel in kernels/zsign produces the identical byte stream)
 # ---------------------------------------------------------------------------
 
+def pack_bool(bits: jax.Array) -> jax.Array:
+    """bool (flat, len % 8 == 0) -> uint8 bitfield of len/8.
+
+    THE little-endian pack every sign path shares: element 8i+j lands in bit
+    j of byte i. The Pallas kernels keep a shape-local copy of these three
+    lines (kernels/zsign ``_pack_bits_u8``) — bit-exactness between the two
+    is pinned by the encode-equivalence tests.
+    """
+    b = bits.astype(jnp.uint8).reshape(-1, 8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint8)
+
+
 def pack_signs(signs_i8: jax.Array) -> jax.Array:
     """int8 {-1,+1} (flat, len % 8 == 0) -> uint8 bitfield of len/8."""
-    bits = (signs_i8 > 0).astype(jnp.uint8).reshape(-1, 8)
-    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
-    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+    return pack_bool(signs_i8 > 0)
 
 
 def unpack_signs(packed: jax.Array) -> jax.Array:
@@ -248,9 +259,13 @@ def unpack_sum_mask(packed: jax.Array, mask: jax.Array) -> jax.Array:
 
     The mask is treated as MEMBERSHIP (w > 0 participates); fractional
     weights must use :func:`unpack_sum`. Because that contract cannot be
-    checked on traced values, compressors do NOT dispatch here — this is an
-    opt-in specialization for call sites that guarantee a 0/1 mask (and the
-    wire-level benchmark of the popcount technique in benchmarks/run.py).
+    checked on traced values, dispatch here is gated on a STATIC guarantee
+    plumbed from whoever constructs the mask: the round engine's
+    ``build_round_step(weights_are_mask=True)`` (set by the train/dryrun
+    launchers, whose participation sampler emits exact 0/1) flips the
+    sign-family compressors' flag and ``compression.sign_reduce`` then
+    routes its jnp backend through this popcount path. Weighted calls (EF
+    mask * scale, data-size weights) keep the LUT path.
     """
     n, n_bytes = packed.shape
     pm = packed * (mask > 0).astype(jnp.uint8)[:, None]

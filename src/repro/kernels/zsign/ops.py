@@ -11,6 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import noise as znoise
 from repro.kernels.zsign import zsign as K
 
 TILE = K.ROWS_BLK * K.COLS   # 8192
@@ -38,6 +39,33 @@ def zsign_compress(x: jax.Array, noise: jax.Array, sigma,
     x2d, _ = _pad_flat(x.astype(jnp.float32))
     n2d, _ = _pad_flat(noise.astype(jnp.float32))
     packed = K.compress_pallas(x2d, n2d, jnp.asarray(sigma), interpret=interpret)
+    return packed.reshape(-1)
+
+
+@partial(jax.jit, static_argnames=("z", "add_noise", "interpret"))
+def zsign_encode_fused(x: jax.Array, key: jax.Array, sigma,
+                       *, z: int, add_noise: bool = True,
+                       interpret: bool | None = None) -> jax.Array:
+    """Fused client encode with IN-KERNEL counter-based noise.
+
+    x: any-shape float32; key: the client's PRNG key (typed or raw uint32
+    pair). Each 8192-element grid tile derives its randomness from
+    threefry2x32(key, global_counters) and writes Sign(x + sigma*xi_z) as
+    wire bytes directly — no fp32 noise buffer in HBM, unlike
+    ``zsign_compress`` which takes a dense noise input. Returns uint8 of
+    ceil(x.size/8192)*1024 bytes (kernel tile padding, as zsign_compress).
+    ``z`` must be Z_INF (uniform) or 1 (Gaussian); ``add_noise=False``
+    (static sigma == 0, vanilla SignSGD) skips the PRNG entirely. ``sigma``
+    may be traced (Plateau dynamic sigma; stosign's per-client norm) — a
+    runtime 0 also degrades exactly to noise-free signs.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    x2d, _ = _pad_flat(x.astype(jnp.float32))
+    k0, k1 = znoise.key_words(key)
+    key2 = jnp.stack([k0, k1]).reshape(1, 2)
+    packed = K.compress_rng_pallas(
+        x2d, key2, jnp.asarray(sigma), z=(z if add_noise else None),
+        interpret=interpret)
     return packed.reshape(-1)
 
 

@@ -1,9 +1,23 @@
 """Pallas TPU kernels for z-SignFedAvg's compression hot path.
 
-Three kernels:
+Four kernels:
 
   _compress_kernel:  y = x + sigma*noise; pack Sign(y) bits -> uint8
-                     (fused elementwise + 8:1 bitpack; 1 byte out per 8 in)
+                     (fused elementwise + 8:1 bitpack; 1 byte out per 8 in;
+                     noise is a kernel INPUT — the legacy/dense-noise path,
+                     kept for finite z > 1 and as the reference encoder)
+  _compress_rng_kernel: in-kernel counter-based noise — each grid tile
+                     derives its randomness from threefry2x32(client_key,
+                     tile_counters) (core/noise.py, plain VPU uint32 ops; 4
+                     u16 uniforms per call) and samples the wire bit
+                     directly from its exact Bernoulli law
+                     [u > 1 - P_z(x/sigma)] (the inverse-CDF coupling of
+                     noise.stochastic_sign_bits). The fp32 noise buffer that
+                     the old path streamed through HBM never exists: the
+                     client encode reads x and writes wire bytes, nothing
+                     else. Counters are GLOBAL quarter-tile indices, so the
+                     chunked jnp fallback (core/compression.py) reproduces
+                     the byte stream bit-exactly on CPU.
   _unpack_sum_kernel: (n_clients, ...) packed uint8 -> sum of {-1,+1} fp32
                      (legacy whole-stack unpack; kept as kernel oracle)
   _sign_reduce_kernel: (n_clients, ...) packed uint8 + (n_clients,) fp32
@@ -19,9 +33,11 @@ TPU adaptation notes (DESIGN.md §2): the compressor is bandwidth-bound
 elementwise work, so the kernels stream HBM->VMEM in (ROWS_BLK, 1024) tiles
 (1024 = 8 lanes-groups x 128 lanes, MXU-free, VPU-only) and write uint8 tiles
 (ROWS_BLK, 128). Bit order matches the flat little-endian order of the
-pure-jnp oracle in ref.py (element 8i+j -> bit j of byte i). On real TPU the
-noise would be generated in-kernel via pltpu.prng_random_bits; here noise is
-a kernel input so interpret-mode (CPU) validation is exact vs the oracle.
+pure-jnp oracle in ref.py (element 8i+j -> bit j of byte i). The counter
+scheme was chosen over pltpu.prng_random_bits because the hardware PRNG's
+stream cannot be reproduced off-TPU — threefry2x32 is ~13 VPU integer ops
+per word and gives the interpret-mode kernel, the compiled TPU kernel, and
+the jnp fallback the identical byte stream for the same client key.
 """
 from __future__ import annotations
 
@@ -30,6 +46,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core import noise as znoise
 
 LANE = 128
 PACK = 8
@@ -64,6 +82,64 @@ def compress_pallas(x2d: jax.Array, noise2d: jax.Array, sigma: jax.Array,
         out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.uint8),
         interpret=interpret,
     )(x2d, noise2d, sigma.reshape(1, 1).astype(jnp.float32))
+
+
+def _pack_bits_u8(bits):
+    """(R, COLS) bool -> (R, LANE) uint8, little-endian within each byte."""
+    r = bits.shape[0]
+    b = bits.reshape(r, LANE, PACK).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(PACK, dtype=jnp.uint8))
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint8)
+
+
+def _compress_rng_kernel(x_ref, k_ref, sig_ref, t_ref, o_ref, *, z):
+    """Counter-based in-kernel noise: one tile of the fused client encode.
+
+    Tile t covers elements [t*8192, (t+1)*8192). Quarter-counters are global
+    (c = t*2048 + local); one threefry2x32 call yields 4 u16 uniforms that
+    feed the tile's four row-quarters — the layout of noise.tile_u01, which
+    the jnp fallback replays verbatim. ``z`` is static: None disables the
+    noise entirely (vanilla SignSGD, satellite of the sigma==0 gating), else
+    z in {Z_INF, 1} selects the sign CDF.
+    """
+    x = x_ref[...]                                   # (R, 1024) f32
+    if z is None:
+        o_ref[...] = _pack_bits_u8(x >= 0.0)
+        return
+    r = x.shape[0]
+    qrows = r // 4
+    t = t_ref[0, 0].astype(jnp.uint32)
+    row = jax.lax.broadcasted_iota(jnp.uint32, (qrows, COLS), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (qrows, COLS), 1)
+    c = t * jnp.uint32(r * COLS // 4) + row * jnp.uint32(COLS) + col
+    y0, y1 = znoise.counter_words(k_ref[0, 0], k_ref[0, 1], c)
+    u0, u1 = znoise.halves_to_u01(y0)
+    u2, u3 = znoise.halves_to_u01(y1)
+    u = jnp.concatenate([u0, u1, u2, u3], axis=0)    # (R, 1024) in (0,1)
+    o_ref[...] = _pack_bits_u8(
+        znoise.stochastic_sign_bits(x, u, sig_ref[0, 0], z))
+
+
+def compress_rng_pallas(x2d: jax.Array, key2: jax.Array, sigma: jax.Array,
+                        *, z, interpret: bool) -> jax.Array:
+    """x2d: (rows, 1024) f32 (rows % ROWS_BLK == 0), key2: (1, 2) uint32 ->
+    (rows, 128) u8 with noise generated inside each grid step."""
+    rows = x2d.shape[0]
+    n_tiles = rows // ROWS_BLK
+    tiles = jnp.arange(n_tiles, dtype=jnp.int32).reshape(-1, 1)
+    return pl.pallas_call(
+        functools.partial(_compress_rng_kernel, z=z),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((ROWS_BLK, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_BLK, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.uint8),
+        interpret=interpret,
+    )(x2d, key2, sigma.reshape(1, 1).astype(jnp.float32), tiles)
 
 
 def _unpack_sum_kernel(p_ref, o_ref):

@@ -56,7 +56,8 @@ def _dryrun_model(arch, shape):
     return arch.model
 
 
-def build_train_cell(arch, shape, mesh, agg_backend="auto"):
+def build_train_cell(arch, shape, mesh, agg_backend="auto",
+                     encode_backend="auto"):
     """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
     arch = __import__("dataclasses").replace(arch, model=_dryrun_model(arch, shape))
     bundle = build_model(arch.model)
@@ -83,7 +84,8 @@ def build_train_cell(arch, shape, mesh, agg_backend="auto"):
         spmd_axes=(plan.client_axes if plan.client_axes else None),
         param_constraint=param_constraint,
         wire_constraint=lambda f: jax.lax.with_sharding_constraint(f, rep),
-        agg_backend=agg_backend)
+        agg_backend=agg_backend, encode_backend=encode_backend,
+        weights_are_mask=True)
 
     state_shapes = jax.eval_shape(
         lambda p: fedavg.init_server_state(p, fcfg, comp,
@@ -338,7 +340,7 @@ def analyze(fn, arg_shapes, mesh, label: str) -> dict:
 
 
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
-             agg_backend: str = "auto") -> dict:
+             agg_backend: str = "auto", encode_backend: str = "auto") -> dict:
     arch = get_arch(arch_id)
     shape = SHAPES[shape_name]
     bundle = build_model(arch.model)
@@ -349,7 +351,8 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     plan0 = SH.make_plan(arch, shape, mesh)
     with mesh, sharding_hints(mesh, plan0.seq_axes, plan0.micro_axes):
         if shape.kind == "train":
-            fn, args, plan = build_train_cell(arch, shape, mesh, agg_backend)
+            fn, args, plan = build_train_cell(arch, shape, mesh, agg_backend,
+                                              encode_backend)
         elif shape.kind == "prefill":
             fn, args, plan = build_prefill_cell(arch, shape, mesh)
         else:
@@ -385,6 +388,8 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--agg-backend", default="auto",
                     choices=list(compression.AGG_BACKENDS))
+    ap.add_argument("--encode-backend", default="auto",
+                    choices=list(compression.ENCODE_BACKENDS))
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -398,7 +403,8 @@ def main():
             for mp in meshes:
                 try:
                     res = run_cell(arch_id, shape_name, multi_pod=mp,
-                                   agg_backend=args.agg_backend)
+                                   agg_backend=args.agg_backend,
+                                   encode_backend=args.encode_backend)
                 except Exception as e:  # record the failure, keep sweeping
                     res = {"label": f"{arch_id}/{shape_name}/"
                            f"{'multi' if mp else 'single'}",

@@ -164,7 +164,11 @@ def wire_state_specs(cstate_shapes, plan: ParallelPlan):
     read/written only by their own client, so no cross-client resharding
     occurs. The wire payloads themselves (uint8 bitpacked buffers) are 8-32x
     smaller than fp32 params and feed one collective; they stay replicated
-    by construction in core/fedavg.py."""
+    by construction in core/fedavg.py. That includes the compressed-domain
+    group scan's (client_groups, n_clients, n_bytes) payload stack: at
+    1 bit/coord the whole stack is G*N/32 the size of ONE dense f32 partial,
+    so replicating it costs less than the per-group f32 accumulate it
+    replaced."""
     def spec(leaf):
         s = [None] * len(leaf.shape)
         if len(leaf.shape) >= 2:

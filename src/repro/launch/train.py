@@ -45,6 +45,11 @@ def main():
                     help="sign-family server aggregation backend "
                          "(auto = Pallas kernel on TPU, bit-sliced jnp "
                          "elsewhere)")
+    ap.add_argument("--encode-backend", default="auto",
+                    choices=list(compression.ENCODE_BACKENDS),
+                    help="sign-family client encode backend (auto = in-kernel"
+                         " counter noise on TPU, fused jnp elsewhere; "
+                         "reference = dense jax.random draw)")
     ap.add_argument("--z", type=int, default=1, help="1=Gaussian, 0=uniform")
     ap.add_argument("--sigma", type=float, default=0.01,
                     help="z-sign noise scale / dpgauss noise stddev")
@@ -79,10 +84,14 @@ def main():
                            local_steps=args.local_steps,
                            client_lr=args.client_lr, server_lr=args.server_lr)
     # donate the server state: params + opt state + residual buffers update
-    # in place on device instead of being copied every round
+    # in place on device instead of being copied every round.
+    # weights_are_mask: the ParticipationSampler below produces exact 0/1
+    # membership masks, so the popcount aggregation specialization is safe.
     step = jax.jit(fedavg.build_round_step(bundle.loss_fn, comp, cfg,
                                            dynamic_sigma=args.plateau,
-                                           agg_backend=args.agg_backend),
+                                           agg_backend=args.agg_backend,
+                                           encode_backend=args.encode_backend,
+                                           weights_are_mask=True),
                    donate_argnums=0)
 
     params = bundle.init(jax.random.PRNGKey(0))

@@ -1,0 +1,543 @@
+"""Fused client encode: counter-based in-kernel noise equivalence suite.
+
+The client encode has four implementations that must agree:
+
+  "reference"  dense jax.random draw + pack (the statistical oracle)
+  "jnp"        fused counter-based single pass (default CPU path)
+  "jnp" + encode_chunk_tiles > 0   chunked-scan variant (bounded jaxpr-level
+               noise window)
+  "pallas"     in-kernel counter noise (TPU; interpret mode on CPU)
+
+Contract (see core/noise.py and compression.py docstrings):
+  * the three fused paths are BIT-EXACT against each other for the same
+    client key — same global element counters, same per-tile word layout,
+    same f32 threshold math;
+  * the fused bit [u > 1 - P_z(x/sigma)] is the inverse-CDF coupling of
+    Sign(x + sigma * F_z^{-1}(u)) — identically distributed to the reference
+    draw (checked against the closed-form expected sign and pdf_z);
+  * no (n_clients, d) fp32 noise buffer exists: jaxpr-level for the chunked
+    and pallas paths, compiled-buffer-level for the single-pass default.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core import fedavg
+from repro.core import noise as Z
+from repro.core import wire
+from repro.kernels.zsign import ops
+
+TILE = C.ENCODE_TILE
+
+
+def test_encode_tile_matches_kernel():
+    """compression.ENCODE_TILE mirrors the kernel tile — keep in sync."""
+    assert C.ENCODE_TILE == ops.TILE
+
+
+def test_threefry_matches_random123_vectors():
+    """The cipher structure is canonical Threefry-2x32: at 20 rounds it must
+    reproduce the published Random123 known-answer vectors exactly, and the
+    13-round production stream is pinned against silent drift."""
+    orig = Z.THREEFRY_ROUNDS
+    try:
+        Z.THREEFRY_ROUNDS = 20
+        for (c0, c1), (k0, k1), want in [
+                ((0, 0), (0, 0), (0x6B200159, 0x99BA4EFE)),
+                ((0xFFFFFFFF, 0xFFFFFFFF), (0xFFFFFFFF, 0xFFFFFFFF),
+                 (0x1CB996FC, 0xBB002BE7)),
+                ((0x243F6A88, 0x85A308D3), (0x13198A2E, 0x03707344),
+                 (0xC4923A9C, 0x483DF7A0))]:
+            y0, y1 = Z.threefry2x32(jnp.uint32(k0), jnp.uint32(k1),
+                                    jnp.uint32(c0), jnp.uint32(c1))
+            assert (int(y0), int(y1)) == want
+    finally:
+        Z.THREEFRY_ROUNDS = orig
+    assert Z.THREEFRY_ROUNDS == 13  # the cited BigCrush-minimal variant
+    y0, y1 = Z.threefry2x32(jnp.uint32(0), jnp.uint32(0),
+                            jnp.uint32(0), jnp.uint32(0))
+    # regression pin of the production 13-round stream (matches the
+    # Random123 R=13 unrolling: no injection after the partial last group)
+    assert (int(y0), int(y1)) == (0x9D1C5EC6, 0x8BD50731)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness across fused backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("z", [1, Z.Z_INF])
+@pytest.mark.parametrize("d", [64, 8192, 3 * 8192 + 17, 100_003])
+@pytest.mark.parametrize("sigma", [0.3, 5.0])
+def test_fused_backends_bit_exact(z, d, sigma):
+    key = jax.random.PRNGKey(d + z)
+    flat = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    got = {
+        "jnp": C.fused_sign_encode_jnp(flat, key, sigma, z=z),
+        "jnp_chunk1": C.fused_sign_encode_jnp(flat, key, sigma, z=z,
+                                              chunk_tiles=1),
+        "jnp_chunk3": C.fused_sign_encode_jnp(flat, key, sigma, z=z,
+                                              chunk_tiles=3),
+        "pallas": ops.zsign_encode_fused(flat, key, sigma, z=z),
+    }
+    n_bytes = -(-d // TILE) * TILE // 8
+    for name, p in got.items():
+        assert p.shape == (n_bytes,) and p.dtype == jnp.uint8, name
+        np.testing.assert_array_equal(np.asarray(got["jnp"]), np.asarray(p),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("name", ["zsign", "zsign_packed", "stosign"])
+def test_compressor_backends_bit_exact(name):
+    """Through the compressor API (incl. stosign's dynamic sigma = ||flat||),
+    jnp and pallas encode backends ship identical wire bytes."""
+    d = 2 * 8192 + 117
+    flat = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    key = jax.random.PRNGKey(7)
+    kw = {} if name == "stosign" else {"z": 1, "sigma": 0.4}
+    outs = {}
+    for backend in ["jnp", "pallas"]:
+        comp = C.make_compressor(name, encode_backend=backend, **kw)
+        outs[backend], _ = comp.encode(key, flat, None)
+    np.testing.assert_array_equal(np.asarray(outs["jnp"]),
+                                  np.asarray(outs["pallas"]))
+
+
+def test_vmapped_encode_matches_per_client():
+    """Under the engine's client vmap each client gets its own counter
+    stream; rows match per-client single calls exactly."""
+    n, d = 5, 8192 + 13
+    keys = jax.random.split(jax.random.PRNGKey(3), n)
+    flats = jax.random.normal(jax.random.PRNGKey(4), (n, d))
+    comp = C.make_compressor("zsign", z=1, sigma=0.5, encode_backend="jnp")
+    stacked = jax.vmap(lambda k, f: comp.encode(k, f, None)[0])(keys, flats)
+    for i in range(n):
+        single, _ = comp.encode(keys[i], flats[i], None)
+        np.testing.assert_array_equal(np.asarray(stacked[i]),
+                                      np.asarray(single))
+    # distinct clients -> distinct streams
+    assert np.any(np.asarray(stacked[0]) != np.asarray(stacked[1]))
+
+
+def test_unknown_encode_backend_raises():
+    comp = C.make_compressor("zsign", encode_backend="nope")
+    with pytest.raises(ValueError, match="unknown encode backend"):
+        comp.encode(jax.random.PRNGKey(0), jnp.ones((8,)), None)
+
+
+# ---------------------------------------------------------------------------
+# distribution: counter noise vs pdf_z / closed-form expected sign
+# ---------------------------------------------------------------------------
+
+def test_counter_noise_z1_is_standard_normal():
+    xi = np.asarray(Z.counter_noise(jax.random.PRNGKey(11), 400_000, 1),
+                    np.float64)
+    assert abs(xi.mean()) < 0.01
+    assert abs(xi.std() - 1.0) < 0.01
+    assert abs((xi ** 3).mean()) < 0.03          # symmetry
+    assert abs((xi ** 4).mean() - 3.0) < 0.1     # gaussian kurtosis
+    # KS distance vs the exact CDF
+    s = np.sort(xi)
+    cdf = 0.5 * (1.0 + np.array([math.erf(v / math.sqrt(2)) for v in
+                                 s[:: len(s) // 2000]]))
+    emp = np.arange(len(s))[:: len(s) // 2000] / len(s)
+    assert np.max(np.abs(cdf - emp)) < 0.01
+
+
+def test_counter_noise_zinf_is_uniform():
+    xi = np.asarray(Z.counter_noise(jax.random.PRNGKey(12), 400_000, Z.Z_INF),
+                    np.float64)
+    assert xi.min() > -1.0 and xi.max() < 1.0
+    assert abs(xi.mean()) < 0.01
+    assert abs(xi.std() - 1.0 / math.sqrt(3)) < 0.005
+    # KS vs the linear CDF
+    s = np.sort(xi)
+    emp = np.arange(len(s))[:: len(s) // 2000] / len(s)
+    assert np.max(np.abs((s[:: len(s) // 2000] + 1) / 2 - emp)) < 0.01
+
+
+@pytest.mark.parametrize("z", [1, Z.Z_INF])
+def test_counter_noise_matches_pdf_z_histogram(z):
+    """Histogram of the counter stream vs Definition 1's density."""
+    xi = np.asarray(Z.counter_noise(jax.random.PRNGKey(13), 400_000, z))
+    edges = np.linspace(-2.5, 2.5, 26)
+    hist, _ = np.histogram(xi, bins=edges, density=True)
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    want = np.asarray(Z.pdf_z(centers, z))
+    # uniform's discontinuity at +-1 lands inside a bin; skip those two
+    keep = np.abs(np.abs(centers) - 1.0) > 0.15 if z <= Z.Z_INF else \
+        np.ones_like(centers, bool)
+    np.testing.assert_allclose(hist[keep], want[keep], atol=0.02)
+
+
+@pytest.mark.parametrize("z", [1, Z.Z_INF])
+def test_fused_mean_sign_matches_expected_sign(z):
+    """eta_z * sigma * mean(decoded signs) ~= expected_sign (Lemma 3's
+    closed form) — the fused Bernoulli bit has the exact sign law of the
+    additive-noise encoder."""
+    sigma = 1.3
+    grid = jnp.linspace(-2.0, 2.0, 32)
+    reps = 8192
+    flat = jnp.repeat(grid, reps)                # 32 * 8192 coords
+    payload = C.fused_sign_encode_jnp(flat, jax.random.PRNGKey(5), sigma, z=z)
+    signs = np.asarray(wire.unpack_signs(payload), np.float64)[: flat.size]
+    mean_sign = signs.reshape(32, reps).mean(axis=1)
+    got = Z.eta_z(z) * sigma * mean_sign
+    want = np.asarray(Z.expected_sign(grid, sigma, z))
+    np.testing.assert_allclose(got, want, atol=0.05)
+
+
+@pytest.mark.parametrize("z", [1, Z.Z_INF])
+def test_threshold_is_inverse_cdf_coupling(z):
+    """The fused bit [u > 1 - P_z(x/s)] equals Sign(x + s * F_z^{-1}(u))
+    computed from the SAME counter stream, up to f32 boundary rounding."""
+    d = 100_000
+    key = jax.random.PRNGKey(21)
+    x = jax.random.normal(jax.random.PRNGKey(22), (d,))
+    sigma = 0.7
+    payload = C.fused_sign_encode_jnp(x, key, sigma, z=z)
+    got = np.asarray(wire.unpack_signs(payload))[:d] > 0
+    xi = Z.counter_noise(key, d, z)
+    want = np.asarray(x + sigma * xi >= 0)
+    assert (got == want).mean() > 0.9999
+
+
+def test_stosign_fused_mean_sign_matches_clip():
+    """stosign = z=inf with sigma = ||flat||: mean sign of many independent
+    encodings approaches clip(x / ||x||, -1, 1) (exactly unbiased regime)."""
+    reps, vals = 4096, jnp.asarray([-0.5, -0.1, 0.0, 0.2, 0.6])
+    flat = jnp.repeat(vals, reps)
+    comp = C.make_compressor("stosign", encode_backend="jnp")
+    payload, _ = comp.encode(jax.random.PRNGKey(9), flat, None)
+    signs = np.asarray(wire.unpack_signs(payload), np.float64)[: flat.size]
+    mean_sign = signs.reshape(5, reps).mean(axis=1)
+    nrm = float(jnp.linalg.norm(flat))
+    want = np.clip(np.asarray(vals) / nrm, -1.0, 1.0)
+    np.testing.assert_allclose(mean_sign, want, atol=0.03)
+
+
+# ---------------------------------------------------------------------------
+# reference backend and fallbacks
+# ---------------------------------------------------------------------------
+
+def test_reference_backend_is_dense_draw():
+    """encode_backend="reference" pins the pre-fused semantics exactly:
+    pack_flat(flat + sigma * sample_z_noise(key))."""
+    d, z, sigma = 1000, 1, 0.6
+    key = jax.random.PRNGKey(2)
+    flat = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    comp = C.make_compressor("zsign", z=z, sigma=sigma,
+                             encode_backend="reference")
+    got, _ = comp.encode(key, flat, None)
+    want = wire.pack_flat(flat + sigma * Z.sample_z_noise(key, (d,), z))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_finite_z_falls_back_to_dense():
+    """z = 2 has no counter transform: every backend routes to the dense
+    draw and produces the reference bytes for the same key."""
+    d = 500
+    key = jax.random.PRNGKey(4)
+    flat = jax.random.normal(jax.random.PRNGKey(3), (d,))
+    ref, _ = C.make_compressor("zsign", z=2, sigma=0.5,
+                               encode_backend="reference").encode(
+                                   key, flat, None)
+    for backend in ["auto", "jnp"]:
+        got, _ = C.make_compressor("zsign", z=2, sigma=0.5,
+                                   encode_backend=backend).encode(
+                                       key, flat, None)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("name", ["zsign", "zsign_packed"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "reference"])
+def test_sigma_zero_is_noise_free_on_all_backends(name, backend):
+    """Vanilla-SignSGD mode (sigma == 0): every backend produces the exact
+    noise-free signs."""
+    d = 8192 + 5
+    flat = jax.random.normal(jax.random.PRNGKey(6), (d,))
+    comp = C.make_compressor(name, z=1, sigma=0.0, encode_backend=backend)
+    payload, _ = comp.encode(jax.random.PRNGKey(0), flat, None)
+    signs = np.asarray(wire.unpack_signs(payload))[:d]
+    want = np.where(np.asarray(flat) >= 0, 1, -1)
+    np.testing.assert_array_equal(signs, want)
+
+
+def _walk_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None:
+                yield from _walk_eqns(inner)
+            if isinstance(v, (list, tuple)):
+                for vv in v:
+                    inner = getattr(vv, "jaxpr", None)
+                    if inner is not None:
+                        yield from _walk_eqns(inner)
+
+
+def test_sigma_zero_packed_draws_no_rng():
+    """Regression (satellite): PackedZSign's dense path used to draw (and
+    discard) a full noise buffer when sigma == 0 — no PRNG primitive may
+    appear in any sigma == 0 encode jaxpr."""
+    d = 8192
+    flat = jnp.ones((d,))
+    for backend in ["reference", "jnp", "pallas"]:
+        comp = C.make_compressor("zsign_packed", z=1, sigma=0.0,
+                                 encode_backend=backend)
+        jaxpr = jax.make_jaxpr(
+            lambda k, f: comp.encode(k, f, None)[0])(
+                jax.random.PRNGKey(0), flat)
+        for eqn in _walk_eqns(jaxpr.jaxpr):
+            assert "threefry" not in eqn.primitive.name, (backend, eqn)
+            assert "erf" not in eqn.primitive.name, (backend, eqn)
+
+
+# ---------------------------------------------------------------------------
+# no (n_clients, d) fp32 noise buffer
+# ---------------------------------------------------------------------------
+
+# structural data movement of the input buffer itself (padding x to the
+# tile boundary, reshapes) is not noise — only COMPUTED f32 values count.
+_STRUCTURAL = {"pad", "reshape", "squeeze", "transpose", "broadcast_in_dim",
+               "convert_element_type", "slice", "dynamic_slice",
+               "dynamic_update_slice", "concatenate", "copy",
+               # transparent containers: their bodies are walked instead
+               "pjit", "closed_call", "custom_jvp_call", "custom_vjp_call"}
+
+
+def _max_f32_outvar_bytes(jaxpr):
+    worst = 0
+    for eqn in _walk_eqns(jaxpr):
+        if eqn.primitive.name in _STRUCTURAL:
+            continue
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            if aval is None or not hasattr(aval, "shape"):
+                continue
+            if aval.dtype == jnp.float32:
+                n = 1
+                for s in aval.shape:
+                    n *= int(s)
+                worst = max(worst, 4 * n)
+    return worst
+
+
+@pytest.mark.parametrize("setup", [
+    ("pallas", 0), ("jnp", 2),
+])
+def test_no_dense_noise_buffer_in_encode_jaxpr(setup):
+    """Jaxpr scan: the chunked-jnp and pallas fused encodes never produce an
+    fp32 intermediate anywhere near (n_clients, d) — the largest fp32 outvar
+    in the whole client fan-out stays bounded by the chunk window. The
+    reference dense draw (sanity check) produces the full stacked buffer."""
+    backend, chunk = setup
+    n, d = 16, 8 * TILE + 100
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    flats = jnp.zeros((n, d))
+    comp = C.make_compressor("zsign", z=1, sigma=0.5, encode_backend=backend,
+                             encode_chunk_tiles=chunk)
+    fan_out = jax.vmap(lambda k, f: comp.encode(k, f, None)[0])
+    worst = _max_f32_outvar_bytes(jax.make_jaxpr(fan_out)(keys, flats).jaxpr)
+    stacked_noise_bytes = 4 * n * d
+    limit = 4 * n * max(chunk, 1) * TILE  # the chunk window (pallas: 0 eqns)
+    assert worst < stacked_noise_bytes / 4, (backend, worst)
+    assert worst <= limit, (backend, worst)
+
+    ref = C.make_compressor("zsign", z=1, sigma=0.5,
+                            encode_backend="reference")
+    worst_ref = _max_f32_outvar_bytes(
+        jax.make_jaxpr(jax.vmap(lambda k, f: ref.encode(k, f, None)[0]))(
+            keys, flats).jaxpr)
+    assert worst_ref >= stacked_noise_bytes  # the pathology, still visible
+
+
+def test_no_dense_noise_buffer_in_compiled_single_pass():
+    """Compiled-buffer scan for the single-pass jnp default: XLA fuses the
+    whole counter->threshold->bitpack chain into the uint8 payload, so the
+    compiled round allocates ~zero temp where the reference dense draw
+    allocates the full (n_clients, d) fp32 noise surface (and more)."""
+    n, d = 8, 16 * TILE + 1
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    flats = jnp.zeros((n, d))
+    temps = {}
+    for backend in ["jnp", "reference"]:
+        comp = C.make_compressor("zsign", z=1, sigma=0.5,
+                                 encode_backend=backend)
+        fan_out = jax.jit(jax.vmap(lambda k, f: comp.encode(k, f, None)[0]))
+        mem = fan_out.lower(keys, flats).compile().memory_analysis()
+        temps[backend] = mem.temp_size_in_bytes
+    stacked_noise_bytes = 4 * n * d
+    assert temps["jnp"] < stacked_noise_bytes / 4, temps
+    assert temps["reference"] >= stacked_noise_bytes, temps
+
+
+# ---------------------------------------------------------------------------
+# compressed-domain group scan
+# ---------------------------------------------------------------------------
+
+def _consensus(comp, groups, n, d, seed=0):
+    y = jax.random.normal(jax.random.PRNGKey(seed), (1, groups * n, 1, d))
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    cfg = fedavg.FedConfig(n_clients=n, client_groups=groups,
+                           client_lr=0.01, server_lr=0.3)
+    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg))
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    return step, st, y.reshape(groups, n, 1, d)
+
+
+def test_stacks_group_payloads_dispatch():
+    assert C.make_compressor("zsign").stacks_group_payloads()
+    assert C.make_compressor("efsign").stacks_group_payloads()
+    assert C.make_compressor("topk").stacks_group_payloads()
+    assert not C.make_compressor("identity").stacks_group_payloads()
+    assert not C.make_compressor("qsgd").stacks_group_payloads()
+    assert not C.make_compressor("dpgauss").stacks_group_payloads()
+
+
+@pytest.mark.parametrize("mask_on", [True, False])
+def test_group_scan_bit_identical_to_vmap_path(mask_on):
+    """8 clients as 2x4 (payload-stacking scan) vs 1x8 (vmap): the fused
+    encode streams and the single 8-client sign-reduce are the same
+    computation, so params must be BIT-identical (0/1 mask -> integer sums),
+    including under partial participation."""
+    d = 80
+    outs = {}
+    for groups, n in [(1, 8), (2, 4)]:
+        comp = C.make_compressor("zsign", z=1, sigma=1.0)
+        step, st, y = _consensus(comp, groups, n, d, seed=5)
+        mask = jnp.ones((groups, n))
+        if mask_on:
+            mask = mask.reshape(1, 8).at[0, 2].set(0.0).at[0, 7].set(
+                0.0).reshape(groups, n)
+        st = st._replace(rng=jax.random.PRNGKey(42))
+        for _ in range(5):
+            st, m = step(st, {"y": y}, mask)
+        outs[groups] = np.asarray(st.params["x"])
+    np.testing.assert_array_equal(outs[1], outs[2])
+
+
+def test_group_stack_aggregate_equals_per_group_sum():
+    """One sign_reduce over the (G*N, n_bytes) stack == per-group reduces
+    summed: exact for 0/1 masks, f32-rounding-close for EF scale weights."""
+    G, N, n_bytes = 3, 8, 1024
+    rng = np.random.RandomState(0)
+    packed = jnp.asarray(rng.randint(0, 256, (G, N, n_bytes)), jnp.uint8)
+    mask = jnp.asarray(rng.randint(0, 2, (G, N)).astype(np.float32))
+    one = C.sign_reduce(packed.reshape(G * N, n_bytes), mask.reshape(-1),
+                        "jnp")
+    per = sum(C.sign_reduce(packed[g], mask[g], "jnp") for g in range(G))
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(per))
+    scales = jnp.asarray(rng.rand(G, N).astype(np.float32))
+    one_w = C.sign_reduce(packed.reshape(G * N, n_bytes),
+                          (mask * scales).reshape(-1), "jnp")
+    per_w = sum(C.sign_reduce(packed[g], mask[g] * scales[g], "jnp")
+                for g in range(G))
+    np.testing.assert_allclose(np.asarray(one_w), np.asarray(per_w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_group_scan_emits_payload_stack_not_dense_partials():
+    """Jaxpr of the G>1 round for a sign compressor: the scan's carry/ys hold
+    uint8 payloads; no fp32 array of (G*N, d) or per-group dense decode
+    appears before the single final aggregate."""
+    d = 2 * TILE
+    comp = C.make_compressor("zsign", z=1, sigma=0.5, encode_chunk_tiles=1)
+    G, n = 4, 4
+    cfg = fedavg.FedConfig(n_clients=n, client_groups=G, client_lr=0.01,
+                           server_lr=0.3)
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    step = fedavg.build_round_step(loss_fn, comp, cfg)
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    batch = {"y": jnp.zeros((G, n, 1, d))}
+    jaxpr = jax.make_jaxpr(step)(st, batch, jnp.ones((G, n)))
+    # find the scan over groups and check its outputs are u8 payload stacks
+    scans = [e for e in _walk_eqns(jaxpr.jaxpr) if e.primitive.name == "scan"]
+    assert scans, "group loop must lower to lax.scan"
+    group_scan = max(scans, key=lambda e: len(e.outvars))
+    u8_outs = [v for v in group_scan.outvars
+               if getattr(v.aval, "dtype", None) == jnp.uint8]
+    assert u8_outs, "group scan must emit the stacked uint8 payloads"
+    for v in group_scan.outvars:
+        aval = v.aval
+        if aval.dtype == jnp.float32 and aval.ndim >= 1:
+            n_el = int(np.prod(aval.shape))
+            assert n_el < d, f"dense f32 group partial in scan outputs: {aval}"
+
+
+# ---------------------------------------------------------------------------
+# static participation-mask dispatch
+# ---------------------------------------------------------------------------
+
+def test_weights_are_mask_dispatches_popcount():
+    """build_round_step(weights_are_mask=True) routes the jnp sign-reduce
+    through wire.unpack_sum_mask (population_count in the jaxpr); the
+    default keeps the LUT path."""
+    n, n_bytes = 8, 256
+    payload = jnp.zeros((n, n_bytes), jnp.uint8)
+    mask = jnp.ones((n,))
+    for flag, want in [(True, True), (False, False)]:
+        comp = C.make_compressor("zsign", agg_backend="jnp",
+                                 weights_are_mask=flag)
+        jaxpr = jax.make_jaxpr(
+            lambda p, m: comp.aggregate(p, m, 8 * n_bytes))(payload, mask)
+        has_pc = any(e.primitive.name == "population_count"
+                     for e in _walk_eqns(jaxpr.jaxpr))
+        assert has_pc == want, (flag, has_pc)
+
+
+def test_weights_are_mask_identical_results():
+    """The popcount specialization is bit-identical for real 0/1 masks,
+    end-to-end through the engine."""
+    d = 120
+    outs = {}
+    for flag in [False, True]:
+        comp = C.make_compressor("zsign", z=1, sigma=1.0)
+        loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+        cfg = fedavg.FedConfig(n_clients=6, client_lr=0.01, server_lr=0.3)
+        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg,
+                                               weights_are_mask=flag))
+        st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                      jax.random.PRNGKey(1))
+        y = jax.random.normal(jax.random.PRNGKey(2), (1, 6, 1, d))
+        mask = jnp.ones((1, 6)).at[0, 3].set(0.0)
+        for _ in range(4):
+            st, _ = step(st, {"y": y}, mask)
+        outs[flag] = np.asarray(st.params["x"])
+    np.testing.assert_array_equal(outs[False], outs[True])
+
+
+def test_e1_fast_client_path_matches_legacy():
+    """The E == 1 gradient shortcut and the legacy scan+subtract client path
+    (the benchmark's dense-baseline engine) agree to f32 rounding — the
+    only difference is the (gamma*g)/gamma round-trip the fast path skips."""
+    d, n = 96, 6
+    comp = C.make_compressor("identity")
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    cfg = fedavg.FedConfig(n_clients=n, client_lr=0.01, server_lr=0.5)
+    y = jax.random.normal(jax.random.PRNGKey(2), (1, n, 1, d))
+    mask = jnp.ones((1, n))
+    outs = {}
+    for legacy in [False, True]:
+        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg,
+                                               legacy_client_path=legacy))
+        st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                      jax.random.PRNGKey(1))
+        for _ in range(5):
+            st, m = step(st, {"y": y}, mask)
+        outs[legacy] = np.asarray(st.params["x"])
+    np.testing.assert_allclose(outs[False], outs[True], rtol=2e-5, atol=1e-6)
+
+
+def test_efsign_has_no_mask_flag():
+    """EF weights are mask * scale — never a pure membership mask; the
+    engine must not be able to flip a flag on it."""
+    assert "weights_are_mask" not in {
+        f.name for f in __import__("dataclasses").fields(
+            C.make_compressor("efsign"))}
