@@ -12,23 +12,30 @@ from repro.core import compression, fedavg
 
 def run_fed(loss_fn, params0, batches, comp, cfg, *, rounds, mask=None,
             sigma0=0.0, plateau=None, eval_fn=None, dynamic_sigma=False,
-            fetch_every=16, agg_backend=None):
+            fetch_every=16, agg_backend=None, ctx=None):
     """Run ``rounds`` federated rounds; returns dict of metric curves.
 
     ``batches``: callable round_idx -> batch pytree (groups, n, E, ...).
 
-    The server state is DONATED into the jitted round step (params, opt
-    state, and the (G, N, n_coords) residual buffers update in place instead
-    of being copied every round), and per-round ``RoundMetrics`` stay on
-    device, fetched in batches of ``fetch_every`` rounds so the host never
-    blocks the device between steps. Plateau mode keeps the per-round fetch
-    — the controller genuinely needs each round's scalar loss before the
-    next sigma.
+    ``ctx`` is the RoundContext the step runs under (core/context.py); when
+    omitted it is built from the legacy ``dynamic_sigma`` / ``agg_backend``
+    kwargs with donation on. Per ``ctx.donate_state`` the server state is
+    DONATED into the jitted round step (params, opt state, and the
+    (G, N, n_coords) residual buffers update in place instead of being
+    copied every round), and per-round ``RoundMetrics`` stay on device,
+    fetched in batches of ``fetch_every`` rounds so the host never blocks
+    the device between steps. Plateau mode keeps the per-round fetch — the
+    controller genuinely needs each round's scalar loss before the next
+    sigma.
     """
-    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg,
-                                           dynamic_sigma=dynamic_sigma,
-                                           agg_backend=agg_backend),
-                   donate_argnums=0)
+    if ctx is None:
+        ctx = fedavg.RoundContext(agg_backend=agg_backend,
+                                  dynamic_sigma=dynamic_sigma)
+    elif agg_backend is not None or dynamic_sigma:
+        raise ValueError("pass ctx OR the legacy agg_backend/dynamic_sigma "
+                         "kwargs, not both")
+    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg, ctx),
+                   donate_argnums=(0,) if ctx.donate_state else ())
     # copy params0 so donation never consumes caller-owned buffers
     state = fedavg.init_server_state(jax.tree.map(jnp.array, params0), cfg,
                                      comp, jax.random.PRNGKey(1), sigma0)

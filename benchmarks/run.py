@@ -292,7 +292,8 @@ def fed_round_step(fast=False):
     micro = 8
     iters, warmup = (3, 1) if fast else (5, 2)
 
-    def time_round(n, groups, agg, enc, mask_flag=False, legacy=False):
+    def time_round(n, groups, agg, enc, mask_flag=False, legacy=False,
+                   spec=None):
         cfg = fedavg.FedConfig(n_clients=n, client_groups=groups,
                                client_lr=0.05,
                                server_lr=sign_slr(0.01, 1, 0.05, 0.05))
@@ -301,12 +302,12 @@ def fed_round_step(fast=False):
                  "y": jax.random.randint(ky, (groups, n, 1, micro), 0,
                                          classes)}
         mask = jnp.ones((groups, n))
-        comp = compression.make_compressor("zsign", z=1, sigma=0.05,
-                                           agg_backend=agg,
-                                           encode_backend=enc)
-        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg,
-                                               weights_are_mask=mask_flag,
-                                               legacy_client_path=legacy),
+        comp = (compression.Pipeline(spec) if spec else
+                compression.ZSignCompressor(z=1, sigma=0.05))
+        ctx = fedavg.RoundContext(agg_backend=agg, encode_backend=enc,
+                                  weights_are_mask=mask_flag,
+                                  legacy_client_path=legacy)
+        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg, ctx),
                        donate_argnums=0)
         # fresh param copies: the donated step consumes its state buffers
         state = fedavg.init_server_state(
@@ -329,6 +330,19 @@ def fed_round_step(fast=False):
             t_mask = time_round(n, 1, "auto", "auto", mask_flag=True)
             emit("fed_round_step", "round_fused_mask_us_n32",
                  round(t_mask, 1))
+            # pipeline-spec rows: the staged API builds the same round as
+            # the legacy kwargs path, so these must land within noise of
+            # round_fused_us_n32 (redesign is perf-neutral), and the fused
+            # dp|sign composition must not reopen a dense client surface.
+            t_spec = time_round(n, 1, "auto", "auto",
+                                spec="zsign(z=1,sigma=0.05)")
+            emit("fed_round_step", "round_pipeline_us_n32", round(t_spec, 1))
+            emit("fed_round_step", "round_speedup_pipeline_n32",
+                 round(times["dense"] / t_spec, 2))
+            t_dp = time_round(n, 1, "auto", "auto",
+                              spec="dp(clip=1.0,noise=0.05)|zsign")
+            emit("fed_round_step", "round_pipeline_dp_us_n32",
+                 round(t_dp, 1))
 
         # isolated server aggregation on the same wire shapes: the term the
         # fused agg backend actually changes (the local-SGD compute above is

@@ -1,11 +1,20 @@
 """DP-SignFedAvg (paper Algorithm 2 / Appendix F): client-level DP with
-1-bit uplink.
+1-bit uplink, as ONE pipeline spec.
 
     PYTHONPATH=src python examples/dp_federated.py
 
 Calibrates the Gaussian noise multiplier to a target (eps, delta) via the
-RDP accountant, then trains with clipping + noisy sign. The same noise does
-double duty: privacy AND the sign-bias correction of the paper's Lemma 1.
+RDP accountant, then trains with the ``dp`` transform stage composed over
+the packed sign codec:
+
+    dp(clip=C, noise=nm*C) | zsign(z=1)
+
+The pipeline FUSES the dp noise into the sign codec's sigma (see
+compression.DPTransform), so the same Gaussian does double duty — privacy
+AND the sign-bias correction of the paper's Lemma 1 — while the wire stays
+bitpacked at 1 bit/coord and the dense per-client noise buffer never exists
+(the counter-based fused encoder samples each wire bit from its exact
+Bernoulli law).
 """
 import jax
 import jax.numpy as jnp
@@ -26,8 +35,10 @@ for target_eps in [2.0, 8.0]:
     nm = calibrate_noise(q=Q, steps=ROUNDS, target_eps=target_eps,
                          delta=DELTA)
     sigma = nm * CLIP
-    comp = compression.make_compressor("zsign", z=1, sigma=sigma)
-    cfg = fedavg.FedConfig(n_clients=N, client_lr=0.05, dp_clip=CLIP,
+    comp = compression.Pipeline(f"dp(clip={CLIP},noise={sigma})|zsign(z=1)")
+    assert comp.wire_bits_per_coord == 1.0          # DP rides the 1-bit wire
+    assert comp.codec.sigma == sigma                # noise fused into sigma
+    cfg = fedavg.FedConfig(n_clients=N, client_lr=0.05,
                            server_lr=0.005 / (eta_z(1) * sigma * 0.05),
                            server_opt="momentum",
                            server_opt_kw=(("beta", 0.9),))
@@ -44,6 +55,8 @@ for target_eps in [2.0, 8.0]:
         state, m = step(state, batch, jnp.asarray(mask)[None])
     eps = compute_epsilon(q=Q, noise_multiplier=nm, steps=ROUNDS,
                           delta=DELTA)
+    wf = comp.wire_format()
     print(f"target eps={target_eps:4.1f}: noise multiplier={nm:5.2f} "
           f"(achieved eps={eps:5.2f}, delta={DELTA})  "
-          f"acc={acc_fn(state.params, x, y):.3f}  [1 bit/coord uplink]")
+          f"acc={acc_fn(state.params, x, y):.3f}  "
+          f"[{wf.bits_per_coord:g} bit/coord {wf.layout} uplink]")

@@ -22,15 +22,15 @@ init, loss_fn, acc_fn = mlp_loss_builder(64, 10)
 sampler = ParticipationSampler(total_clients=N, per_round=8,
                                over_provision=1.25, failure_rate=0.05)
 
-for name, cname, ckw, slr in [
-        ("SGD+momentum (32 bit)", "identity", {}, 0.05),
-        ("vanilla SignSGD", "zsign", {"sigma": 0.0}, 0.2),
-        ("EF-SignSGD", "efsign", {}, 1.0),
-        ("1-SignSGD (paper)", "zsign", {"z": 1, "sigma": 0.05},
+for name, spec, slr in [
+        ("SGD+momentum (32 bit)", "identity", 0.05),
+        ("vanilla SignSGD", "zsign", 0.2),          # sigma defaults to 0
+        ("EF-SignSGD", "ef|zsign", 1.0),            # EF composes as a stage
+        ("1-SignSGD (paper)", "zsign(z=1,sigma=0.05)",
          0.01 / (eta_z(1) * 0.05 * 0.05)),
 ]:
-    comp = compression.make_compressor(cname, **ckw)
-    opt = ("momentum", (("beta", 0.9),)) if cname in ("identity", "efsign") \
+    comp = compression.Pipeline(spec)
+    opt = ("momentum", (("beta", 0.9),)) if spec in ("identity", "ef|zsign") \
         else ("sgd", ())
     cfg = fedavg.FedConfig(n_clients=N, client_lr=0.05, server_lr=slr,
                            server_opt=opt[0], server_opt_kw=opt[1])

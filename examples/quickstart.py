@@ -4,7 +4,9 @@
 
 Shows the headline result: vanilla SignSGD stalls under heterogeneous
 gradients; z-SignSGD (the paper's stochastic sign) converges; uplink is 1
-bit/coordinate either way.
+bit/coordinate either way. Compressors are built from pipeline spec strings
+(core/compression.py — ``Pipeline("zsign(z=1,sigma=2.0)")``; stages compose
+with ``|``, e.g. ``"ef|topk(frac=0.01)"`` — see docs/API.md).
 """
 import jax
 import jax.numpy as jnp
@@ -22,14 +24,13 @@ mask = jnp.ones((1, N))
 
 print(f"consensus problem: d={D}, {N} clients  "
       f"(optimum = mean of client targets)")
-for name, comp, slr in [
-        ("uncompressed GD", compression.make_compressor("identity"), 1.0),
-        ("vanilla SignSGD", compression.make_compressor("zsign", sigma=0.0), 0.05),
-        ("1-SignSGD  (z=1, Gaussian)",
-         compression.make_compressor("zsign", z=1, sigma=2.0), 2.0),
-        ("inf-SignSGD (z=inf, uniform)",
-         compression.make_compressor("zsign", z=0, sigma=2.0), 2.5),
+for name, spec, slr in [
+        ("uncompressed GD", "identity", 1.0),
+        ("vanilla SignSGD", "zsign", 0.05),       # sigma defaults to 0
+        ("1-SignSGD  (z=1, Gaussian)", "zsign(z=1,sigma=2.0)", 2.0),
+        ("inf-SignSGD (z=inf, uniform)", "zsign(z=inf,sigma=2.0)", 2.5),
 ]:
+    comp = compression.Pipeline(spec)
     cfg = fedavg.FedConfig(n_clients=N, client_lr=0.01, server_lr=slr)
     step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg))
     state = fedavg.init_server_state({"x": jnp.zeros(D)}, cfg, comp,

@@ -1,74 +1,106 @@
-"""Gradient compressors over the flat wire-buffer codec (core/wire.py).
+"""Composable compression pipelines over the flat wire-buffer codec (wire.py).
 
-The paper's contribution (ZSignCompressor) plus every baseline it compares
-against: vanilla SignSGD, EF-SignSGD, Sto-SignSGD, QSGD/FedPAQ, top-k, DP
-Gaussian, and identity (uncompressed FedAvg). All compressors share one
-flat-buffer interface so the federated round engine (core/fedavg.py) treats
-them as a plug-in:
+The paper's central claim is that stochastic sign compression is ONE scheme
+with many instances (sto-sign is the z -> inf member, DP mechanisms compose
+with sign transmission, error feedback wraps any contractive codec). This
+module makes the code shape match the math shape: a compressor is a
+:class:`Pipeline` of orthogonal stages rather than a bespoke class per
+combination.
+
+Stage taxonomy
+--------------
+
+``Transform`` stages are codec-agnostic pre-processing on the flat fp32
+buffer, applied client-side before anything touches the wire:
+
+  ``ef``              error-feedback residual (Karimireddy et al. '19): adds
+                      the per-client residual before the codec and records
+                      what the codec failed to transmit. The ONLY stateful
+                      stage; its state is one flat fp32 buffer per client.
+  ``dp``              DP clip + Gaussian noise (paper Algorithm 2): clips the
+                      buffer to norm ``clip`` and adds ``noise`` * N(0, I).
+                      When the pipeline's codec is a sign codec the noise is
+                      FUSED into the codec's sigma (the same Gaussian does
+                      double duty: privacy and the Lemma-1 sign-bias
+                      correction), so the dense noise buffer never exists and
+                      the wire stays 1 bit/coord. ``dp(clip=1.0,eps=2.0)``
+                      calibrates the noise from a target (eps, delta) via the
+                      RDP accountant in core/dp.py.
+
+``WireCodec`` stages own the :class:`~repro.core.wire.WireFormat` and BOTH
+ends of the wire: the client encode and the server's compressed-domain
+``aggregate`` (sign codecs reduce bitpacked payloads through
+:func:`sign_reduce` without ever materializing the dense (n_clients, d) sign
+matrix; the COO codec scatter-adds):
+
+  ``zsign``           the paper's stochastic sign operator: bitpacked
+                      Sign(x + sigma * xi_z) at 1 bit/coord, counter-based
+                      fused encode for z in {inf, 1}. ``sigma`` is an
+                      EXPLICIT field (default 0.0 = vanilla SignSGD, which
+                      statically gates off the PRNG on every backend);
+                      ``sigma_mode="norm"`` is the sto-sign instance
+                      (sigma_i = ||flat_i||), ``scale="mean_abs"`` transmits
+                      the EF-SignSGD per-client magnitude next to the bits.
+  ``zsign_packed``    same codec pinned to the Pallas TPU kernels (in-kernel
+                      counter noise; dense-reference path through
+                      ``zsign_compress``). sigma == 0 keeps the no-PRNG
+                      jaxpr guarantee (regression-pinned in tests).
+  ``stosign``         alias: ``zsign(sigma_mode=norm, z=inf)``.
+  ``qsgd``            unbiased stochastic quantizer (Alistarh et al.),
+                      dense fp32 wire of ceil(log2(2s+1)) logical bits/coord.
+  ``topk``            global top-k sparsifier, COO (values, indices) wire;
+                      STATELESS — compose ``ef|topk`` for the classic
+                      residual-corrected variant.
+  ``identity``/``dense``  uncompressed fp32 FedAvg.
+
+A :class:`Pipeline` is transforms + one codec, buildable from a spec string:
+
+    Pipeline("ef|zsign")                        # == EF-SignSGD, bit-exact
+    Pipeline("zsign(z=1,sigma=0.5)")            # the paper's 1-SignFedAvg
+    Pipeline("dp(clip=1.0,eps=2.0)|zsign_packed")  # DP at 1 bit/coord
+    Pipeline("ef|topk(frac=0.01)")              # EF over sparsification
+
+and exposes the engine-facing compressor interface (core/fedavg.py consumes
+it unchanged):
 
     init_state(n_coords)              -> per-client residual buffer or None
-    encode(key, flat, state, sigma)   -> (payload, new_state)  # on the client
+    encode(key, flat, state, sigma)   -> (payload, new_state)  # client
     aggregate(payload, mask, n_coords)-> (d_pad,) f32 masked SUM  # server
     decode_mean(flat_mean, sigma)     -> (d_pad,) f32 estimate    # server
-    wire_format()                     -> WireFormat (dtype, bits/coord, layout)
+    wire_format()                     -> WireFormat (dtype, bits/coord, ...)
 
-``flat`` is the pseudo-gradient ((x_{t-1} - x^i_{t,E}) / gamma) flattened
-ONCE by the engine into a single fp32 buffer; ``payload`` is what crosses the
-network: a bitpacked uint8 buffer for every sign-family compressor (zsign,
-zsign_packed, stosign, efsign — 1 bit per coordinate, 32x smaller than fp32),
-a COO (values, indices) pair for top-k, dense fp32 otherwise.
+``flat`` is the pseudo-gradient flattened ONCE by the engine
+(wire.TreeSpec); ``payload`` is what crosses the network. ``aggregate``
+consumes payloads stacked on a leading client axis with the (n_clients,)
+participation mask; all decoders are linear in the per-client encodings, so
+group-sum aggregation across sequential client groups is exact.
 
-``aggregate`` consumes payloads stacked on a leading client axis together
-with the (n_clients,) participation mask and returns the masked flat SUM.
-All decoders are linear in the per-client encodings, so the server may
-aggregate one parallel group per collective or scan-accumulate sums across
-sequential client groups — both paths produce identical estimates.
+Error-feedback composition contract: ``ef`` adds its residual to the buffer
+it receives; after the codec runs, the new residual is
+``codec_input - local_decode(payload)`` where ``local_decode`` is the exact
+per-client value the server will attribute to this client (scale * signs for
+the sign codec, the scattered values for top-k, the quantized levels for
+qsgd). That one rule reproduces EF-SignSGD and EF-top-k bit-exactly and
+makes EF work over every codec.
 
-Every sign-family ``aggregate`` (zsign, zsign_packed, stosign, and efsign,
-whose weights are ``mask * scale``) reduces DIRECTLY in the compressed
-domain through :func:`sign_reduce`: one fused weighted sign-reduce over the
-stacked (n_clients, n_bytes) uint8 payload, selected by the compressor's
-``agg_backend`` field ("auto" picks the Pallas kernel on TPU and the
-LUT-gather jnp path elsewhere; "pallas"/"jnp" force one; "dense" is the
-legacy dense-sign-matrix path kept only for benchmarks/tests). The server's
-per-round memory traffic is therefore ~1 bit/coord/client instead of the
-32 bits/coord/client the old vmap(unpack_signs) + einsum decode cost. The
-engine (core/fedavg.py) and launchers thread ``agg_backend`` through
-``build_round_step`` so deployments can pin a backend without rebuilding
-compressors.
+Backend policy lives in core/context.py: ``RoundContext`` carries the
+deployment's ``agg_backend`` / ``encode_backend`` / mask guarantee, and
+``resolve_backend`` is the one place "auto" becomes pallas-on-TPU /
+jnp-elsewhere. ``Pipeline.with_context(ctx)`` rebinds every sign stage —
+kernels are dispatched per-stage, not per-class.
 
-The client encode side mirrors the server: every sign-family encode streams
-through a FUSED path selected by ``encode_backend`` ("auto" | "jnp" |
-"pallas" | "reference"). The fused paths derive their noise from a counter
-(threefry2x32 of the client key and the global element index — core/noise.py)
-and sample each wire bit directly from its exact Bernoulli law
-[u > 1 - P_z(x/sigma)] (the inverse-CDF coupling: identically distributed to
-Sign(x + sigma*xi_z), not an approximation), so the (d,) fp32 noise buffer —
-which the vmap over clients used to stack into an (n_clients, d) HBM surface
-32x the wire size — never exists. "pallas" generates the randomness inside
-each kernel grid tile (kernels/zsign ``zsign_encode_fused``; what the old
-"on real TPU the noise would be generated in-kernel" note promised, now
-real); "jnp" is ``fused_sign_encode_jnp``, bit-exact against the kernel for
-the same key (single elementwise fusion by default — XLA allocates no f32
-temp, verified by compiled-memory tests — or an explicitly chunked scan via
-``encode_chunk_tiles`` that bounds the live noise window to a few tiles);
-"auto" picks pallas on TPU, jnp elsewhere; "reference" keeps the dense
-jax.random draw as the statistical oracle. Finite z > 1 has no cheap inverse
-CDF and always takes the dense path. Sto-Sign reuses the z=inf fused path
-with sigma = ||flat|| computed as a prior reduction.
-
-Wire-size accounting: ``wire_bits_per_coord`` (mirrored in ``wire_format()``)
-is the logical uplink cost per model coordinate and is derived from the
-compressor's own hyper-parameters (e.g. 64*frac for top-k, ceil(log2(2s+1))
-for QSGD) — metrics multiply it by the true coordinate count, never by the
-padded buffer length. Fused-encode payloads are tile-padded
-(ceil(d/8192)*1024 bytes, like the Pallas kernel); the logical cost stays
-1 bit/coord.
+The legacy entry point ``make_compressor(name, **kw)`` remains as a thin
+deprecation shim that builds the equivalent pipeline (one DeprecationWarning
+per call); the old class names are factory functions doing the same. Fused
+encode/reduce internals (``fused_sign_encode_jnp``, ``sign_reduce``,
+wire-size accounting) are unchanged from the pre-pipeline module — see
+wire.py for the accounting notes and kernels/zsign for the TPU paths.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Tuple
 
 import jax
@@ -76,10 +108,14 @@ import jax.numpy as jnp
 
 from repro.core import noise as znoise
 from repro.core import wire
+from repro.core.context import (AGG_BACKENDS, ENCODE_BACKENDS, RoundContext,
+                                resolve_backend)
 from repro.core.wire import (WireFormat, pack_flat, pack_signs,
                              unpack_signs, unpack_sum)
 
 __all__ = [
+    "Pipeline", "SignCodec", "QSGDCodec", "TopKCodec", "DenseCodec",
+    "ErrorFeedback", "DPTransform", "RoundContext",
     "Compressor", "ZSignCompressor", "StoSignCompressor", "EFSignCompressor",
     "QSGDCompressor", "TopKCompressor", "DPGaussianCompressor",
     "PackedZSignCompressor", "make_compressor", "available", "global_norm",
@@ -87,25 +123,10 @@ __all__ = [
     "AGG_BACKENDS", "ENCODE_BACKENDS",
 ]
 
-#: aggregation backends for the sign-family weighted reduce
-AGG_BACKENDS = ("auto", "jnp", "pallas", "dense")
-
-#: client-encode backends for the sign family ("reference" = dense draw)
-ENCODE_BACKENDS = ("auto", "jnp", "pallas", "reference")
-
 #: fused-encode tile, in elements. MUST equal kernels/zsign ops.TILE — the
 #: jnp fallback reproduces the kernel's per-tile counter stream (asserted in
 #: tests without importing the Pallas stack here).
 ENCODE_TILE = 8192
-
-
-def _resolve_encode_backend(backend: str) -> str:
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
-    if backend not in ("jnp", "pallas", "reference"):
-        raise ValueError(f"unknown encode backend {backend!r}; "
-                         f"expected one of {ENCODE_BACKENDS}")
-    return backend
 
 
 def fused_sign_encode_jnp(flat: jax.Array, key, sigma, *, z: int,
@@ -166,7 +187,8 @@ def sign_reduce(packed: jax.Array, weights: jax.Array,
     sum of the +/-1 signs, without ever materializing the dense
     (n_clients, d) fp32 sign matrix. Correct for ARBITRARY per-client
     weights on every backend (0/1 participation masks, data-size
-    proportional weights, EF mask * scale). ``backend``:
+    proportional weights, EF mask * scale). ``backend`` resolves through
+    :func:`repro.core.context.resolve_backend`:
 
       auto    Pallas kernel on TPU, wire.unpack_sum elsewhere (the CPU
               LUT-gather path, bit-identical to the kernel)
@@ -178,21 +200,17 @@ def sign_reduce(packed: jax.Array, weights: jax.Array,
     ``weights_are_mask`` is a STATIC caller guarantee that every weight is
     0 or 1 (a participation mask). The membership contract cannot be checked
     on traced values, so it is plumbed from whoever constructs the mask (the
-    round engine via ``build_round_step(weights_are_mask=True)``); when set,
-    the jnp backend dispatches to the popcount specialization
+    round engine via ``RoundContext(weights_are_mask=True)``); when set, the
+    jnp backend dispatches to the popcount specialization
     ``wire.unpack_sum_mask`` (bit-identical for any 0/1 mask — integer
     sums). Weighted/EF calls keep the LUT path.
     """
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    backend = resolve_backend("agg", backend)
     if backend == "pallas":
         from repro.kernels.zsign import ops as K
         return K.sign_reduce(packed, weights)
     if backend == "dense":
         return wire.unpack_sum_dense(packed, weights)
-    if backend != "jnp":
-        raise ValueError(f"unknown agg backend {backend!r}; "
-                         f"expected one of {AGG_BACKENDS}")
     if weights_are_mask:
         return wire.unpack_sum_mask(packed, weights)
     return unpack_sum(packed, weights)
@@ -204,235 +222,321 @@ def global_norm(tree) -> jax.Array:
             for l in jax.tree_util.tree_leaves(tree)))
 
 
+def _norm_z(z) -> int:
+    """Spec-level z values: "inf" (or any z <= 0 / float inf) -> Z_INF."""
+    if isinstance(z, str):
+        if z.lower() == "inf":
+            return znoise.Z_INF
+        raise ValueError(f"z must be an int or 'inf', got {z!r}")
+    if isinstance(z, float):
+        if math.isinf(z):
+            return znoise.Z_INF
+        if z != int(z):
+            raise ValueError(f"z must be an integer or 'inf', got {z!r} — "
+                             f"fractional z has no defined noise law here")
+        z = int(z)
+    return znoise.Z_INF if z <= znoise.Z_INF else z
+
+
 # ---------------------------------------------------------------------------
-# compressors
+# transform stages
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class Compressor:
-    """Base: identity (uncompressed FedAvg). Dense fp32 wire format."""
-    wire_bits_per_coord: float = 32.0
-    name: str = "identity"
+class ErrorFeedback:
+    """Per-client error-feedback residual (the only stateful stage).
+
+    Pre-codec: the buffer becomes ``p = flat + e``. Post-codec: the new
+    residual is ``p - local_decode(payload)`` — exactly what the server will
+    NOT see of this client's update. Dead clients keep their residual
+    bit-exactly (the engine masks the state update). Composes with every
+    codec; with the sign codec the spec parser defaults the codec to
+    ``scale="mean_abs"`` so ``ef|zsign`` IS EF-SignSGD.
+    """
+    spec_name = "ef"
+    stateful = True
+
+    def init_state(self, n_coords: int) -> jax.Array:
+        return jnp.zeros((n_coords,), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DPTransform:
+    """DP clip + Gaussian noise (paper Algorithm 2 client mechanism).
+
+    ``clip`` > 0 clips the flat buffer to that L2 norm; ``noise`` is the
+    Gaussian std added afterwards. Instead of ``noise`` you may give a target
+    ``eps`` (with ``delta``/``steps``/``q``): the noise multiplier is then
+    calibrated through the RDP accountant (core/dp.py) and multiplied by the
+    clip norm (the mechanism's sensitivity), so
+    ``dp(clip=1.0,eps=2.0,steps=200,q=0.3)`` is a complete client-side DP
+    spec.
+
+    When the pipeline's codec is a :class:`SignCodec`, ``Pipeline`` FUSES
+    the noise into the codec's sigma at build time: Sign(clip(x) + sigma*xi)
+    is sampled straight from its Bernoulli law by the counter-based fused
+    encoders, so the dense per-client noise buffer never exists and the wire
+    cost stays 1 bit/coord — the paper's "the same noise provides privacy
+    and the sign-bias correction", now a structural property of the
+    pipeline. Over a dense codec the noise is added here (classic
+    DP-FedAvg, 32 bits/coord).
+    """
+    clip: float = 0.0
+    noise: float = 0.0
+    eps: float = 0.0
+    delta: float = 1e-5
+    steps: int = 500
+    q: float = 1.0
+    #: True iff ``noise`` came from an (eps, delta) calibration — the marker
+    #: the Plateau-override refusal keys on (a hand-set noise carries no
+    #: privacy promise to protect; the legacy dpgauss law allows overriding
+    #: it dynamically)
+    calibrated: bool = False
+    spec_name = "dp"
+    stateful = False
+
+    def __post_init__(self):
+        if self.eps > 0.0:
+            if self.noise > 0.0:
+                raise ValueError("give dp(eps=...) OR dp(noise=...), not "
+                                 "both — one target, one mechanism")
+            if self.clip <= 0.0:
+                raise ValueError("dp(eps=...) needs clip > 0 — the clip norm "
+                                 "is the mechanism's sensitivity")
+            from repro.core.dp import calibrate_noise
+            nm = calibrate_noise(q=self.q, steps=self.steps,
+                                 target_eps=self.eps, delta=self.delta,
+                                 hi=200.0)
+            # eps is consumed into the concrete noise std, so re-running
+            # __init__ on this instance (dataclasses.replace) is idempotent
+            object.__setattr__(self, "noise", nm * self.clip)
+            object.__setattr__(self, "eps", 0.0)
+            object.__setattr__(self, "calibrated", True)
+
+    def apply(self, key, flat: jax.Array, sigma=None) -> jax.Array:
+        from repro.core.dp import clip_flat
+        p = flat
+        if self.clip > 0.0:
+            p = clip_flat(p, self.clip)
+        if (sigma is not None) or self.noise > 0.0:
+            sig = self.noise if sigma is None else sigma
+            p = p + sig * jax.random.normal(key, p.shape)
+        return p
+
+    @property
+    def randomized(self) -> bool:
+        return self.noise > 0.0
+
+
+# ---------------------------------------------------------------------------
+# wire codec stages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseCodec:
+    """Uncompressed fp32 wire (identity / FedAvg baseline)."""
+    spec_name = "dense"
+    randomized = False
 
     def wire_format(self) -> WireFormat:
-        return WireFormat("float32", self.wire_bits_per_coord, "dense")
+        return WireFormat("float32", 32.0, "dense")
 
-    def init_state(self, n_coords: int) -> Any:
-        return None
-
-    def encode(self, key, flat: jax.Array, state, sigma=None) -> Tuple[Any, Any]:
+    def encode_with_decode(self, key, p, sigma=None, need_decode=False):
         del key, sigma
-        return flat, state
+        return p, (p if need_decode else None)
 
-    def decode_mean(self, flat_mean: jax.Array, sigma=None) -> jax.Array:
+    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+        del n_coords
+        return wire.dense_masked_sum(payload, mask)
+
+    def decode_mean(self, flat_mean, sigma=None):
         del sigma
         return flat_mean
 
-    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
-        """Masked SUM over the leading client axis of stacked payloads.
-
-        ``n_coords`` is the true (unpadded) coordinate count from the
-        engine's TreeSpec — sparse layouts need it to materialize the dense
-        sum; others may ignore it and return padded buffers.
-        Default: dense einsum (one fp32 collective)."""
-        del n_coords
-        return jnp.einsum("nd,n->d", payload.astype(jnp.float32), mask)
-
-    def stacks_group_payloads(self) -> bool:
-        """Whether the engine's sequential-group scan should emit the raw
-        payload stack (aggregated ONCE over all groups x clients at the end)
-        instead of accumulating per-group decoded f32 sums.
-
-        True exactly when the wire layout is compressed (bitpacked signs,
-        COO top-k): the stacked payloads are then far smaller than
-        client_groups dense f32 partials, and the whole cross-group
-        reduction happens in the compressed domain. Dense fp32 layouts keep
-        the accumulate-in-scan path, whose live state is one (d,) buffer.
-        """
-        return self.wire_format().layout != "dense"
-
 
 @dataclasses.dataclass(frozen=True)
-class ZSignCompressor(Compressor):
-    """The paper's stochastic sign operator (Algorithm 1, line 11).
+class SignCodec:
+    """The unified stochastic-sign wire codec (paper Algorithm 1, line 11).
 
-    enc = Sign(flat + sigma * xi_z)  with xi_z ~ p_z  (z<=0 means z = +inf),
-    transmitted as a bitpacked uint8 buffer (8 coords/byte — the TRUE 1-bit
-    uplink). decode scales by eta_z * sigma — the asymptotically-unbiased
-    estimator of Lemma 1. sigma == 0.0 recovers vanilla SignSGD (biased;
-    diverges on the paper's counterexample — reproduced in tests), with the
-    noise draw gated off entirely on every backend.
+    Encodes Sign(p + sigma * xi_z) as bitpacked uint8 (8 coords/byte — the
+    TRUE 1-bit uplink) and reduces stacked payloads in the compressed domain
+    through :func:`sign_reduce`. One codec covers every sign-family member:
 
-    ``encode_backend`` selects the client-side path (module docstring): the
-    fused counter-based encoders for z in {inf, 1} ("auto"/"jnp"/"pallas",
-    all bit-exact against each other for the same key), or the dense
-    jax.random draw ("reference", and always for finite z > 1).
+      sigma > 0, sigma_mode="fixed"   z-sign (decode debiases by eta_z*sigma;
+                                      Lemma 1). sigma == 0.0 is vanilla
+                                      SignSGD with the PRNG statically gated
+                                      off on every backend.
+      sigma_mode="norm"               sto-sign: per-client sigma_i =
+                                      ||p_i||_2 (a traced scalar through the
+                                      fused threshold), majority-vote decode.
+      scale="mean_abs"                EF-SignSGD wire: the payload carries
+                                      ONE fp32 magnitude (mean |p|) next to
+                                      the bits; aggregation weights become
+                                      mask * scale.
+
+    ``sigma`` is an explicit float field — there is no None-able sigma
+    anywhere in the stage config; the engine's dynamic (Plateau) sigma
+    arrives as a traced override at encode/decode time. ``encode_backend``
+    selects the client path ("auto" | "jnp" | "pallas" | "reference"; see
+    context.resolve_backend) — the fused counter-based encoders for
+    z in {inf, 1}, or the dense jax.random draw ("reference", and always for
+    finite z > 1). ``dense_kernel`` routes the dense-reference path through
+    the Pallas ``zsign_compress`` kernel (the ``zsign_packed`` spec);
+    ``use_kernel`` enables the fused EF+sign Pallas kernel when composed
+    under an ``ef`` transform. ``weights_are_mask`` is the static 0/1-mask
+    guarantee plumbed from RoundContext (never set on scale-weighted
+    aggregation).
     """
     z: int = 1
-    sigma: float = 0.01
-    wire_bits_per_coord: float = 1.0
-    name: str = "zsign"
-    agg_backend: str = "auto"   # sign_reduce backend for server aggregation
-    encode_backend: str = "auto"    # client fused-encode backend
-    encode_chunk_tiles: int = 0     # >0: chunked-scan jnp fallback window
-    weights_are_mask: bool = False  # engine guarantee: weights are 0/1
+    sigma: float = 0.0
+    sigma_mode: str = "fixed"        # "fixed" | "norm" (sto-sign)
+    scale: str = "none"              # "none" | "mean_abs" (EF-SignSGD wire)
+    agg_backend: str = "auto"
+    encode_backend: str = "auto"
+    encode_chunk_tiles: int = 0      # >0: chunked-scan jnp fallback window
+    weights_are_mask: bool = False   # static guarantee: weights are 0/1
+    dense_kernel: bool = False       # reference path via Pallas zsign_compress
+    use_kernel: bool = False         # fused EF+sign Pallas kernel (under ef)
+    spec_name = "zsign"
+    randomized = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "z", _norm_z(self.z))
+        if self.sigma_mode not in ("fixed", "norm"):
+            raise ValueError(f"sigma_mode must be 'fixed' or 'norm', "
+                             f"got {self.sigma_mode!r}")
+        if self.scale not in ("none", "mean_abs"):
+            raise ValueError(f"scale must be 'none' or 'mean_abs', "
+                             f"got {self.scale!r}")
 
     def wire_format(self) -> WireFormat:
-        return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked")
+        layout = "bitpacked+scale" if self.scale == "mean_abs" else "bitpacked"
+        return WireFormat("uint8", 1.0, layout)
+
+    # -- client side --------------------------------------------------------
 
     def _encode_dense(self, key, flat, sig, add_noise):
         """Dense-draw statistical oracle (and the finite z > 1 path)."""
+        if self.dense_kernel:
+            from repro.kernels.zsign import ops as K
+            if not add_noise:
+                # vanilla-SignSGD mode: no noise is drawn (flat doubles as a
+                # dummy operand; sigma == 0 makes it a no-op in the kernel)
+                return K.zsign_compress(flat, flat, 0.0)
+            return K.zsign_compress(
+                flat, znoise.sample_z_noise(key, flat.shape, self.z), sig)
         if add_noise:
             flat = flat + sig * znoise.sample_z_noise(key, flat.shape, self.z)
         return pack_flat(flat)
 
-    def encode(self, key, flat, state, sigma=None):
-        # the ONE place the noise gate is decided: a static sigma of 0.0
-        # (vanilla SignSGD) disables the draw on every backend; a dynamic
-        # sigma (sigma is not None, possibly traced) always flows through —
-        # a runtime 0 degrades exactly inside stochastic_sign_bits.
-        add_noise = (sigma is not None) or self.sigma > 0.0
-        sig = self.sigma if sigma is None else sigma
-        backend = _resolve_encode_backend(self.encode_backend)
+    def _encode_bits(self, key, flat, sig, add_noise):
+        backend = resolve_backend("encode", self.encode_backend)
         if backend == "reference" or (add_noise
                                       and not znoise.counter_supported(self.z)):
-            return self._encode_dense(key, flat, sig, add_noise), state
+            return self._encode_dense(key, flat, sig, add_noise)
         if backend == "pallas":
             from repro.kernels.zsign import ops as K
             return K.zsign_encode_fused(flat, key, sig, z=self.z,
-                                        add_noise=add_noise), state
+                                        add_noise=add_noise)
         return fused_sign_encode_jnp(flat, key, sig, z=self.z,
                                      add_noise=add_noise,
-                                     chunk_tiles=self.encode_chunk_tiles), state
+                                     chunk_tiles=self.encode_chunk_tiles)
 
-    def aggregate(self, payload, mask, n_coords):
+    def _noise_gate(self, sigma):
+        """The ONE place the noise gate is decided: a static sigma of 0.0
+        (vanilla SignSGD) disables the draw on every backend; a dynamic
+        sigma (possibly traced) always flows through — a runtime 0 degrades
+        exactly inside stochastic_sign_bits."""
+        if self.sigma_mode == "norm":
+            return None, True     # sigma computed from the buffer at encode
+        add_noise = (sigma is not None) or self.sigma > 0.0
+        return (self.sigma if sigma is None else sigma), add_noise
+
+    def encode_with_decode(self, key, p, sigma=None, need_decode=False):
+        """-> (payload, local_decode or None). ``local_decode`` is the exact
+        per-client value the server attributes to this payload — what an
+        ``ef`` transform upstream subtracts to form its residual."""
+        d = p.shape[0]
+        sig, add_noise = self._noise_gate(sigma)
+        if sig is None:
+            sig = jnp.linalg.norm(p)
+        if self.scale == "mean_abs":
+            s = jnp.mean(jnp.abs(p))
+            if not add_noise:
+                # EF-SignSGD proper: noise-free signs; residual uses the same
+                # p >= 0 convention as the wire payload, so EF accounts
+                # exactly for what the server decodes (jnp.sign's 0-at-0
+                # would leak +scale per round on zero coords)
+                packed = pack_flat(p)
+                dec = (s * jnp.where(p >= 0, 1.0, -1.0)
+                       if need_decode else None)
+            else:
+                packed = self._encode_bits(key, p, sig, add_noise)
+                dec = (s * unpack_signs(packed)[:d].astype(jnp.float32)
+                       if need_decode else None)
+            return {"packed": packed, "scale": s}, dec
+        packed = self._encode_bits(key, p, sig, add_noise)
+        if not need_decode:
+            return packed, None
+        if self.sigma_mode == "norm" or not add_noise:
+            factor = 1.0
+        else:
+            factor = znoise.eta_z(self.z) * sig
+        return packed, factor * unpack_signs(packed)[:d].astype(jnp.float32)
+
+    # -- server side --------------------------------------------------------
+
+    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
         del n_coords
+        if self.scale == "mean_abs":
+            # weights = mask * per-client scale: the fused reduce handles the
+            # scale-weighted sum directly in the compressed domain.
+            return sign_reduce(payload["packed"], mask * payload["scale"],
+                               self.agg_backend)
         return sign_reduce(payload, mask, self.agg_backend,
                            weights_are_mask=self.weights_are_mask)
 
     def decode_mean(self, flat_mean, sigma=None):
+        if self.scale == "mean_abs" or self.sigma_mode == "norm":
+            # magnitudes already in the aggregation weights / majority vote
+            del sigma
+            return flat_mean
         if sigma is None:
-            scale = znoise.eta_z(self.z) * self.sigma if self.sigma > 0.0 else 1.0
+            scale = (znoise.eta_z(self.z) * self.sigma
+                     if self.sigma > 0.0 else 1.0)
         else:
             scale = znoise.eta_z(self.z) * sigma
         return flat_mean * scale
 
 
 @dataclasses.dataclass(frozen=True)
-class StoSignCompressor(Compressor):
-    """Sto-SignSGD [Safaryan & Richtarik '21] as unified by the paper:
-    z = inf with the *input-dependent* noise scale sigma_i = ||flat_i||_2.
-    Bitpacked 1-bit wire format. The fused encode backends reuse the z=inf
-    counter path with sigma = ||flat|| computed as a prior reduction (the
-    norm is a traced scalar; the threshold kernel takes dynamic sigma), so
-    this baseline also never materializes a dense noise buffer."""
-    wire_bits_per_coord: float = 1.0
-    name: str = "stosign"
-    agg_backend: str = "auto"
-    encode_backend: str = "auto"
-    encode_chunk_tiles: int = 0
-    weights_are_mask: bool = False
-
-    def wire_format(self) -> WireFormat:
-        return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked")
-
-    def encode(self, key, flat, state, sigma=None):
-        del sigma
-        nrm = jnp.linalg.norm(flat)
-        backend = _resolve_encode_backend(self.encode_backend)
-        if backend == "reference":
-            xi = jax.random.uniform(key, flat.shape, minval=-1.0, maxval=1.0)
-            return pack_flat(flat + nrm * xi), state
-        if backend == "pallas":
-            from repro.kernels.zsign import ops as K
-            return K.zsign_encode_fused(flat, key, nrm, z=znoise.Z_INF), state
-        return fused_sign_encode_jnp(flat, key, nrm, z=znoise.Z_INF,
-                                     chunk_tiles=self.encode_chunk_tiles), state
-
-    def aggregate(self, payload, mask, n_coords):
-        del n_coords
-        return sign_reduce(payload, mask, self.agg_backend,
-                           weights_are_mask=self.weights_are_mask)
-
-    def decode_mean(self, flat_mean, sigma=None):
-        # majority-vote style: server applies its own stepsize to mean sign.
-        del sigma
-        return flat_mean
-
-
-@dataclasses.dataclass(frozen=True)
-class EFSignCompressor(Compressor):
-    """EF-SignSGD [Karimireddy et al. '19]: scaled sign + per-client residual.
-
-    enc_i = (||p_i||_1 / d) * Sign(p_i),  p_i = flat_i + e_i ;
-    e_i <- p_i - enc_i.  The wire payload is the bitpacked sign buffer plus
-    ONE fp32 scale (d + 32 bits total, so bits/coord -> 1 as d grows). The
-    residual state is a single flat fp32 buffer per client. Stale residuals
-    under partial participation are kept exactly (engine masks the state
-    update) — matching the paper's related-work discussion of EF's
-    partial-participation limitation.
-    """
-    wire_bits_per_coord: float = 1.0
-    name: str = "efsign"
-    use_kernel: bool = False   # fused Pallas EF step (kernels/efsign)
-    agg_backend: str = "auto"
-
-    def wire_format(self) -> WireFormat:
-        return WireFormat("uint8", self.wire_bits_per_coord, "bitpacked+scale")
-
-    def init_state(self, n_coords: int):
-        return jnp.zeros((n_coords,), jnp.float32)
-
-    def encode(self, key, flat, state, sigma=None):
-        del key, sigma
-        p = flat + state
-        scale = jnp.mean(jnp.abs(p))
-        if self.use_kernel:
-            # one fused VMEM pass: bitpacked payload + residual together
-            from repro.kernels.efsign import ops as EK
-            packed, res = EK.ef_sign_encode(flat, state, scale)
-        else:
-            # residual uses the same p >= 0 sign convention as the wire
-            # payload, so EF accounts exactly for what the server decodes
-            # (jnp.sign's 0-at-0 would leak +scale per round on zero coords)
-            packed = pack_flat(p)
-            res = p - scale * jnp.where(p >= 0, 1.0, -1.0)
-        return {"packed": packed, "scale": scale}, res
-
-    def aggregate(self, payload, mask, n_coords):
-        # weights = mask * per-client scale: the fused reduce handles the
-        # scale-weighted sum directly in the compressed domain.
-        del n_coords
-        return sign_reduce(payload["packed"], mask * payload["scale"],
-                           self.agg_backend)
-
-    def decode_mean(self, flat_mean, sigma=None):
-        del sigma
-        return flat_mean
-
-
-@dataclasses.dataclass(frozen=True)
-class QSGDCompressor(Compressor):
+class QSGDCodec:
     """Unbiased stochastic quantizer of Alistarh et al. (paper Definition 2);
     with FedAvg local steps this is FedPAQ/FedCOM. ``s`` quantization levels;
     wire cost derives from s: ceil(log2(2s+1)) bits/coord (+ one fp32 norm,
     amortized)."""
     s: int = 1
-    wire_bits_per_coord: float = 2.0
-    name: str = "qsgd"
+    spec_name = "qsgd"
+    randomized = True
 
-    def __post_init__(self):
-        object.__setattr__(self, "wire_bits_per_coord",
-                           float(math.ceil(math.log2(2 * self.s + 1))))
+    def wire_format(self) -> WireFormat:
+        return WireFormat("float32",
+                          float(math.ceil(math.log2(2 * self.s + 1))),
+                          "dense")
 
-    def encode(self, key, flat, state, sigma=None):
+    def encode_with_decode(self, key, p, sigma=None, need_decode=False):
         del sigma
-        nrm = jnp.linalg.norm(flat) + 1e-12
-        r = jnp.abs(flat) / nrm * self.s
+        nrm = jnp.linalg.norm(p) + 1e-12
+        r = jnp.abs(p) / nrm * self.s
         low = jnp.floor(r)
-        up = jax.random.bernoulli(key, jnp.clip(r - low, 0.0, 1.0), flat.shape)
+        up = jax.random.bernoulli(key, jnp.clip(r - low, 0.0, 1.0), p.shape)
         lvl = (low + up.astype(jnp.float32)) / self.s
-        return nrm * jnp.sign(flat) * lvl, state
+        q = nrm * jnp.sign(p) * lvl
+        return q, (q if need_decode else None)
+
+    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+        del n_coords
+        return wire.dense_masked_sum(payload, mask)
 
     def decode_mean(self, flat_mean, sigma=None):
         del sigma
@@ -440,10 +544,12 @@ class QSGDCompressor(Compressor):
 
 
 @dataclasses.dataclass(frozen=True)
-class TopKCompressor(Compressor):
-    """Beyond-paper sparsifier baseline: keep the top-k fraction of the flat
-    buffer by magnitude (GLOBAL top-k across all tensors) with per-client
-    error feedback. COO wire format: (values, indices), 64*frac bits/coord.
+class TopKCodec:
+    """Global top-k sparsifier: keep the top ``frac`` of the flat buffer by
+    magnitude (GLOBAL across all tensors). COO wire format (values, indices),
+    64*frac bits/coord. STATELESS — compose ``ef|topk`` for the classic
+    error-corrected variant (the legacy ``topk`` compressor is exactly that
+    pipeline).
 
     Selection runs as a two-stage chunked top-k when d exceeds ``chunk``:
     per-chunk ``lax.top_k`` candidates, then a final top-k over the
@@ -455,18 +561,12 @@ class TopKCompressor(Compressor):
     """
     frac: float = 0.01
     chunk: int = 65536  # two-stage selection above this many coordinates
-    wire_bits_per_coord: float = 0.64  # overwritten in __post_init__
-    name: str = "topk"
-
-    def __post_init__(self):
-        # fp32 value + int32 index per kept coordinate.
-        object.__setattr__(self, "wire_bits_per_coord", 64.0 * self.frac)
+    spec_name = "topk"
+    randomized = False
 
     def wire_format(self) -> WireFormat:
-        return WireFormat("float32", self.wire_bits_per_coord, "sparse_coo")
-
-    def init_state(self, n_coords: int):
-        return jnp.zeros((n_coords,), jnp.float32)
+        # fp32 value + int32 index per kept coordinate.
+        return WireFormat("float32", 64.0 * self.frac, "sparse_coo")
 
     def _select(self, score: jax.Array, k: int) -> jax.Array:
         """Indices of the k largest scores (ties -> lowest index first)."""
@@ -484,64 +584,395 @@ class TopKCompressor(Compressor):
         _, sel = jax.lax.top_k(cand_val.reshape(-1), k)
         return cand_idx[sel]
 
-    def encode(self, key, flat, state, sigma=None):
+    def encode_with_decode(self, key, p, sigma=None, need_decode=False):
         del key, sigma
-        p = flat + state
         k = max(1, int(p.shape[0] * self.frac))
         idx = self._select(jnp.abs(p), k)
-        return {"values": p[idx], "indices": idx}, p.at[idx].set(0.0)
+        vals = p[idx]
+        payload = {"values": vals, "indices": idx}
+        if not need_decode:
+            return payload, None
+        # local decode scatters the kept values back; the EF residual
+        # p - decode is then exactly p with the selected coords zeroed
+        return payload, jnp.zeros_like(p).at[idx].set(vals)
 
-    def aggregate(self, payload, mask, n_coords):
-        # scatter-add each client's COO payload into the dense flat space.
-        vals = (payload["values"] * mask[:, None]).reshape(-1)
-        idx = payload["indices"].reshape(-1)
-        return jnp.zeros((n_coords,), jnp.float32).at[idx].add(vals)
+    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+        return wire.scatter_sum_coo(payload["values"], payload["indices"],
+                                    mask, n_coords)
 
     def decode_mean(self, flat_mean, sigma=None):
         del sigma
         return flat_mean
 
 
-@dataclasses.dataclass(frozen=True)
-class DPGaussianCompressor(Compressor):
-    """Uncompressed DP-FedAvg mechanism: transmit flat + N(0, sigma^2 I)
-    (clipping happens in the round engine via cfg.dp_clip). 32 bits/coord."""
-    sigma: float = 1.0
-    wire_bits_per_coord: float = 32.0
-    name: str = "dpgauss"
+# ---------------------------------------------------------------------------
+# the pipeline combinator
+# ---------------------------------------------------------------------------
 
-    def encode(self, key, flat, state, sigma=None):
-        sig = self.sigma if sigma is None else sigma
-        return flat + sig * jax.random.normal(key, flat.shape), state
+_TRANSFORM_SPECS = {"ef": ErrorFeedback, "dp": DPTransform}
 
 
-@dataclasses.dataclass(frozen=True)
-class PackedZSignCompressor(ZSignCompressor):
-    """z-sign pinned to the Pallas TPU kernels (kernels/zsign): encode
-    generates its noise IN-KERNEL from the per-(client, tile) counter stream
-    and fuses threshold + sign + 8:1 bitpack into one VMEM pass
-    (``zsign_encode_fused``; default ``encode_backend="pallas"``, interpret
-    mode off-TPU); server aggregation is the fused ``sign_reduce`` weighted
-    reduce (one kernel launch for the whole client stack — inherited from
-    ZSignCompressor). Wire bytes are bit-for-bit identical to the jnp fused
-    path for the same key (verified in tests). The dense-noise kernel
-    (``zsign_compress``, noise as an HBM input) remains the "reference"
-    backend and the finite z > 1 path; its sigma == 0 mode skips the noise
-    draw entirely instead of drawing and discarding a full dense buffer.
-    Payload is uint8 of ceil(d/8192)*1024 bytes (kernel tile padding; the
-    logical cost stays 1 bit/coord — see wire.py accounting notes).
+def _sign_spec(**defaults):
+    def build(**kw):
+        merged = dict(defaults)
+        merged.update(kw)
+        return SignCodec(**merged)
+    return build
+
+
+_CODEC_SPECS = {
+    "zsign": _sign_spec(),
+    "zsign_packed": _sign_spec(encode_backend="pallas", dense_kernel=True),
+    "stosign": _sign_spec(z=znoise.Z_INF, sigma_mode="norm"),
+    "qsgd": QSGDCodec,
+    "topk": TopKCodec,
+    "dense": DenseCodec,
+    "identity": DenseCodec,
+}
+
+
+def _parse_value(v: str):
+    low = v.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    return v
+
+
+def _parse_stage(tok: str) -> Tuple[str, dict]:
+    tok = tok.strip()
+    if "(" in tok:
+        if not tok.endswith(")"):
+            raise ValueError(f"malformed stage spec {tok!r}")
+        name, args = tok[:-1].split("(", 1)
+        kw = {}
+        for part in filter(None, (p.strip() for p in args.split(","))):
+            if "=" not in part:
+                raise ValueError(f"stage argument {part!r} in {tok!r} must "
+                                 f"be key=value")
+            k, v = part.split("=", 1)
+            kw[k.strip()] = _parse_value(v.strip())
+        return name.strip(), kw
+    return tok, {}
+
+
+def parse_spec(spec: str):
+    """Spec string -> (transforms tuple, codec). Grammar:
+
+        spec  := stage ("|" stage)*
+        stage := name | name "(" k "=" v ("," k "=" v)* ")"
+
+    Every stage but the last must be a transform (``ef``, ``dp``); the last
+    must be a codec (``zsign``, ``zsign_packed``, ``stosign``, ``qsgd``,
+    ``topk``, ``dense``/``identity``). Values parse as int, float, bool or
+    bare string (e.g. ``scale=mean_abs``, ``z=inf``). Convenience defaults:
+    an ``ef`` transform in front of a sign codec sets ``scale="mean_abs"``
+    unless given explicitly — ``"ef|zsign"`` IS EF-SignSGD.
     """
-    name: str = "zsign_packed"
-    encode_backend: str = "pallas"
+    toks = [t for t in (p.strip() for p in spec.split("|")) if t]
+    if not toks:
+        raise ValueError("empty pipeline spec")
+    transforms = []
+    for tok in toks[:-1]:
+        name, kw = _parse_stage(tok)
+        if name not in _TRANSFORM_SPECS:
+            raise ValueError(
+                f"unknown transform stage {name!r} in {spec!r}; transforms: "
+                f"{sorted(_TRANSFORM_SPECS)} (codecs must come last)")
+        transforms.append(_TRANSFORM_SPECS[name](**kw))
+    name, kw = _parse_stage(toks[-1])
+    if name not in _CODEC_SPECS:
+        raise ValueError(f"unknown codec stage {name!r} in {spec!r}; codecs: "
+                         f"{sorted(_CODEC_SPECS)}")
+    explicit_scale = "scale" in kw
+    codec = _CODEC_SPECS[name](**kw)
+    # convenience default: ef over the NOISE-FREE fixed-sigma sign codec is
+    # EF-SignSGD, whose wire carries the mean-abs magnitude. Noisy z-sign
+    # (sigma > 0, debiased by eta_z * sigma) and sto-sign (norm mode,
+    # majority vote) keep their own decode laws under ef.
+    if (isinstance(codec, SignCodec) and not explicit_scale
+            and codec.sigma == 0.0 and codec.sigma_mode == "fixed"
+            and any(isinstance(t, ErrorFeedback) for t in transforms)):
+        codec = dataclasses.replace(codec, scale="mean_abs")
+    return tuple(transforms), codec
 
-    def _encode_dense(self, key, flat, sig, add_noise):
-        from repro.kernels.zsign import ops as K
-        if not add_noise:
-            # vanilla-SignSGD mode: no noise is drawn (flat doubles as a
-            # dummy operand; sigma == 0 makes it a no-op inside the kernel)
-            return K.zsign_compress(flat, flat, 0.0)
-        noise = znoise.sample_z_noise(key, flat.shape, self.z)
-        return K.zsign_compress(flat, noise, sig)
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """Transforms + one wire codec; the engine-facing compressor.
+
+    Build from a spec string (``Pipeline("ef|zsign")``) or from stage
+    instances (``Pipeline((ErrorFeedback(),), TopKCodec(frac=0.01))``).
+    Frozen and hashable: deployments rebind backend policy with
+    :meth:`with_context`, which returns a new pipeline.
+
+    Construction-time rules (idempotent, applied in ``__post_init__``):
+
+      * at most one ``ef`` transform (the single stateful stage — its flat
+        residual buffer IS the pipeline state the engine replicates per
+        client);
+      * a ``dp`` transform's noise is FUSED into a downstream
+        :class:`SignCodec`'s sigma (see :class:`DPTransform`): the codec
+        must not carry its own sigma at the same time.
+    """
+    transforms: Any = ()
+    codec: Any = None
+    name: str = ""
+
+    def __post_init__(self):
+        transforms, codec, name = self.transforms, self.codec, self.name
+        if isinstance(transforms, str):
+            spec = transforms
+            if codec is not None:
+                raise ValueError("give either a spec string or stages, "
+                                 "not both")
+            transforms, codec = parse_spec(spec)
+            name = name or spec
+        transforms = tuple(transforms)
+        if codec is None:
+            raise ValueError("pipeline needs a wire codec as its last stage")
+        ef_idx = [i for i, t in enumerate(transforms)
+                  if isinstance(t, ErrorFeedback)]
+        if len(ef_idx) > 1:
+            raise ValueError("at most one ef transform per pipeline")
+        # dp-noise fusion into the sign codec (see DPTransform docstring)
+        if isinstance(codec, SignCodec):
+            fused = []
+            for t in transforms:
+                if isinstance(t, DPTransform) and t.noise > 0.0:
+                    if codec.z != 1 or codec.sigma_mode != "fixed":
+                        # the dp accountant assumes the GAUSSIAN mechanism;
+                        # a z != 1 sign codec samples a different noise law
+                        # (z=inf is bounded uniform), which would silently
+                        # void the calibrated (eps, delta) guarantee
+                        raise ValueError(
+                            "dp noise is Gaussian: the sign codec must be "
+                            "z=1 with sigma_mode='fixed' to carry it "
+                            f"(got z={codec.z}, sigma_mode="
+                            f"{codec.sigma_mode!r})")
+                    if codec.sigma > 0.0:
+                        raise ValueError(
+                            "ambiguous noise: both the dp stage and the sign "
+                            "codec carry a sigma — set it on one stage only")
+                    codec = dataclasses.replace(codec, sigma=t.noise)
+                    t = dataclasses.replace(t, noise=0.0, eps=0.0)
+                fused.append(t)
+            transforms = tuple(fused)
+        object.__setattr__(self, "transforms", transforms)
+        object.__setattr__(self, "codec", codec)
+        object.__setattr__(self, "name", name or self.spec)
+        randomized = [i for i, t in enumerate(transforms)
+                      if getattr(t, "randomized", False)]
+        if getattr(codec, "randomized", False):
+            randomized.append(len(transforms))
+        object.__setattr__(self, "_n_random", len(randomized))
+        object.__setattr__(self, "_ef_index", ef_idx[0] if ef_idx else None)
+        # dynamic (Plateau) sigma routes to the sign codec when present,
+        # else to the last noise-bearing dp transform (legacy dpgauss law).
+        # The noise-free EF-SignSGD wire (scale=mean_abs, sigma == 0) has NO
+        # consumer: the legacy EFSignCompressor ignored the engine's dynamic
+        # sigma, and silently noising EF payloads under --plateau would be a
+        # training-dynamics change (want noisy EF? say zsign(sigma=...)).
+        if isinstance(codec, SignCodec):
+            consumer = (None if codec.scale == "mean_abs"
+                        and codec.sigma == 0.0 else "codec")
+        else:
+            dps = [i for i, t in enumerate(transforms)
+                   if isinstance(t, DPTransform) and t.noise > 0.0]
+            consumer = dps[-1] if dps else "codec"
+        object.__setattr__(self, "_sigma_stage", consumer)
+
+    # -- construction helpers ------------------------------------------------
+
+    @property
+    def spec(self) -> str:
+        """Canonical spec string (non-default stage fields spelled out)."""
+        def stage_str(s):
+            kw = []
+            if dataclasses.is_dataclass(s):
+                for f in dataclasses.fields(s):
+                    v = getattr(s, f.name)
+                    if v != f.default:
+                        kw.append(f"{f.name}={v}")
+            return s.spec_name + (f"({','.join(kw)})" if kw else "")
+        return "|".join([stage_str(t) for t in self.transforms]
+                        + [stage_str(self.codec)])
+
+    def with_context(self, ctx: RoundContext) -> "Pipeline":
+        """Rebind the deployment's backend policy onto every sign stage.
+
+        ``None`` backends in the context keep the stage's own setting (e.g.
+        ``zsign_packed`` stays pinned to pallas); explicit values override.
+        ``weights_are_mask`` is only applied to pure-mask aggregation —
+        scale-weighted (EF) reduces keep the general LUT path.
+        ``dynamic_sigma`` is refused on pipelines whose ``dp`` stage was
+        (eps, delta)-CALIBRATED: the Plateau controller overriding that
+        noise would silently void the guarantee. A hand-set ``dp(noise=..)``
+        carries no such promise and keeps the legacy dpgauss law (the
+        dynamic sigma overrides it).
+        """
+        if ctx.dynamic_sigma and any(
+                isinstance(t, DPTransform) and t.calibrated
+                for t in self.transforms):
+            raise ValueError(
+                "dynamic (Plateau) sigma cannot run over an eps-calibrated "
+                "dp stage: the loss-adaptive override would replace the "
+                "privacy-calibrated noise and void the (eps, delta) "
+                "guarantee")
+        codec = self.codec
+        if isinstance(codec, SignCodec):
+            kw = {}
+            if ctx.agg_backend is not None:
+                kw["agg_backend"] = ctx.agg_backend
+            if ctx.encode_backend is not None:
+                kw["encode_backend"] = ctx.encode_backend
+            if ctx.weights_are_mask and codec.scale == "none":
+                kw["weights_are_mask"] = True
+            if kw:
+                codec = dataclasses.replace(codec, **kw)
+        if codec is self.codec:
+            return self
+        return dataclasses.replace(self, codec=codec)
+
+    def __getattr__(self, item):
+        # legacy-compat delegation: codec hyper-parameters (z, sigma, frac,
+        # s, _select, ...) read through the pipeline, as they did when each
+        # combination was its own class. Dunder lookups never delegate.
+        if item.startswith("__"):
+            raise AttributeError(item)
+        codec = self.__dict__.get("codec")
+        if codec is None:
+            raise AttributeError(item)
+        try:
+            return getattr(codec, item)
+        except AttributeError:
+            raise AttributeError(
+                f"{type(self).__name__!s} object has no attribute {item!r}")
+
+    # -- engine-facing compressor interface ---------------------------------
+
+    @property
+    def wire_bits_per_coord(self) -> float:
+        return self.wire_format().bits_per_coord
+
+    def wire_format(self) -> WireFormat:
+        return self.codec.wire_format()
+
+    def stacks_group_payloads(self) -> bool:
+        """Whether the engine's sequential-group scan should emit the raw
+        payload stack (aggregated ONCE over all groups x clients at the end)
+        instead of accumulating per-group decoded f32 sums. True exactly
+        when the wire layout is compressed — see core/fedavg.py."""
+        return self.wire_format().layout != "dense"
+
+    def init_state(self, n_coords: int):
+        if self._ef_index is None:
+            return None
+        return self.transforms[self._ef_index].init_state(n_coords)
+
+    def _stage_key(self, key, i: int):
+        # a single random stage consumes the raw client key (bit-compat with
+        # the legacy monolithic compressors); multiple random stages get
+        # fold_in-derived subkeys
+        if self._n_random <= 1 or key is None:
+            return key
+        return jax.random.fold_in(key, i)
+
+    def _ef_kernel_path(self, sigma) -> bool:
+        return (self._ef_index is not None and len(self.transforms) == 1
+                and isinstance(self.codec, SignCodec)
+                and self.codec.use_kernel
+                and self.codec.scale == "mean_abs"
+                and self.codec.sigma_mode == "fixed"
+                and self.codec.sigma == 0.0
+                and (sigma is None or self._sigma_stage is None))
+
+    def encode(self, key, flat: jax.Array, state, sigma=None):
+        """(payload, new_state). ``sigma`` is the engine's dynamic (Plateau)
+        override, routed to the pipeline's one sigma consumer."""
+        if self._ef_kernel_path(sigma):
+            # one fused VMEM pass: bitpacked payload + residual together
+            from repro.kernels.efsign import ops as EK
+            scale = jnp.mean(jnp.abs(flat + state))
+            packed, res = EK.ef_sign_encode(flat, state, scale)
+            return {"packed": packed, "scale": scale}, res
+        p = flat
+        for i, t in enumerate(self.transforms):
+            if isinstance(t, ErrorFeedback):
+                p = p + state
+            else:
+                p = t.apply(self._stage_key(key, i), p,
+                            sigma=(sigma if self._sigma_stage == i else None))
+        payload, local = self.codec.encode_with_decode(
+            self._stage_key(key, len(self.transforms)), p,
+            sigma=(sigma if self._sigma_stage == "codec" else None),
+            need_decode=self._ef_index is not None)
+        new_state = state if self._ef_index is None else p - local
+        return payload, new_state
+
+    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+        """Masked SUM over the leading client axis of stacked payloads.
+        ``n_coords`` is the true (unpadded) coordinate count from the
+        engine's TreeSpec — sparse layouts need it to materialize the dense
+        sum; others may ignore it and return padded buffers."""
+        return self.codec.aggregate(payload, mask, n_coords)
+
+    def decode_mean(self, flat_mean: jax.Array, sigma=None) -> jax.Array:
+        return self.codec.decode_mean(
+            flat_mean, sigma=(sigma if self._sigma_stage == "codec" else None))
+
+
+# ---------------------------------------------------------------------------
+# legacy shim: the monolithic compressor names, as pipeline factories
+# ---------------------------------------------------------------------------
+
+def Compressor(name: str = "identity") -> Pipeline:
+    """Legacy identity compressor -> ``Pipeline(codec=DenseCodec())``."""
+    return Pipeline((), DenseCodec(), name=name)
+
+
+def ZSignCompressor(name: str = "zsign", z: int = 1, sigma: float = 0.01,
+                    **kw) -> Pipeline:
+    return Pipeline((), SignCodec(z=z, sigma=sigma, **kw), name=name)
+
+
+def PackedZSignCompressor(name: str = "zsign_packed", z: int = 1,
+                          sigma: float = 0.01,
+                          encode_backend: str = "pallas", **kw) -> Pipeline:
+    return Pipeline((), SignCodec(z=z, sigma=sigma, dense_kernel=True,
+                                  encode_backend=encode_backend, **kw),
+                    name=name)
+
+
+def StoSignCompressor(name: str = "stosign", **kw) -> Pipeline:
+    return Pipeline((), SignCodec(z=znoise.Z_INF, sigma_mode="norm", **kw),
+                    name=name)
+
+
+def EFSignCompressor(name: str = "efsign", use_kernel: bool = False,
+                     **kw) -> Pipeline:
+    return Pipeline((ErrorFeedback(),),
+                    SignCodec(scale="mean_abs", use_kernel=use_kernel, **kw),
+                    name=name)
+
+
+def QSGDCompressor(name: str = "qsgd", s: int = 1) -> Pipeline:
+    return Pipeline((), QSGDCodec(s=s), name=name)
+
+
+def TopKCompressor(name: str = "topk", frac: float = 0.01,
+                   chunk: int = 65536) -> Pipeline:
+    return Pipeline((ErrorFeedback(),), TopKCodec(frac=frac, chunk=chunk),
+                    name=name)
+
+
+def DPGaussianCompressor(name: str = "dpgauss",
+                         sigma: float = 1.0) -> Pipeline:
+    return Pipeline((DPTransform(noise=sigma),), DenseCodec(), name=name)
 
 
 _REGISTRY = {
@@ -560,5 +991,16 @@ def available() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def make_compressor(name: str, **kw) -> Compressor:
+def make_compressor(name: str, **kw) -> Pipeline:
+    """DEPRECATED legacy entry point: builds the equivalent Pipeline.
+
+    Emits exactly one DeprecationWarning per call; prefer
+    ``Pipeline("<spec>")`` (e.g. ``Pipeline("zsign(z=1,sigma=0.01)")``,
+    ``Pipeline("ef|topk(frac=0.01)")``) — see docs/API.md for the migration
+    table.
+    """
+    warnings.warn(
+        f"make_compressor({name!r}) is deprecated; build a compression "
+        f"Pipeline from a spec string instead (see docs/API.md)",
+        DeprecationWarning, stacklevel=2)
     return _REGISTRY[name](name=name, **kw)

@@ -1,0 +1,87 @@
+"""RoundContext: the one typed knob-bundle a federated round runs under.
+
+Before this module existed, every deployment policy knob travelled as its own
+positional/keyword argument through three layers (compressor constructor ->
+``fedavg.build_round_step`` -> train/dryrun CLIs), and each sign-family
+compressor class re-resolved "auto" backends for itself. ``RoundContext``
+makes the policy a single frozen value:
+
+  * ``agg_backend`` / ``encode_backend`` — backend policy for the server
+    sign-reduce and the client fused encode. ``None`` means "keep whatever
+    the pipeline stage was built with" (e.g. ``zsign_packed`` pins pallas);
+    an explicit string overrides every sign stage in the pipeline.
+  * ``weights_are_mask`` — the caller's STATIC guarantee that aggregation
+    weights are exact 0/1 participation masks (unlocks the popcount
+    sign-reduce specialization; see wire.unpack_sum_mask).
+  * ``legacy_client_path`` — restore the pre-fused client step (scan over E
+    even at E == 1 + update/subtract round-trip); benchmark baseline only.
+  * ``dynamic_sigma`` — thread the server state's traced sigma (Plateau
+    controller) into the codec instead of its static config value.
+  * ``donate_state`` — whether drivers donate the server state into the
+    jitted round step (in-place params/opt/residual update).
+
+``resolve_backend`` is THE one place an "auto" backend becomes a concrete
+one: the Pallas kernels on TPU, the fused jnp paths elsewhere. Everything
+that dispatches a kernel (compression.sign_reduce, the sign codec's encode)
+calls it, so a deployment can reason about backend selection by reading one
+function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+#: aggregation backends for the sign-family weighted reduce
+AGG_BACKENDS = ("auto", "jnp", "pallas", "dense")
+
+#: client-encode backends for the sign family ("reference" = dense draw)
+ENCODE_BACKENDS = ("auto", "jnp", "pallas", "reference")
+
+_VALID = {"agg": AGG_BACKENDS, "encode": ENCODE_BACKENDS}
+
+
+def resolve_backend(kind: str, backend: str) -> str:
+    """Resolve an ``auto`` backend to a concrete one — the single policy
+    point for ``auto|jnp|pallas|reference|dense``.
+
+    ``kind`` is "agg" (server sign-reduce: auto|jnp|pallas|dense) or
+    "encode" (client fused encode: auto|jnp|pallas|reference). "auto" picks
+    the Pallas kernel on TPU and the fused jnp path everywhere else; any
+    other name must be a member of the kind's backend tuple.
+    """
+    valid = _VALID[kind]
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in valid:
+        raise ValueError(f"unknown {kind} backend {backend!r}; "
+                         f"expected one of {valid}")
+    return backend
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundContext:
+    """Frozen per-deployment policy for one federated round step.
+
+    Constructed once by whoever owns the deployment decision (the train /
+    dryrun CLIs, run_fed, a test) and handed to
+    ``fedavg.build_round_step(loss_fn, compressor, cfg, ctx)``; the engine
+    applies it to the compression pipeline via ``Pipeline.with_context`` and
+    to its own client/aggregation paths. ``None`` backends defer to the
+    pipeline stage's own config.
+    """
+    agg_backend: Optional[str] = None
+    encode_backend: Optional[str] = None
+    weights_are_mask: bool = False
+    legacy_client_path: bool = False
+    dynamic_sigma: bool = False
+    donate_state: bool = True
+
+    def __post_init__(self):
+        # fail at construction, not at trace time inside the round step —
+        # membership is owned by resolve_backend, reused here
+        for kind, backend in (("agg", self.agg_backend),
+                              ("encode", self.encode_backend)):
+            if backend is not None:
+                resolve_backend(kind, backend)

@@ -14,6 +14,21 @@ from __future__ import annotations
 import math
 from typing import Sequence
 
+import jax
+import jax.numpy as jnp
+
+
+def clip_flat(flat: jax.Array, max_norm: float) -> jax.Array:
+    """L2-clip a flat buffer to ``max_norm`` (Algorithm 2 line 9).
+
+    The shared client-side clipping primitive: the round engine applies it
+    when ``FedConfig.dp_clip > 0`` and the ``dp`` pipeline transform
+    (compression.DPTransform) applies it stage-side — both are the same
+    function so the two spellings are bit-identical.
+    """
+    nrm = jnp.linalg.norm(flat)
+    return flat * (1.0 / jnp.maximum(1.0, nrm / max_norm))
+
 
 def _log_comb(n: int, k: int) -> float:
     return (math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1))

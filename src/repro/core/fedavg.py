@@ -11,10 +11,13 @@ One *round step* is a single jitted function:
        all-reduce; sign families never re-inflate the dense sign matrix)
     -> compressor.decode_mean -> unflatten ONCE -> server optimizer update.
 
-The engine never touches per-leaf encodings: every compressor speaks the flat
-wire-buffer codec of core/wire.py, so there are no compressor-specific
-branches here — sign families ship bitpacked uint8, top-k ships COO pairs,
-identity ships fp32, all through the same four calls.
+The engine never touches per-leaf encodings: every compression Pipeline
+(core/compression.py) speaks the flat wire-buffer codec of core/wire.py, so
+there are no compressor-specific branches here — sign families ship
+bitpacked uint8, top-k ships COO pairs, identity ships fp32, all through the
+same four calls. Deployment policy (backend selection, mask guarantees,
+dynamic sigma, legacy paths) arrives as ONE typed value — the RoundContext
+of core/context.py — applied to the pipeline at build time.
 
 Parallel clients live on a vmapped leading axis that the launcher shards over
 mesh ``client_axes`` (data and/or pod); sequential client *groups* are an
@@ -41,7 +44,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import wire
-from repro.core.compression import Compressor
+from repro.core.context import RoundContext
+from repro.core.dp import clip_flat
 from repro.optim.optimizers import Optimizer, make_optimizer
 
 
@@ -73,7 +77,7 @@ class RoundMetrics(NamedTuple):
     uplink_bits: jax.Array
 
 
-def init_server_state(params, cfg: FedConfig, compressor: Compressor,
+def init_server_state(params, cfg: FedConfig, compressor,
                       rng: jax.Array, sigma0: float = 0.0) -> ServerState:
     opt = _server_optimizer(cfg)
     spec = wire.tree_spec(params)
@@ -93,12 +97,8 @@ def _server_optimizer(cfg: FedConfig) -> Optimizer:
     return make_optimizer(cfg.server_opt, lr=cfg.server_lr, **dict(cfg.server_opt_kw))
 
 
-def _clip_flat(flat: jax.Array, max_norm: float) -> jax.Array:
-    nrm = jnp.linalg.norm(flat)
-    return flat * (1.0 / jnp.maximum(1.0, nrm / max_norm))
-
-
-def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
+def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
+                     ctx: Optional[RoundContext] = None,
                      *, dynamic_sigma: bool = False,
                      param_constraint: Optional[Callable] = None,
                      wire_constraint: Optional[Callable] = None,
@@ -112,34 +112,56 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
     leaves have leading dims (client_groups, n_clients, E, ...). ``mask`` is a
     float (client_groups, n_clients) participation mask (straggler dropout /
     partial participation); pass all-ones for full participation.
+
+    ``ctx`` is the typed deployment policy (core/context.py RoundContext):
+    backend selection for the client fused encode and the server
+    sign-reduce (``None`` keeps each stage's own setting), the static
+    ``weights_are_mask`` 0/1 guarantee that unlocks the popcount
+    aggregation specialization (leave False for fractional data-size
+    weights), ``dynamic_sigma`` (thread the server state's traced Plateau
+    sigma into the codec), and ``legacy_client_path`` (restore the
+    pre-fused client step — always scan over E local steps, even E == 1,
+    and form the pseudo-gradient by updating the weights and subtracting
+    them back — kept ONLY so the benchmark's dense baseline measures what
+    the legacy round actually cost). The engine applies the context to the
+    compression pipeline ONCE here via ``Pipeline.with_context``, so kernels
+    are dispatched per-stage. The keyword arguments after ``ctx`` mirror the
+    pre-RoundContext API and are folded into a context when ``ctx`` is not
+    given; new callers should pass a RoundContext.
+
     ``param_constraint`` re-applies sharding constraints to params-shaped
     trees inside the step (set by the launcher). ``wire_constraint`` pins the
     aggregated flat wire buffer — the launcher passes replicate (it is 8-32x
     smaller than the params and feeds one collective) so the unflatten back
     to sharded parameter layouts is a local slice, never a reshard (see
     launch/sharding.py wire_state_specs for the per-client residual layout).
-    ``agg_backend`` overrides the sign-family server-aggregation backend
-    ("auto" | "jnp" | "pallas" | "dense" — see compression.sign_reduce) and
-    ``encode_backend`` the client fused-encode backend ("auto" | "jnp" |
-    "pallas" | "reference") on compressors that expose them; launchers
-    thread their CLI selectors here. ``weights_are_mask=True`` is the
-    caller's STATIC guarantee that the masks it will pass are exactly 0/1
-    membership (as the participation sampler produces) — it unlocks the
-    popcount aggregation specialization; leave False for fractional
-    (data-size-proportional) weights. ``legacy_client_path=True`` restores
-    the pre-fused client step (always scan over E local steps, even E == 1,
-    and form the pseudo-gradient by updating the weights and subtracting
-    them back) — kept ONLY so the benchmark's dense baseline measures what
-    the legacy round actually cost; production callers leave it False.
     """
-    fields = {f.name for f in dataclasses.fields(compressor)}
-    overrides = {k: v for k, v in [("agg_backend", agg_backend),
-                                   ("encode_backend", encode_backend)]
-                 if v is not None and k in fields}
-    if weights_are_mask and "weights_are_mask" in fields:
-        overrides["weights_are_mask"] = True
-    if overrides:
-        compressor = dataclasses.replace(compressor, **overrides)
+    legacy_kw = dict(agg_backend=agg_backend, encode_backend=encode_backend,
+                     weights_are_mask=weights_are_mask,
+                     legacy_client_path=legacy_client_path,
+                     dynamic_sigma=dynamic_sigma)
+    if ctx is None:
+        ctx = RoundContext(**legacy_kw)
+    elif any(v not in (None, False) for v in legacy_kw.values()):
+        raise ValueError(
+            "pass the round policy either as a RoundContext or as the "
+            "legacy keyword arguments, not both — the kwargs set here "
+            f"would be silently ignored: "
+            f"{ {k: v for k, v in legacy_kw.items() if v not in (None, False)} }")
+    if hasattr(compressor, "with_context"):
+        compressor = compressor.with_context(ctx)
+    else:
+        # duck-typed legacy compressor objects: replace matching fields
+        fields = {f.name for f in dataclasses.fields(compressor)}
+        overrides = {k: v for k, v in [("agg_backend", ctx.agg_backend),
+                                       ("encode_backend", ctx.encode_backend)]
+                     if v is not None and k in fields}
+        if ctx.weights_are_mask and "weights_are_mask" in fields:
+            overrides["weights_are_mask"] = True
+        if overrides:
+            compressor = dataclasses.replace(compressor, **overrides)
+    dynamic_sigma = ctx.dynamic_sigma
+    legacy_client_path = ctx.legacy_client_path
     opt = _server_optimizer(cfg)
     gamma = cfg.client_lr
     constrain = param_constraint or (lambda t: t)
@@ -177,7 +199,7 @@ def build_round_step(loss_fn: Callable, compressor: Compressor, cfg: FedConfig,
             # the ONE flatten: pytree -> contiguous fp32 wire buffer
             flat = spec.flatten(pseudo)
         if cfg.dp_clip > 0.0:
-            flat = _clip_flat(flat, cfg.dp_clip)
+            flat = clip_flat(flat, cfg.dp_clip)
         enc, new_cstate = compressor.encode(
             key, flat, cstate, sigma=sigma if dynamic_sigma else None)
         return enc, new_cstate, loss

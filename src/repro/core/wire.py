@@ -282,6 +282,32 @@ def unpack_sum_mask(packed: jax.Array, mask: jax.Array) -> jax.Array:
     return 2.0 * bitsum - jnp.sum(mask)
 
 
+def dense_masked_sum(payload: jax.Array, weights: jax.Array) -> jax.Array:
+    """Server side of the dense fp32 uplink: one weighted einsum.
+
+    (n_clients, d) payload + (n_clients,) weights -> (d,) f32 weighted sum —
+    the aggregation every dense-wire codec (identity, qsgd, dp-over-dense)
+    shares. Dead clients (weight 0) contribute exactly 0.
+    """
+    return jnp.einsum("nd,n->d", payload.astype(jnp.float32), weights)
+
+
+def scatter_sum_coo(values: jax.Array, indices: jax.Array,
+                    weights: jax.Array, n_coords: int) -> jax.Array:
+    """Server side of the sparse COO uplink: weighted scatter-add.
+
+    (n_clients, k) f32 values + (n_clients, k) int32 indices +
+    (n_clients,) f32 weights -> (n_coords,) f32 weighted sum. Dead clients
+    (weight 0) contribute exactly 0; duplicate indices across clients
+    accumulate. The compressed-domain counterpart of ``unpack_sum`` for the
+    "sparse_coo" wire layout — the dense (n_clients, d) scatter surface
+    never exists, only the output-sized accumulator.
+    """
+    vals = (values * weights[:, None]).reshape(-1)
+    idx = indices.reshape(-1)
+    return jnp.zeros((n_coords,), jnp.float32).at[idx].add(vals)
+
+
 def unpack_sum_dense(packed: jax.Array, weights: jax.Array) -> jax.Array:
     """Legacy dense-matrix weighted sign sum (pre-fused server decode).
 

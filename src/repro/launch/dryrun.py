@@ -62,8 +62,8 @@ def build_train_cell(arch, shape, mesh, agg_backend="auto",
     arch = __import__("dataclasses").replace(arch, model=_dryrun_model(arch, shape))
     bundle = build_model(arch.model)
     plan = SH.make_plan(arch, shape, mesh)
-    comp = compression.make_compressor("zsign", z=arch.zsign_z,
-                                       sigma=arch.zsign_sigma)
+    comp = compression.Pipeline(
+        f"zsign(z={arch.zsign_z},sigma={arch.zsign_sigma})")
     fcfg = fedavg.FedConfig(n_clients=plan.n_clients,
                             client_groups=plan.client_groups,
                             local_steps=plan.local_steps,
@@ -79,13 +79,13 @@ def build_train_cell(arch, shape, mesh, agg_backend="auto",
 
     rep = SH.replicated(mesh)
 
+    ctx = SH.round_context(plan, agg_backend=agg_backend,
+                           encode_backend=encode_backend)
     step = fedavg.build_round_step(
-        bundle.loss_fn, comp, fcfg,
+        bundle.loss_fn, comp, fcfg, ctx,
         spmd_axes=(plan.client_axes if plan.client_axes else None),
         param_constraint=param_constraint,
-        wire_constraint=lambda f: jax.lax.with_sharding_constraint(f, rep),
-        agg_backend=agg_backend, encode_backend=encode_backend,
-        weights_are_mask=True)
+        wire_constraint=lambda f: jax.lax.with_sharding_constraint(f, rep))
 
     state_shapes = jax.eval_shape(
         lambda p: fedavg.init_server_state(p, fcfg, comp,

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.context import RoundContext
 from repro.launch.mesh import axis_size
 
 
@@ -53,6 +54,27 @@ def make_plan(arch, shape, mesh) -> ParallelPlan:
     micro = max(1, shape.global_batch // denom)
     return ParallelPlan(client_axes, micro_axes, seq_axes, replica_axes,
                         n_clients, groups, micro, E)
+
+
+def round_context(plan: ParallelPlan, *, agg_backend: str = "auto",
+                  encode_backend: str = "auto",
+                  dynamic_sigma: bool = False) -> RoundContext:
+    """The launcher-standard RoundContext for a parallel plan.
+
+    One construction point for every mesh launcher (dryrun, and the shape
+    the train CLI mirrors): the CLI backend selectors, donation on (the
+    launchers always donate the server state into the jitted step), and
+    ``weights_are_mask=True`` — the launchers' participation samplers emit
+    exact 0/1 membership masks, so the popcount sign-reduce specialization
+    is safe for any plan. ``plan`` is accepted (and currently unused beyond
+    documentation) so per-plan policy can key off client topology later
+    without touching call sites.
+    """
+    del plan
+    return RoundContext(agg_backend=agg_backend,
+                        encode_backend=encode_backend,
+                        weights_are_mask=True, dynamic_sigma=dynamic_sigma,
+                        donate_state=True)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,12 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--compressor", default="zsign",
                     choices=list(compression.available()))
+    ap.add_argument("--pipeline", default=None, metavar="SPEC",
+                    help="compression pipeline spec string, overriding "
+                         "--compressor and its kwargs — e.g. "
+                         "'zsign(z=1,sigma=0.01)', 'ef|topk(frac=0.01)', "
+                         "'dp(clip=1.0,eps=2.0)|zsign_packed' "
+                         "(grammar: docs/API.md)")
     ap.add_argument("--agg-backend", default="auto",
                     choices=list(compression.AGG_BACKENDS),
                     help="sign-family server aggregation backend "
@@ -72,27 +78,38 @@ def main():
         arch = arch.reduced()
     bundle = build_model(arch.model)
 
-    comp_kw = {
-        "zsign": dict(z=args.z, sigma=args.sigma),
-        "zsign_packed": dict(z=args.z, sigma=args.sigma),
-        "dpgauss": dict(sigma=args.sigma),
-        "qsgd": dict(s=args.qsgd_s),
-        "topk": dict(frac=args.topk_frac),
-    }.get(args.compressor, {})
-    comp = compression.make_compressor(args.compressor, **comp_kw)
+    if args.pipeline:
+        comp = compression.Pipeline(args.pipeline)
+    else:
+        # legacy per-name kwargs -> the equivalent pipeline (shim-free)
+        comp = {
+            "zsign": lambda: compression.ZSignCompressor(
+                z=args.z, sigma=args.sigma),
+            "zsign_packed": lambda: compression.PackedZSignCompressor(
+                z=args.z, sigma=args.sigma),
+            "dpgauss": lambda: compression.DPGaussianCompressor(
+                sigma=args.sigma),
+            "qsgd": lambda: compression.QSGDCompressor(s=args.qsgd_s),
+            "topk": lambda: compression.TopKCompressor(frac=args.topk_frac),
+            "efsign": compression.EFSignCompressor,
+            "stosign": compression.StoSignCompressor,
+            "identity": compression.Compressor,
+        }[args.compressor]()
     cfg = fedavg.FedConfig(n_clients=args.clients, client_groups=args.groups,
                            local_steps=args.local_steps,
                            client_lr=args.client_lr, server_lr=args.server_lr)
-    # donate the server state: params + opt state + residual buffers update
-    # in place on device instead of being copied every round.
-    # weights_are_mask: the ParticipationSampler below produces exact 0/1
-    # membership masks, so the popcount aggregation specialization is safe.
-    step = jax.jit(fedavg.build_round_step(bundle.loss_fn, comp, cfg,
-                                           dynamic_sigma=args.plateau,
-                                           agg_backend=args.agg_backend,
-                                           encode_backend=args.encode_backend,
-                                           weights_are_mask=True),
-                   donate_argnums=0)
+    # ONE typed deployment policy for the round step (core/context.py):
+    # CLI backend selectors, the Plateau dynamic-sigma flag, and
+    # weights_are_mask=True — the ParticipationSampler below produces exact
+    # 0/1 membership masks, so the popcount aggregation specialization is
+    # safe. donate_state: params + opt state + residual buffers update in
+    # place on device instead of being copied every round.
+    ctx = fedavg.RoundContext(agg_backend=args.agg_backend,
+                              encode_backend=args.encode_backend,
+                              weights_are_mask=True,
+                              dynamic_sigma=args.plateau)
+    step = jax.jit(fedavg.build_round_step(bundle.loss_fn, comp, cfg, ctx),
+                   donate_argnums=(0,) if ctx.donate_state else ())
 
     params = bundle.init(jax.random.PRNGKey(0))
     n_params = sum(p.size for p in jax.tree_util.tree_leaves(params))
