@@ -21,6 +21,9 @@ perf-trajectory files every later perf PR is compared against:
   fed_round_step         full jitted round + server aggregation wall-clock,
                          legacy dense round (dense noise draw + dense
                          sign-matrix aggregation) vs fully-fused
+  cohort_round           streaming massive-cohort round: n=1k/10k clients
+                         shard-scanned in O(shard*d/8) wire memory, with XLA
+                         peak-temp estimates (rows in BENCH_round.json)
 """
 from __future__ import annotations
 
@@ -63,14 +66,14 @@ def fig1_consensus_dims(fast=False):
     rounds = 300 if fast else 1500
     n = 10
     algos = {
-        "GD": (compression.make_compressor("identity"), 100.0),
-        "SignSGD": (compression.make_compressor("zsign", sigma=0.0),
+        "GD": (compression.Pipeline("identity"), 100.0),
+        "SignSGD": (compression.Pipeline("zsign(sigma=0.0)"),
                     sign_slr(0.01, 1, 0.0, 0.01)),
-        "1-SignSGD": (compression.make_compressor("zsign", z=1, sigma=2.0),
+        "1-SignSGD": (compression.Pipeline("zsign(z=1,sigma=2.0)"),
                       sign_slr(0.01, 1, 2.0, 0.01)),
-        "inf-SignSGD": (compression.make_compressor("zsign", z=0, sigma=2.0),
+        "inf-SignSGD": (compression.Pipeline("zsign(z=0,sigma=2.0)"),
                         sign_slr(0.01, 0, 2.0, 0.01)),
-        "Sto-SignSGD": (compression.make_compressor("stosign"),
+        "Sto-SignSGD": (compression.Pipeline("stosign"),
                         sign_slr(0.01, 1, 0.0, 0.01)),
     }
     for d in dims:
@@ -94,7 +97,7 @@ def fig2_noise_scales(fast=False):
     loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
     for z, zname in [(1, "1"), (0, "inf")]:
         for sigma in [0.1, 0.5, 2.0, 10.0]:
-            comp = compression.make_compressor("zsign", z=z, sigma=sigma)
+            comp = compression.Pipeline(f"zsign(z={z},sigma={sigma})")
             cfg = fedavg.FedConfig(n_clients=n, client_lr=0.01, server_lr=0.05)
             out = run_fed(loss_fn, {"x": jnp.zeros(d)},
                           lambda t: {"y": y[:, :, None]}, comp, cfg,
@@ -125,24 +128,24 @@ def fig3_noniid(fast=False):
     rounds = 60 if fast else 400
     init, loss_fn, acc_fn, batches, (x, y) = _noniid_task()
     algos = {
-        "SGDwM": ("identity", {}, dict(server_opt="momentum",
-                                       server_opt_kw=(("beta", 0.9),),
-                                       server_lr=0.05)),
-        "SignSGD": ("zsign", {"sigma": 0.0},
+        "SGDwM": ("identity", dict(server_opt="momentum",
+                                   server_opt_kw=(("beta", 0.9),),
+                                   server_lr=0.05)),
+        "SignSGD": ("zsign(sigma=0.0)",
                     dict(server_lr=sign_slr(0.01, 1, 0.0, 0.05))),
-        "EF-SignSGDwM": ("efsign", {}, dict(server_opt="momentum",
-                                            server_opt_kw=(("beta", 0.9),),
-                                            server_lr=0.05)),
-        "Sto-SignSGDwM": ("stosign", {}, dict(
+        "EF-SignSGDwM": ("ef|zsign", dict(server_opt="momentum",
+                                          server_opt_kw=(("beta", 0.9),),
+                                          server_lr=0.05)),
+        "Sto-SignSGDwM": ("stosign", dict(
             server_opt="momentum", server_opt_kw=(("beta", 0.9),),
             server_lr=sign_slr(0.005, 1, 0.0, 0.05))),
-        "1-SignSGD": ("zsign", {"z": 1, "sigma": 0.05},
+        "1-SignSGD": ("zsign(z=1,sigma=0.05)",
                       dict(server_lr=sign_slr(0.01, 1, 0.05, 0.05))),
-        "inf-SignSGD": ("zsign", {"z": 0, "sigma": 0.05},
+        "inf-SignSGD": ("zsign(z=0,sigma=0.05)",
                         dict(server_lr=sign_slr(0.01, 0, 0.05, 0.05))),
     }
-    for name, (cname, ckw, fkw) in algos.items():
-        comp = compression.make_compressor(cname, **ckw)
+    for name, (spec, fkw) in algos.items():
+        comp = compression.Pipeline(spec)
         cfg = fedavg.FedConfig(n_clients=10, client_lr=0.05, **fkw)
         out = run_fed(loss_fn, init(jax.random.PRNGKey(0)), batches, comp, cfg,
                       rounds=rounds, eval_fn=lambda p: acc_fn(p, x, y))
@@ -157,11 +160,10 @@ def fig5_local_steps(fast=False):
     for E in [1, 2, 4, 8]:
         init, loss_fn, acc_fn, batches, (x, y) = _noniid_task(
             E=E, micro=16, partition="dirichlet")
-        for name, cname, ckw in [("FedAvg", "identity", {}),
-                                 ("1-SignFedAvg", "zsign",
-                                  {"z": 1, "sigma": 0.01})]:
-            comp = compression.make_compressor(cname, **ckw)
-            slr = (0.5 if cname == "identity"
+        for name, spec in [("FedAvg", "identity"),
+                           ("1-SignFedAvg", "zsign(z=1,sigma=0.01)")]:
+            comp = compression.Pipeline(spec)
+            slr = (0.5 if spec == "identity"
                    else sign_slr(0.01, 1, 0.01, 0.05))
             cfg = fedavg.FedConfig(n_clients=10, local_steps=E,
                                    client_lr=0.05, server_lr=slr)
@@ -176,7 +178,7 @@ def fig6_plateau(fast=False):
     """Plateau criterion vs fixed sigma on the non-iid task."""
     rounds = 60 if fast else 400
     init, loss_fn, acc_fn, batches, (x, y) = _noniid_task()
-    comp = compression.make_compressor("zsign", z=1, sigma=0.05)
+    comp = compression.Pipeline("zsign(z=1,sigma=0.05)")
     cfg = fedavg.FedConfig(n_clients=10, client_lr=0.05,
                            server_lr=sign_slr(0.01, 1, 0.05, 0.05))
     out_fix = run_fed(loss_fn, init(jax.random.PRNGKey(0)), batches, comp, cfg,
@@ -196,12 +198,12 @@ def fig16_qsgd(fast=False):
     """1-SignSGD vs QSGD at matched uplink budget."""
     rounds = 60 if fast else 300
     init, loss_fn, acc_fn, batches, (x, y) = _noniid_task()
-    cases = [("1-SignSGD", "zsign", {"z": 1, "sigma": 0.05},
+    cases = [("1-SignSGD", "zsign(z=1,sigma=0.05)",
               sign_slr(0.01, 1, 0.05, 0.05)),
-             ("QSGD_s1", "qsgd", {"s": 1}, 1.0),
-             ("QSGD_s4", "qsgd", {"s": 4}, 1.0)]
-    for name, cname, ckw, slr in cases:
-        comp = compression.make_compressor(cname, **ckw)
+             ("QSGD_s1", "qsgd(s=1)", 1.0),
+             ("QSGD_s4", "qsgd(s=4)", 1.0)]
+    for name, spec, slr in cases:
+        comp = compression.Pipeline(spec)
         cfg = fedavg.FedConfig(n_clients=10, client_lr=0.05, server_lr=slr)
         out = run_fed(loss_fn, init(jax.random.PRNGKey(0)), batches, comp, cfg,
                       rounds=rounds, eval_fn=lambda p: acc_fn(p, x, y))
@@ -219,11 +221,11 @@ def fig17_dp(fast=False):
     for eps in ([2.0, 8.0] if fast else [1.0, 2.0, 4.0, 8.0]):
         nm = calibrate_noise(q=q, steps=rounds, target_eps=eps, delta=1e-3,
                              hi=200.0)
-        for name, cname, ckw, slr in [
-                ("DP-SignFedAvg", "zsign", {"z": 1, "sigma": nm * C},
+        for name, spec, slr in [
+                ("DP-SignFedAvg", f"zsign(z=1,sigma={nm * C})",
                  sign_slr(0.01, 1, nm * C, 0.05)),
-                ("DP-FedAvg", "dpgauss", {"sigma": nm * C}, 1.0)]:
-            comp = compression.make_compressor(cname, **ckw)
+                ("DP-FedAvg", f"dp(noise={nm * C})|dense", 1.0)]:
+            comp = compression.Pipeline(spec)
             cfg = fedavg.FedConfig(n_clients=10, client_lr=0.05,
                                    server_lr=slr, dp_clip=C)
             mask = jnp.zeros((1, 10)).at[0, :3].set(1.0)  # q = 0.3
@@ -236,17 +238,16 @@ def fig17_dp(fast=False):
 
 def table2_bits(fast=False):
     d = 1_000_000
-    for name, comp in [
-            ("uncompressed_32bit", compression.make_compressor("identity")),
-            ("EF-SignSGD", compression.make_compressor("efsign")),
-            ("Sto-SignSGD", compression.make_compressor("stosign")),
-            ("1-SignFedAvg", compression.make_compressor("zsign", z=1)),
-            ("inf-SignFedAvg", compression.make_compressor("zsign", z=0)),
-            ("1-SignFedAvg_pallas",
-             compression.make_compressor("zsign_packed", z=1)),
-            ("QSGD_s1", compression.make_compressor("qsgd", s=1)),
-            ("TopK_1pct", compression.make_compressor("topk", frac=0.01))]:
-        wf = comp.wire_format()
+    for name, spec in [
+            ("uncompressed_32bit", "identity"),
+            ("EF-SignSGD", "ef|zsign"),
+            ("Sto-SignSGD", "stosign"),
+            ("1-SignFedAvg", "zsign(z=1,sigma=0.01)"),
+            ("inf-SignFedAvg", "zsign(z=0,sigma=0.01)"),
+            ("1-SignFedAvg_pallas", "zsign_packed(z=1,sigma=0.01)"),
+            ("QSGD_s1", "qsgd(s=1)"),
+            ("TopK_1pct", "ef|topk(frac=0.01)")]:
+        wf = compression.Pipeline(spec).wire_format()
         emit("table2_bits", f"{name}_bits_per_round_per_client",
              int(d * wf.bits_per_coord))
         emit("table2_bits", f"{name}_wire", f"{wf.layout}/{wf.dtype}")
@@ -374,6 +375,83 @@ def fed_round_step(fast=False):
          round(tg["dense"] / tg["fused"], 2))
 
 
+def cohort_round(fast=False):
+    """Streaming massive-cohort round (``cohort=stream``): one jitted round
+    at n = 1k / 10k clients on the width-1024 MLP (~1.3M coords), client
+    shards scanned through the fused encode with only the reduced wire
+    accumulator carried across shards. Emits wall-clock plus XLA peak-temp
+    estimates next to the analytic working sets — the O(n*d) f32 stack the
+    one-shot vmap path would materialize vs the O(shard*d/8) wire slab
+    streaming actually touches. n = 100k compiles (and reports the memory
+    estimate) without executing."""
+    from repro.fed import sampling
+    dim, classes, width = 256, 10, (64 if fast else 1024)
+    shard = 32 if fast else 64
+    micro = 2
+    init, loss_fn, _ = mlp_loss_builder(dim, classes, width=width)
+    params = init(jax.random.PRNGKey(0))
+    d = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    nb = -(-d // 8)
+    emit("cohort_round", "cohort_model_coords", d)
+    emit("cohort_round", "cohort_shard_clients", shard)
+    comp = compression.Pipeline("zsign(z=1,sigma=0.05)")
+
+    def build(n, cohort):
+        cfg = fedavg.FedConfig(n_clients=n, client_groups=1, client_lr=0.05,
+                               server_lr=sign_slr(0.01, 1, 0.05, 0.05))
+        ctx = fedavg.RoundContext(weights_are_mask=True, cohort=cohort)
+        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg, ctx),
+                       donate_argnums=0)
+        kx, ky = jax.random.split(jax.random.PRNGKey(2))
+        batch = {"x": jax.random.normal(kx, (1, n, 1, micro, dim)),
+                 "y": jax.random.randint(ky, (1, n, 1, micro), 0, classes)}
+        sampler = sampling.CohortSampler(total_clients=n,
+                                         per_round=max(1, n // 10), seed=3)
+        mask = jnp.asarray(sampler.dense(*sampler.sample(), (1, n)))
+        state = fedavg.init_server_state(
+            jax.tree.map(jnp.array, params), cfg, comp, jax.random.PRNGKey(1))
+        return step.lower(state, batch, mask).compile(), state, batch, mask
+
+    def temp_mb(compiled):
+        try:
+            t = compiled.memory_analysis().temp_size_in_bytes
+        except Exception:
+            return None
+        return round(t / 1e6, 1)
+
+    sizes = [256, 1024] if fast else [1024, 10_000]
+    for n in sizes:
+        compiled, state, batch, mask = build(n, f"stream(shard={shard})")
+        emit("cohort_round", f"cohort_temp_stream_MB_n{n}", temp_mb(compiled))
+        iters = 1 if n > 2048 else 2
+        state, m = compiled(state, batch, mask)  # warmup; rebind donated state
+        jax.block_until_ready((state, m))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, m = compiled(state, batch, mask)
+        jax.block_until_ready((state, m))
+        emit("cohort_round", f"cohort_round_stream_us_n{n}",
+             round((time.perf_counter() - t0) / iters * 1e6, 1))
+        emit("cohort_round", f"cohort_wire_shard_bytes_n{n}", shard * nb)
+        emit("cohort_round", f"cohort_wire_full_stack_bytes_n{n}", n * nb)
+        emit("cohort_round", f"cohort_dense_f32_bytes_n{n}", n * d * 4)
+
+    # vmap contrast at the smallest size, compile-only: the full-cohort
+    # (n, d) f32 working set is exactly what streaming deletes — executing
+    # it at width 1024 would allocate ~n*d*4 bytes of temp.
+    compiled_v, *_ = build(sizes[0], "vmap")
+    emit("cohort_round", f"cohort_temp_vmap_MB_n{sizes[0]}",
+         temp_mb(compiled_v))
+
+    if not fast:
+        t0 = time.perf_counter()
+        compiled_big, *_ = build(100_000, f"stream(shard={shard})")
+        emit("cohort_round", "cohort_compile_s_n100000",
+             round(time.perf_counter() - t0, 1))
+        emit("cohort_round", "cohort_temp_stream_MB_n100000",
+             temp_mb(compiled_big))
+
+
 def kernel_throughput(fast=False):
     """Pallas compression kernel vs pure-jnp reference (interpret mode on CPU
     measures correctness-path overhead; compiled-TPU numbers on hardware)."""
@@ -427,14 +505,14 @@ def client_encode(fast=False):
     emit("client_encode", "encode_coords", size)
     for z, zname in [(1, "z1"), (0, "zinf")]:
         times = {}
-        cases = [("reference", dict(encode_backend="reference")),
-                 ("fused_jnp", dict(encode_backend="jnp")),
-                 ("fused_jnp_chunked", dict(encode_backend="jnp",
-                                            encode_chunk_tiles=4))]
+        cases = [("reference", "encode_backend=reference"),
+                 ("fused_jnp", "encode_backend=jnp"),
+                 ("fused_jnp_chunked", "encode_backend=jnp,"
+                                       "encode_chunk_tiles=4")]
         if not fast:
-            cases.append(("fused_pallas", dict(encode_backend="pallas")))
-        for label, kw in cases:
-            comp = compression.make_compressor("zsign", z=z, sigma=0.05, **kw)
+            cases.append(("fused_pallas", "encode_backend=pallas"))
+        for label, opts in cases:
+            comp = compression.Pipeline(f"zsign(z={z},sigma=0.05,{opts})")
             fn = jax.jit(lambda k, f: comp.encode(k, f, None)[0])
             us = timeit(fn, key, x, iters=(1 if label == "fused_pallas"
                                            else iters), warmup=warmup)
@@ -446,9 +524,8 @@ def client_encode(fast=False):
         emit("client_encode", f"encode_fused_speedup_{zname}_{size}",
              round(times["reference"] / times["fused_jnp"], 2))
     # stosign rides the z=inf fused path with sigma = ||flat||
-    for label, kw in [("reference", dict(encode_backend="reference")),
-                      ("fused_jnp", dict(encode_backend="jnp"))]:
-        comp = compression.make_compressor("stosign", **kw)
+    for label, be in [("reference", "reference"), ("fused_jnp", "jnp")]:
+        comp = compression.Pipeline(f"stosign(encode_backend={be})")
         fn = jax.jit(lambda k, f: comp.encode(k, f, None)[0])
         us = timeit(fn, key, x, iters=iters, warmup=warmup)
         emit("client_encode", f"encode_stosign_{label}_us_{size}",
@@ -457,7 +534,7 @@ def client_encode(fast=False):
 
 BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
            fig5_local_steps, fig6_plateau, fig16_qsgd, fig17_dp, table2_bits,
-           kernel_throughput, client_encode, fed_round_step]
+           kernel_throughput, client_encode, fed_round_step, cohort_round]
 
 # several benches may merge into one JSON file (kernel + encode rows).
 # The key prefix ATTRIBUTES existing rows to their bench so a re-run bench
@@ -465,6 +542,7 @@ BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
 # other benches' rows survive a --only run; every metric a bench emits must
 # carry its prefix ("" = the file's default owner).
 _JSON_FILES = {"fed_round_step": ("BENCH_round.json", ""),
+               "cohort_round": ("BENCH_round.json", "cohort_"),
                "kernel_throughput": ("BENCH_kernels.json", ""),
                "client_encode": ("BENCH_kernels.json", "encode_")}
 

@@ -180,7 +180,8 @@ def fused_sign_encode_jnp(flat: jax.Array, key, sigma, *, z: int,
 
 def sign_reduce(packed: jax.Array, weights: jax.Array,
                 backend: str = "auto", *,
-                weights_are_mask: bool = False) -> jax.Array:
+                weights_are_mask: bool = False,
+                acc: jax.Array | None = None) -> jax.Array:
     """Weighted sign-reduce over stacked bitpacked payloads.
 
     (n_clients, n_bytes) u8 + (n_clients,) f32 -> (8*n_bytes,) f32 weighted
@@ -204,16 +205,23 @@ def sign_reduce(packed: jax.Array, weights: jax.Array,
     jnp backend dispatches to the popcount specialization
     ``wire.unpack_sum_mask`` (bit-identical for any 0/1 mask — integer
     sums). Weighted/EF calls keep the LUT path.
+
+    ``acc`` folds a carried (8*n_bytes,) partial sum from previous client
+    shards into the result — the streaming cohort driver's reduce-as-you-go
+    hook (see wire.unpack_sum for the exactness contract). The Pallas
+    kernel has no in-kernel init accumulator, so that backend adds ``acc``
+    to the kernel's blocked sum — still integer-exact for 0/1 masks.
     """
     backend = resolve_backend("agg", backend)
     if backend == "pallas":
         from repro.kernels.zsign import ops as K
-        return K.sign_reduce(packed, weights)
+        out = K.sign_reduce(packed, weights)
+        return out if acc is None else acc + out
     if backend == "dense":
-        return wire.unpack_sum_dense(packed, weights)
+        return wire.unpack_sum_dense(packed, weights, acc)
     if weights_are_mask:
-        return wire.unpack_sum_mask(packed, weights)
-    return unpack_sum(packed, weights)
+        return wire.unpack_sum_mask(packed, weights, acc)
+    return unpack_sum(packed, weights, acc)
 
 
 def global_norm(tree) -> jax.Array:
@@ -345,9 +353,10 @@ class DenseCodec:
         del key, sigma
         return p, (p if need_decode else None)
 
-    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+    def aggregate(self, payload, mask: jax.Array, n_coords: int,
+                  acc: jax.Array | None = None) -> jax.Array:
         del n_coords
-        return wire.dense_masked_sum(payload, mask)
+        return wire.dense_masked_sum(payload, mask, acc)
 
     def decode_mean(self, flat_mean, sigma=None):
         del sigma
@@ -486,15 +495,16 @@ class SignCodec:
 
     # -- server side --------------------------------------------------------
 
-    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+    def aggregate(self, payload, mask: jax.Array, n_coords: int,
+                  acc: jax.Array | None = None) -> jax.Array:
         del n_coords
         if self.scale == "mean_abs":
             # weights = mask * per-client scale: the fused reduce handles the
             # scale-weighted sum directly in the compressed domain.
             return sign_reduce(payload["packed"], mask * payload["scale"],
-                               self.agg_backend)
+                               self.agg_backend, acc=acc)
         return sign_reduce(payload, mask, self.agg_backend,
-                           weights_are_mask=self.weights_are_mask)
+                           weights_are_mask=self.weights_are_mask, acc=acc)
 
     def decode_mean(self, flat_mean, sigma=None):
         if self.scale == "mean_abs" or self.sigma_mode == "norm":
@@ -534,9 +544,10 @@ class QSGDCodec:
         q = nrm * jnp.sign(p) * lvl
         return q, (q if need_decode else None)
 
-    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+    def aggregate(self, payload, mask: jax.Array, n_coords: int,
+                  acc: jax.Array | None = None) -> jax.Array:
         del n_coords
-        return wire.dense_masked_sum(payload, mask)
+        return wire.dense_masked_sum(payload, mask, acc)
 
     def decode_mean(self, flat_mean, sigma=None):
         del sigma
@@ -596,9 +607,10 @@ class TopKCodec:
         # p - decode is then exactly p with the selected coords zeroed
         return payload, jnp.zeros_like(p).at[idx].set(vals)
 
-    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+    def aggregate(self, payload, mask: jax.Array, n_coords: int,
+                  acc: jax.Array | None = None) -> jax.Array:
         return wire.scatter_sum_coo(payload["values"], payload["indices"],
-                                    mask, n_coords)
+                                    mask, n_coords, acc)
 
     def decode_mean(self, flat_mean, sigma=None):
         del sigma
@@ -914,12 +926,18 @@ class Pipeline:
         new_state = state if self._ef_index is None else p - local
         return payload, new_state
 
-    def aggregate(self, payload, mask: jax.Array, n_coords: int) -> jax.Array:
+    def aggregate(self, payload, mask: jax.Array, n_coords: int,
+                  acc: jax.Array | None = None) -> jax.Array:
         """Masked SUM over the leading client axis of stacked payloads.
         ``n_coords`` is the true (unpadded) coordinate count from the
         engine's TreeSpec — sparse layouts need it to materialize the dense
-        sum; others may ignore it and return padded buffers."""
-        return self.codec.aggregate(payload, mask, n_coords)
+        sum; others may ignore it and return padded buffers. ``acc`` folds a
+        carried partial sum from previous client shards into the result —
+        the streaming cohort driver aggregates shard-by-shard through this
+        one hook, so the full-cohort payload stack never exists (sign
+        families carry O(d/8) of state per fold; dense codecs carry one
+        (d,) f32 buffer)."""
+        return self.codec.aggregate(payload, mask, n_coords, acc)
 
     def decode_mean(self, flat_mean: jax.Array, sigma=None) -> jax.Array:
         return self.codec.decode_mean(

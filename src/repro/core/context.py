@@ -19,6 +19,9 @@ makes the policy a single frozen value:
     controller) into the codec instead of its static config value.
   * ``donate_state`` — whether drivers donate the server state into the
     jitted round step (in-place params/opt/residual update).
+  * ``cohort`` — how the round driver walks the cohort: one vmap over all
+    clients, or the streaming shard scan that folds each shard's payloads
+    into a running wire accumulator (see :class:`CohortPolicy`).
 
 ``resolve_backend`` is THE one place an "auto" backend becomes a concrete
 one: the Pallas kernels on TPU, the fused jnp paths elsewhere. Everything
@@ -38,6 +41,20 @@ AGG_BACKENDS = ("auto", "jnp", "pallas", "dense")
 
 #: client-encode backends for the sign family ("reference" = dense draw)
 ENCODE_BACKENDS = ("auto", "jnp", "pallas", "reference")
+
+#: cohort execution modes for the round driver (see CohortPolicy)
+COHORT_MODES = ("auto", "vmap", "stream")
+
+#: auto-gate threshold for the streaming cohort executor, in client-coordinate
+#: elements (total_clients * n_coords). Below it one vmap over the whole
+#: cohort is both faster (lax.scan costs ~30-80 ms/round of loop overhead on
+#: XLA CPU) and small enough to hold; at or above it the streaming driver's
+#: O(shard * d/8) wire working set wins. 2**24 elements ~ 64 MB of dense f32
+#: client state — roughly where the full-cohort vmap stops being free.
+STREAM_AUTO_MIN_ELEMS = 1 << 24
+
+#: default clients per shard when a streaming policy does not pin one
+STREAM_DEFAULT_SHARD = 64
 
 _VALID = {"agg": AGG_BACKENDS, "encode": ENCODE_BACKENDS}
 
@@ -61,6 +78,72 @@ def resolve_backend(kind: str, backend: str) -> str:
 
 
 @dataclasses.dataclass(frozen=True)
+class CohortPolicy:
+    """Parsed form of ``RoundContext.cohort`` — how the round driver walks
+    the cohort.
+
+      mode="vmap"    one vmap over all ``client_groups * n_clients`` clients
+                     (plus the legacy sequential-group scan when groups > 1).
+      mode="stream"  shard the flat cohort into ``shard``-client slices and
+                     ``lax.scan`` them through the fused encode, folding each
+                     shard's payload stack into ONE running wire accumulator
+                     (compression.Pipeline.aggregate(..., acc=...)). Peak
+                     memory O(d) model + O(shard * d/8) wire, any cohort size.
+      mode="auto"    stream iff total_clients * n_coords >=
+                     STREAM_AUTO_MIN_ELEMS (the small-run regression gate).
+
+    ``shard == 0`` leaves the shard size to the engine
+    (STREAM_DEFAULT_SHARD); a bare ``stream`` spec therefore still
+    auto-gates back to vmap below the threshold, while an explicit
+    ``stream(shard=K)`` FORCES streaming at exactly K clients per shard
+    (the bit-identity tests rely on this). ``unroll`` is handed to the
+    shard ``lax.scan`` to amortize loop overhead.
+    """
+    mode: str = "auto"
+    shard: int = 0
+    unroll: int = 1
+
+    def __post_init__(self):
+        if self.mode not in COHORT_MODES:
+            raise ValueError(f"unknown cohort mode {self.mode!r}; expected "
+                             f"one of {COHORT_MODES}")
+        if self.shard < 0 or self.unroll < 1:
+            raise ValueError(f"cohort policy needs shard >= 0 and "
+                             f"unroll >= 1, got shard={self.shard} "
+                             f"unroll={self.unroll}")
+        if self.shard and self.mode != "stream":
+            raise ValueError(f"shard={self.shard} only applies to "
+                             f"cohort mode 'stream', not {self.mode!r}")
+
+    @classmethod
+    def parse(cls, spec: "str | CohortPolicy") -> "CohortPolicy":
+        """``auto | vmap | stream | stream(shard=K[,unroll=U])`` -> policy."""
+        if isinstance(spec, cls):
+            return spec
+        s = spec.strip()
+        if "(" not in s:
+            return cls(mode=s)
+        if not s.endswith(")"):
+            raise ValueError(f"malformed cohort spec {spec!r}")
+        mode, args = s[:-1].split("(", 1)
+        kw = {}
+        for part in filter(None, (p.strip() for p in args.split(","))):
+            if "=" not in part:
+                raise ValueError(f"cohort argument {part!r} in {spec!r} "
+                                 f"must be key=value")
+            k, v = part.split("=", 1)
+            if k.strip() not in ("shard", "unroll"):
+                raise ValueError(f"unknown cohort argument {k.strip()!r} in "
+                                 f"{spec!r}; expected shard= or unroll=")
+            try:
+                kw[k.strip()] = int(v.strip())
+            except ValueError:
+                raise ValueError(f"cohort argument {part!r} in {spec!r} "
+                                 f"must be an integer") from None
+        return cls(mode=mode.strip(), **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class RoundContext:
     """Frozen per-deployment policy for one federated round step.
 
@@ -77,11 +160,15 @@ class RoundContext:
     legacy_client_path: bool = False
     dynamic_sigma: bool = False
     donate_state: bool = True
+    #: cohort execution policy for the round driver — a CohortPolicy spec
+    #: string: "auto" | "vmap" | "stream" | "stream(shard=K[,unroll=U])"
+    cohort: str = "auto"
 
     def __post_init__(self):
         # fail at construction, not at trace time inside the round step —
-        # membership is owned by resolve_backend, reused here
+        # membership is owned by resolve_backend / CohortPolicy, reused here
         for kind, backend in (("agg", self.agg_backend),
                               ("encode", self.encode_backend)):
             if backend is not None:
                 resolve_backend(kind, backend)
+        CohortPolicy.parse(self.cohort)

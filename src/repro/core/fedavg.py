@@ -16,24 +16,53 @@ The engine never touches per-leaf encodings: every compression Pipeline
 there are no compressor-specific branches here — sign families ship
 bitpacked uint8, top-k ships COO pairs, identity ships fp32, all through the
 same four calls. Deployment policy (backend selection, mask guarantees,
-dynamic sigma, legacy paths) arrives as ONE typed value — the RoundContext
-of core/context.py — applied to the pipeline at build time.
+dynamic sigma, legacy paths, cohort execution) arrives as ONE typed value —
+the RoundContext of core/context.py — applied to the pipeline at build time.
 
-Parallel clients live on a vmapped leading axis that the launcher shards over
-mesh ``client_axes`` (data and/or pod); sequential client *groups* are an
-outer ``lax.scan`` so arbitrarily many clients run per round with one replica
-of storage — the decoders are linear so group-sum aggregation is exact.
-For compressed wire layouts (every sign family, COO top-k) the scan emits
-the raw payload stack as its per-step OUTPUT (plus the per-group weights)
-and the server runs ONE ``aggregate`` over the (client_groups * n_clients,
-n_bytes) stack at the end — the cross-group working set is ~1 bit/coord,
-never client_groups dense f32 partials. Dense fp32 layouts (identity, QSGD,
-dpgauss) keep the accumulate-in-carry scan, whose live state is a single
-(d,) buffer (stacking would cost G*N*d f32). The choice is the compressor's
-``stacks_group_payloads()``.
+The engine is split in two halves:
+
+ROUND MATH (``_build_round_math``) — per-shard client compute: the local-SGD
+scan, the fused encode, and the participation-masked state update for one
+slice of clients, vmapped over that slice's leading axis. Pure in the shard:
+it never knows how many shards exist or how they are scheduled.
+
+ROUND DRIVER (``build_round_step``) — shard scheduling and slicing: derives
+per-client PRNG keys by GLOBAL client index (noise.client_keys — a counter
+derivation, so results are invariant to how the cohort is partitioned),
+slices batch/mask/state per shard, and aggregates. ``RoundContext.cohort``
+picks the walk:
+
+  ``vmap``    one vmap over all ``n_clients`` parallel clients; sequential
+              client *groups* are an outer ``lax.scan``. For compressed wire
+              layouts the scan emits the raw payload stack as its OUTPUT and
+              the server runs ONE ``aggregate`` over the (client_groups *
+              n_clients, n_bytes) stack; dense fp32 layouts accumulate the
+              decoded group sums in the scan carry (the choice is the
+              compressor's ``stacks_group_payloads()``).
+  ``stream``  the massive-cohort executor: the flat cohort of
+              ``client_groups * n_clients`` clients is resharded into
+              ``shard``-client slices and scanned, folding each shard's
+              payload stack into ONE running wire accumulator via
+              ``Pipeline.aggregate(..., acc=...)`` (reduce-as-you-go — a
+              full-cohort payload stack never exists). Peak memory is O(d)
+              model + O(shard * E * batch) data + O(shard * d/8) wire for
+              sign families (one (d,) f32 carry for dense codecs), for ANY
+              cohort size. Bit-identical to the vmap path for 0/1 masks
+              (integer sign sums — any shard size) and for fp32-weighted
+              (EF) aggregation at shard sizes that are multiples of
+              wire.SIGN_REDUCE_CLIENT_BLK; see wire.unpack_sum.
+  ``auto``    stream iff ``total_clients * n_coords`` reaches
+              context.STREAM_AUTO_MIN_ELEMS — small rounds keep the vmap
+              path (lax.scan costs ~30-80 ms/round of loop overhead on XLA
+              CPU), huge cohorts get the O(wire) memory contract. A bare
+              ``stream`` gates the same way; ``stream(shard=K)`` forces.
+
 Per-client compressor state (EF / top-k residuals) is a flat fp32 buffer of
 shape (client_groups, n_clients, n_coords); dead clients keep their previous
-residual bit-exactly (the state update is participation-masked).
+residual bit-exactly (the state update is participation-masked). When the
+cohort does not divide the shard size, the last shard is padded with
+wrapped-around batch rows under a zero participation mask — padded slots
+contribute exactly nothing and their state rows are discarded.
 """
 from __future__ import annotations
 
@@ -43,8 +72,10 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import noise as znoise
 from repro.core import wire
-from repro.core.context import RoundContext
+from repro.core.context import (STREAM_AUTO_MIN_ELEMS, STREAM_DEFAULT_SHARD,
+                                CohortPolicy, RoundContext)
 from repro.core.dp import clip_flat
 from repro.optim.optimizers import Optimizer, make_optimizer
 
@@ -77,6 +108,24 @@ class RoundMetrics(NamedTuple):
     uplink_bits: jax.Array
 
 
+class RoundMath(NamedTuple):
+    """The round-MATH half of the engine: client compute for ONE shard.
+
+    ``client_update(spec, params0, client_batch, key, cstate, sigma)``
+        one client: local SGD -> flatten -> encode.
+    ``group_encode(spec, params, batch, keys, cstate, mask, sigma)``
+        one shard of clients (leading axis = the mask length, vmapped):
+        -> (stacked payloads, participation-masked new state, masked loss
+        sum). The shard width is whatever the driver slices — a parallel
+        group on the vmap path, ``shard_clients`` on the streaming path.
+    ``group_round(...)``
+        group_encode + masked aggregation to one flat f32 SUM buffer.
+    """
+    client_update: Callable
+    group_encode: Callable
+    group_round: Callable
+
+
 def init_server_state(params, cfg: FedConfig, compressor,
                       rng: jax.Array, sigma0: float = 0.0) -> ServerState:
     opt = _server_optimizer(cfg)
@@ -97,75 +146,34 @@ def _server_optimizer(cfg: FedConfig) -> Optimizer:
     return make_optimizer(cfg.server_opt, lr=cfg.server_lr, **dict(cfg.server_opt_kw))
 
 
-def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
-                     ctx: Optional[RoundContext] = None,
-                     *, dynamic_sigma: bool = False,
-                     param_constraint: Optional[Callable] = None,
-                     wire_constraint: Optional[Callable] = None,
-                     spmd_axes=None, agg_backend: Optional[str] = None,
-                     encode_backend: Optional[str] = None,
-                     weights_are_mask: bool = False,
-                     legacy_client_path: bool = False):
-    """Returns round_step(state, batch, mask) -> (state, RoundMetrics).
+def resolve_cohort(policy, total_clients: int, n_coords: int):
+    """CohortPolicy (or its spec string) + static round shapes -> the
+    driver's execution plan: ("vmap", 0, 1) or ("stream", shard, unroll).
 
-    loss_fn(params, batch_slice) -> scalar loss. ``batch`` is a pytree whose
-    leaves have leading dims (client_groups, n_clients, E, ...). ``mask`` is a
-    float (client_groups, n_clients) participation mask (straggler dropout /
-    partial participation); pass all-ones for full participation.
-
-    ``ctx`` is the typed deployment policy (core/context.py RoundContext):
-    backend selection for the client fused encode and the server
-    sign-reduce (``None`` keeps each stage's own setting), the static
-    ``weights_are_mask`` 0/1 guarantee that unlocks the popcount
-    aggregation specialization (leave False for fractional data-size
-    weights), ``dynamic_sigma`` (thread the server state's traced Plateau
-    sigma into the codec), and ``legacy_client_path`` (restore the
-    pre-fused client step — always scan over E local steps, even E == 1,
-    and form the pseudo-gradient by updating the weights and subtracting
-    them back — kept ONLY so the benchmark's dense baseline measures what
-    the legacy round actually cost). The engine applies the context to the
-    compression pipeline ONCE here via ``Pipeline.with_context``, so kernels
-    are dispatched per-stage. The keyword arguments after ``ctx`` mirror the
-    pre-RoundContext API and are folded into a context when ``ctx`` is not
-    given; new callers should pass a RoundContext.
-
-    ``param_constraint`` re-applies sharding constraints to params-shaped
-    trees inside the step (set by the launcher). ``wire_constraint`` pins the
-    aggregated flat wire buffer — the launcher passes replicate (it is 8-32x
-    smaller than the params and feeds one collective) so the unflatten back
-    to sharded parameter layouts is a local slice, never a reshard (see
-    launch/sharding.py wire_state_specs for the per-client residual layout).
+    THE one place the streaming auto-gate lives: ``auto`` and a bare
+    ``stream`` fall back to the vmap path below STREAM_AUTO_MIN_ELEMS
+    client-coordinate elements (where the shard scan's ~30-80 ms/round XLA
+    CPU loop overhead would dominate), while an explicit ``stream(shard=K)``
+    always streams — the bit-identity tests and memory pins force the path
+    this way at small sizes. The shard size is clamped to the cohort.
     """
-    legacy_kw = dict(agg_backend=agg_backend, encode_backend=encode_backend,
-                     weights_are_mask=weights_are_mask,
-                     legacy_client_path=legacy_client_path,
-                     dynamic_sigma=dynamic_sigma)
-    if ctx is None:
-        ctx = RoundContext(**legacy_kw)
-    elif any(v not in (None, False) for v in legacy_kw.values()):
-        raise ValueError(
-            "pass the round policy either as a RoundContext or as the "
-            "legacy keyword arguments, not both — the kwargs set here "
-            f"would be silently ignored: "
-            f"{ {k: v for k, v in legacy_kw.items() if v not in (None, False)} }")
-    if hasattr(compressor, "with_context"):
-        compressor = compressor.with_context(ctx)
-    else:
-        # duck-typed legacy compressor objects: replace matching fields
-        fields = {f.name for f in dataclasses.fields(compressor)}
-        overrides = {k: v for k, v in [("agg_backend", ctx.agg_backend),
-                                       ("encode_backend", ctx.encode_backend)]
-                     if v is not None and k in fields}
-        if ctx.weights_are_mask and "weights_are_mask" in fields:
-            overrides["weights_are_mask"] = True
-        if overrides:
-            compressor = dataclasses.replace(compressor, **overrides)
-    dynamic_sigma = ctx.dynamic_sigma
-    legacy_client_path = ctx.legacy_client_path
-    opt = _server_optimizer(cfg)
+    pol = CohortPolicy.parse(policy)
+    if pol.mode == "vmap":
+        return ("vmap", 0, 1)
+    forced = pol.mode == "stream" and pol.shard > 0
+    if not forced and total_clients * n_coords < STREAM_AUTO_MIN_ELEMS:
+        return ("vmap", 0, 1)
+    shard = min(pol.shard or STREAM_DEFAULT_SHARD, total_clients)
+    if shard >= total_clients and not forced:
+        return ("vmap", 0, 1)   # one shard IS the vmap path, minus the scan
+    return ("stream", shard, pol.unroll)
+
+
+def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
+                      dynamic_sigma: bool, legacy_client_path: bool,
+                      spmd_axes, constrain_wire: Callable) -> RoundMath:
+    """Build the round-math half: per-shard client compute, no scheduling."""
     gamma = cfg.client_lr
-    constrain = param_constraint or (lambda t: t)
-    constrain_wire = wire_constraint or (lambda f: f)
 
     def local_sgd(params, client_batch):
         """scan over E local steps; returns (x_E, mean loss)."""
@@ -206,11 +214,11 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
 
     def group_encode(spec, params, group_batch, keys, group_cstate, mask_g,
                      sigma):
-        """One parallel group of n_clients: returns the client-stacked
+        """One shard of mask_g.shape[0] clients: returns the client-stacked
         payloads (NOT yet aggregated), the participation-masked new state,
         and the masked loss sum."""
         cu = lambda *a: client_update(spec, *a)
-        if cfg.n_clients == 1:
+        if mask_g.shape[0] == 1:
             # sequential-client (big-arch) mode: skip the vmap — a size-1
             # vmap without spmd_axis_name drops every sharding constraint
             # inside (measured: 16 TB/dev of replicate-fallback collectives
@@ -237,7 +245,10 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 lambda new, old: jnp.where(
                     mask_g.reshape((-1,) + (1,) * (new.ndim - 1)) > 0, new, old),
                 new_cstate, group_cstate)
-        loss_sum = jnp.sum(losses * mask_g)
+        # dead (and shard-padding) clients are excluded via where, not just
+        # the weight product, so a non-finite loss on an excluded slot can
+        # never poison the round metric
+        loss_sum = jnp.sum(jnp.where(mask_g > 0, losses * mask_g, 0.0))
         return enc, new_cstate, loss_sum
 
     def group_round(spec, params, group_batch, keys, group_cstate, mask_g,
@@ -249,65 +260,231 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
             compressor.aggregate(enc, mask_g, spec.n_coords))
         return enc_sum, new_cstate, loss_sum
 
+    return RoundMath(client_update=client_update, group_encode=group_encode,
+                     group_round=group_round)
+
+
+def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
+                     ctx: Optional[RoundContext] = None,
+                     *, dynamic_sigma: bool = False,
+                     param_constraint: Optional[Callable] = None,
+                     wire_constraint: Optional[Callable] = None,
+                     spmd_axes=None, agg_backend: Optional[str] = None,
+                     encode_backend: Optional[str] = None,
+                     weights_are_mask: bool = False,
+                     legacy_client_path: bool = False):
+    """Returns round_step(state, batch, mask) -> (state, RoundMetrics) —
+    the round DRIVER (shard scheduling + key/batch/mask slicing) wrapped
+    around the round math of ``_build_round_math``.
+
+    loss_fn(params, batch_slice) -> scalar loss. ``batch`` is a pytree whose
+    leaves have leading dims (client_groups, n_clients, E, ...). ``mask`` is a
+    float (client_groups, n_clients) participation mask (straggler dropout /
+    partial participation); pass all-ones for full participation.
+
+    ``ctx`` is the typed deployment policy (core/context.py RoundContext):
+    backend selection for the client fused encode and the server
+    sign-reduce (``None`` keeps each stage's own setting), the static
+    ``weights_are_mask`` 0/1 guarantee that unlocks the popcount
+    aggregation specialization (leave False for fractional data-size
+    weights), ``dynamic_sigma`` (thread the server state's traced Plateau
+    sigma into the codec), ``legacy_client_path`` (restore the
+    pre-fused client step — always scan over E local steps, even E == 1,
+    and form the pseudo-gradient by updating the weights and subtracting
+    them back — kept ONLY so the benchmark's dense baseline measures what
+    the legacy round actually cost), and ``cohort`` (the execution plan:
+    vmap vs the streaming massive-cohort shard scan; see the module
+    docstring and ``resolve_cohort``). The engine applies the context to the
+    compression pipeline ONCE here via ``Pipeline.with_context``, so kernels
+    are dispatched per-stage. The keyword arguments after ``ctx`` mirror the
+    pre-RoundContext API and are folded into a context when ``ctx`` is not
+    given; new callers should pass a RoundContext.
+
+    Per-client PRNG keys are derived by GLOBAL client index
+    (noise.client_keys), so the vmap and streaming paths — and any shard
+    size — consume identical randomness.
+
+    ``param_constraint`` re-applies sharding constraints to params-shaped
+    trees inside the step (set by the launcher). ``wire_constraint`` pins the
+    aggregated flat wire buffer — the launcher passes replicate (it is 8-32x
+    smaller than the params and feeds one collective) so the unflatten back
+    to sharded parameter layouts is a local slice, never a reshard (see
+    launch/sharding.py wire_state_specs for the per-client residual layout).
+    """
+    legacy_kw = dict(agg_backend=agg_backend, encode_backend=encode_backend,
+                     weights_are_mask=weights_are_mask,
+                     legacy_client_path=legacy_client_path,
+                     dynamic_sigma=dynamic_sigma)
+    if ctx is None:
+        ctx = RoundContext(**legacy_kw)
+    elif any(v not in (None, False) for v in legacy_kw.values()):
+        raise ValueError(
+            "pass the round policy either as a RoundContext or as the "
+            "legacy keyword arguments, not both — the kwargs set here "
+            f"would be silently ignored: "
+            f"{ {k: v for k, v in legacy_kw.items() if v not in (None, False)} }")
+    if hasattr(compressor, "with_context"):
+        compressor = compressor.with_context(ctx)
+    else:
+        # duck-typed legacy compressor objects: replace matching fields
+        fields = {f.name for f in dataclasses.fields(compressor)}
+        overrides = {k: v for k, v in [("agg_backend", ctx.agg_backend),
+                                       ("encode_backend", ctx.encode_backend)]
+                     if v is not None and k in fields}
+        if ctx.weights_are_mask and "weights_are_mask" in fields:
+            overrides["weights_are_mask"] = True
+        if overrides:
+            compressor = dataclasses.replace(compressor, **overrides)
+    cohort_policy = CohortPolicy.parse(ctx.cohort)
+    opt = _server_optimizer(cfg)
+    gamma = cfg.client_lr
+    constrain = param_constraint or (lambda t: t)
+    constrain_wire = wire_constraint or (lambda f: f)
+    math = _build_round_math(
+        loss_fn, compressor, cfg, dynamic_sigma=ctx.dynamic_sigma,
+        legacy_client_path=ctx.legacy_client_path, spmd_axes=spmd_axes,
+        constrain_wire=constrain_wire)
+    dynamic_sigma = ctx.dynamic_sigma
+    total = cfg.client_groups * cfg.n_clients
+
+    def stream_cohort(spec, params, batch, mask, cstate, sub, sigma,
+                      shard: int, unroll: int):
+        """The streaming massive-cohort executor: reshard the flat cohort
+        into ``shard``-client slices, lax.scan them through the round math,
+        and FOLD each shard's payload stack into one running wire
+        accumulator — the full-cohort stack never exists; the scan carry is
+        the aggregate's own output buffer (O(d/8) bytes for sign wires)."""
+        n_shards = -(-total // shard)
+        pad = n_shards * shard - total
+
+        def reshard(x):
+            # (G, N, ...) -> (n_shards, shard, ...); the last shard is
+            # padded by wrapping to the cohort's first rows (real, finite
+            # data) under a zero mask, so padding contributes exactly 0
+            y = x.reshape((total,) + x.shape[2:])
+            if pad:
+                y = jnp.pad(y, ((0, pad),) + ((0, 0),) * (y.ndim - 1),
+                            mode="wrap")
+            return y.reshape((n_shards, shard) + y.shape[1:])
+
+        s_batch = jax.tree.map(reshard, batch)
+        s_mask = reshard(mask) * (jnp.arange(n_shards * shard)
+                                  .reshape(n_shards, shard) < total)
+        s_cstate = (None if cstate is None
+                    else jax.tree.map(reshard, cstate))
+        shard0 = lambda t: (None if t is None
+                            else jax.tree.map(lambda x: x[0], t))
+
+        # zero-init wire accumulator, shaped by the codec's own aggregate
+        agg_shape = jax.eval_shape(
+            lambda b, k, c, m: compressor.aggregate(
+                math.group_encode(spec, params, b, k, c, m, sigma)[0],
+                m, spec.n_coords),
+            shard0(s_batch), znoise.client_keys(sub, 0, shard),
+            shard0(s_cstate), s_mask[0])
+        acc0 = jnp.zeros(agg_shape.shape, agg_shape.dtype)
+
+        def body(carry, xs):
+            acc, loss_acc = carry
+            s_idx, batch_s, cstate_s, mask_s = xs
+            # per-shard keys from the shard's global client offset: the
+            # derivation is counter-based, so the key of client j never
+            # depends on the shard partition (bit-identity vs vmap)
+            keys_s = znoise.client_keys(sub, s_idx * jnp.uint32(shard),
+                                        shard)
+            enc, new_cstate_s, loss_s = math.group_encode(
+                spec, params, batch_s, keys_s, cstate_s, mask_s, sigma)
+            acc = constrain_wire(compressor.aggregate(
+                enc, mask_s, spec.n_coords, acc=acc))
+            return (acc, loss_acc + loss_s), new_cstate_s
+
+        (enc_sum, loss_sum), cstate_sh = jax.lax.scan(
+            body, (acc0, jnp.zeros(())),
+            (jnp.arange(n_shards, dtype=jnp.uint32), s_batch, s_cstate,
+             s_mask),
+            unroll=unroll)
+        if cstate_sh is None:
+            new_cstate = None
+        else:
+            new_cstate = jax.tree.map(
+                lambda x: x.reshape((n_shards * shard,) + x.shape[2:])
+                [:total].reshape((cfg.client_groups, cfg.n_clients)
+                                 + x.shape[2:]),
+                cstate_sh)
+        return enc_sum, new_cstate, loss_sum
+
     def round_step(state: ServerState, batch, mask):
         spec = wire.tree_spec(state.params)
         rng, sub = jax.random.split(state.rng)
-        all_keys = jax.random.split(sub, cfg.client_groups * cfg.n_clients
-                                    ).reshape(cfg.client_groups, cfg.n_clients, -1)
         sigma = state.sigma
+        plan, shard, unroll = resolve_cohort(cohort_policy, total,
+                                             spec.n_coords)
 
-        if cfg.client_groups == 1:
-            g_batch = jax.tree.map(lambda x: x[0], batch)
-            g_cstate = (None if state.comp_state is None
-                        else jax.tree.map(lambda x: x[0], state.comp_state))
-            enc_sum, new_cstate_g, loss_sum = group_round(
-                spec, state.params, g_batch, all_keys[0], g_cstate, mask[0],
-                sigma)
-            new_cstate = (None if new_cstate_g is None
-                          else jax.tree.map(lambda x: x[None], new_cstate_g))
-        elif compressor.stacks_group_payloads():
-            # compressed-domain group scan: the scan OUTPUT is the stacked
-            # wire payloads (1 bit/coord for sign families), and the server
-            # runs ONE aggregate over the (G*N, ...) stack — no per-group
-            # dense f32 partials ever exist.
-            def body(loss_acc, xs):
-                g_batch, keys_g, cstate_g, mask_g = xs
-                enc, new_cstate_g, loss_sum = group_encode(
-                    spec, state.params, g_batch, keys_g, cstate_g, mask_g,
-                    sigma)
-                return loss_acc + loss_sum, (enc, new_cstate_g)
-
-            loss_sum, (enc_stack, new_cstate) = jax.lax.scan(
-                body, jnp.zeros(()),
-                (batch, all_keys, state.comp_state, mask))
-            gn = cfg.client_groups * cfg.n_clients
-            enc_all = jax.tree.map(
-                lambda e: e.reshape((gn,) + e.shape[2:]), enc_stack)
-            enc_sum = constrain_wire(
-                compressor.aggregate(enc_all, mask.reshape(-1),
-                                     spec.n_coords))
+        if plan == "stream":
+            enc_sum, new_cstate, loss_sum = stream_cohort(
+                spec, state.params, batch, mask, state.comp_state, sub,
+                sigma, shard, unroll)
         else:
-            # dense fp32 wire: accumulate the decoded group sums in the
-            # scan carry (stacking G*N dense payloads would cost G*N*d f32)
-            def body(carry, xs):
-                enc_acc, loss_acc = carry
-                g_batch, keys_g, cstate_g, mask_g = xs
-                enc_sum, new_cstate_g, loss_sum = group_round(
-                    spec, state.params, g_batch, keys_g, cstate_g, mask_g,
-                    sigma)
-                return (enc_acc + enc_sum, loss_acc + loss_sum), new_cstate_g
+            # per-client keys by global index — identical to the streaming
+            # derivation, so the two plans are interchangeable mid-training
+            all_keys = znoise.client_keys(sub, 0, total).reshape(
+                cfg.client_groups, cfg.n_clients, -1)
+            if cfg.client_groups == 1:
+                g_batch = jax.tree.map(lambda x: x[0], batch)
+                g_cstate = (None if state.comp_state is None
+                            else jax.tree.map(lambda x: x[0],
+                                              state.comp_state))
+                enc_sum, new_cstate_g, loss_sum = math.group_round(
+                    spec, state.params, g_batch, all_keys[0], g_cstate,
+                    mask[0], sigma)
+                new_cstate = (None if new_cstate_g is None
+                              else jax.tree.map(lambda x: x[None],
+                                                new_cstate_g))
+            elif compressor.stacks_group_payloads():
+                # compressed-domain group scan: the scan OUTPUT is the
+                # stacked wire payloads (1 bit/coord for sign families),
+                # and the server runs ONE aggregate over the (G*N, ...)
+                # stack — no per-group dense f32 partials ever exist.
+                def body(loss_acc, xs):
+                    g_batch, keys_g, cstate_g, mask_g = xs
+                    enc, new_cstate_g, loss_sum = math.group_encode(
+                        spec, state.params, g_batch, keys_g, cstate_g,
+                        mask_g, sigma)
+                    return loss_acc + loss_sum, (enc, new_cstate_g)
 
-            agg_shape = jax.eval_shape(
-                lambda b, k, c, m: group_round(spec, state.params, b, k, c, m,
-                                               sigma)[0],
-                jax.tree.map(lambda x: x[0], batch), all_keys[0],
-                (None if state.comp_state is None
-                 else jax.tree.map(lambda x: x[0], state.comp_state)),
-                mask[0])
-            zero_enc = jnp.zeros(agg_shape.shape, agg_shape.dtype)
-            (enc_sum, loss_sum), new_cstate = jax.lax.scan(
-                body, (zero_enc, jnp.zeros(())),
-                (batch, all_keys, state.comp_state, mask))
+                loss_sum, (enc_stack, new_cstate) = jax.lax.scan(
+                    body, jnp.zeros(()),
+                    (batch, all_keys, state.comp_state, mask))
+                gn = cfg.client_groups * cfg.n_clients
+                enc_all = jax.tree.map(
+                    lambda e: e.reshape((gn,) + e.shape[2:]), enc_stack)
+                enc_sum = constrain_wire(
+                    compressor.aggregate(enc_all, mask.reshape(-1),
+                                         spec.n_coords))
+            else:
+                # dense fp32 wire: accumulate the decoded group sums in the
+                # scan carry (stacking G*N dense payloads would cost G*N*d
+                # f32)
+                def body(carry, xs):
+                    enc_acc, loss_acc = carry
+                    g_batch, keys_g, cstate_g, mask_g = xs
+                    enc_sum, new_cstate_g, loss_sum = math.group_round(
+                        spec, state.params, g_batch, keys_g, cstate_g,
+                        mask_g, sigma)
+                    return ((enc_acc + enc_sum, loss_acc + loss_sum),
+                            new_cstate_g)
+
+                agg_shape = jax.eval_shape(
+                    lambda b, k, c, m: math.group_round(
+                        spec, state.params, b, k, c, m, sigma)[0],
+                    jax.tree.map(lambda x: x[0], batch), all_keys[0],
+                    (None if state.comp_state is None
+                     else jax.tree.map(lambda x: x[0], state.comp_state)),
+                    mask[0])
+                zero_enc = jnp.zeros(agg_shape.shape, agg_shape.dtype)
+                (enc_sum, loss_sum), new_cstate = jax.lax.scan(
+                    body, (zero_enc, jnp.zeros(())),
+                    (batch, all_keys, state.comp_state, mask))
 
         n_live = jnp.maximum(jnp.sum(mask), 1.0)
         g_flat = constrain_wire(compressor.decode_mean(

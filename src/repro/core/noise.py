@@ -75,6 +75,23 @@ def counter_supported(z: int) -> bool:
     return z <= Z_INF or z == 1
 
 
+def client_keys(key: jax.Array, start, n: int) -> jax.Array:
+    """Per-client PRNG keys by GLOBAL client index: key_j = fold_in(key, j)
+    for j in [start, start + n).
+
+    Counter-based like everything else on the encode path: client j's key
+    depends only on j, never on how the round driver partitions the cohort,
+    so the streaming shard scan (which derives each shard's keys from its
+    global offset) and the all-clients vmap path consume IDENTICAL
+    randomness — the bit-identity contract of core/fedavg.py. ``start`` may
+    be a traced uint32 scalar (the shard offset inside ``lax.scan``).
+    Accepts typed or raw uint32 keys and returns the same flavour, stacked
+    on a leading (n,) axis.
+    """
+    idx = jnp.asarray(start, jnp.uint32) + jnp.arange(n, dtype=jnp.uint32)
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+
+
 def key_words(key: jax.Array):
     """PRNG key -> (k0, k1) uint32 scalar words (accepts typed or raw keys)."""
     if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):

@@ -193,7 +193,8 @@ def _bit_transpose_blocks(pm: jax.Array, n_blocks: int,
     return x.reshape(n_blocks, 8, n_bytes)
 
 
-def unpack_sum(packed: jax.Array, weights: jax.Array) -> jax.Array:
+def unpack_sum(packed: jax.Array, weights: jax.Array,
+               acc: jax.Array | None = None) -> jax.Array:
     """(n_clients, n_bytes) u8, (n_clients,) f32 -> (8*n_bytes,) weighted sum
     of the +/-1 signs — the server side of the 1-bit all-gather.
 
@@ -207,6 +208,17 @@ def unpack_sum(packed: jax.Array, weights: jax.Array) -> jax.Array:
     is the output-sized accumulator only (~5-10x faster than the dense path
     on CPU at n_clients >= 32; see BENCH_kernels.json / BENCH_round.json). Dead clients
     (weight 0) contribute exactly 0.
+
+    ``acc`` is the partial-accumulator FOLD hook for the streaming cohort
+    driver: an (8*n_bytes,) f32 running sum from previous client shards,
+    continued as the left fold ``((acc + b_0) + b_1) + ...`` over this
+    call's client blocks. Folding shard-by-shard is bit-identical to one
+    call over the concatenated clients whenever (a) the weights are a 0/1
+    mask (integer sums — exact under any association) or (b) every shard
+    is a multiple of SIGN_REDUCE_CLIENT_BLK clients (identical block
+    boundaries AND identical left-fold order, any fp32 weights), up to the
+    sign of f32 zeros (the zero-initialized fold turns a -0.0 partial into
+    +0.0).
 
     Accumulation order mirrors the Pallas ``sign_reduce`` kernel: clients
     are padded to SIGN_REDUCE_CLIENT_BLK with zero weight, the in-block
@@ -232,14 +244,22 @@ def unpack_sum(packed: jax.Array, weights: jax.Array) -> jax.Array:
     wb = w.reshape(n_blocks, blk)
     lut = jnp.sum(jnp.where(vbits[None], wb[:, None, :], -wb[:, None, :]),
                   axis=-1)                                  # (n_blocks, 256)
-    acc = jnp.take(lut[0], planes[0].astype(jnp.int32), axis=0)   # (8, nb)
-    for b in range(1, n_blocks):
-        acc = acc + jnp.take(lut[b], planes[b].astype(jnp.int32), axis=0)
-    # acc[k, byte] is the weighted sum for coordinate byte*8 + k
-    return jnp.swapaxes(acc, 0, 1).reshape(-1)
+    if acc is None:
+        a = jnp.take(lut[0], planes[0].astype(jnp.int32), axis=0)  # (8, nb)
+        start = 1
+    else:
+        # resume the left fold from the carried partial sum (inverse of the
+        # output layout below: coordinate byte*8 + k lives at [k, byte])
+        a = jnp.swapaxes(acc.reshape(n_bytes, 8), 0, 1)
+        start = 0
+    for b in range(start, n_blocks):
+        a = a + jnp.take(lut[b], planes[b].astype(jnp.int32), axis=0)
+    # a[k, byte] is the weighted sum for coordinate byte*8 + k
+    return jnp.swapaxes(a, 0, 1).reshape(-1)
 
 
-def unpack_sum_mask(packed: jax.Array, mask: jax.Array) -> jax.Array:
+def unpack_sum_mask(packed: jax.Array, mask: jax.Array,
+                    acc: jax.Array | None = None) -> jax.Array:
     """(n_clients, n_bytes) u8, (n_clients,) 0/1 mask -> (8*n_bytes,) f32
     masked sum of the +/-1 signs — the popcount fast path.
 
@@ -258,7 +278,12 @@ def unpack_sum_mask(packed: jax.Array, mask: jax.Array) -> jax.Array:
     mask.
 
     The mask is treated as MEMBERSHIP (w > 0 participates); fractional
-    weights must use :func:`unpack_sum`. Because that contract cannot be
+    weights must use :func:`unpack_sum`. ``acc`` folds a running partial sum
+    from previous client shards (streaming cohort driver); because every
+    term is a small integer, the shard-by-shard fold is bit-identical to
+    one call over the concatenated clients for ANY shard size.
+
+    Because the membership contract cannot be
     checked on traced values, dispatch here is gated on a STATIC guarantee
     plumbed from whoever constructs the mask: the round engine's
     ``build_round_step(weights_are_mask=True)`` (set by the train/dryrun
@@ -279,21 +304,27 @@ def unpack_sum_mask(packed: jax.Array, mask: jax.Array) -> jax.Array:
     c = jnp.sum(cnt, axis=0, dtype=acc_dtype) if n_blocks > 1 else cnt[0]
     # c[k, byte] counts set bit-k across live clients; coord = byte*8 + k
     bitsum = jnp.swapaxes(c, 0, 1).reshape(-1).astype(jnp.float32)
-    return 2.0 * bitsum - jnp.sum(mask)
+    out = 2.0 * bitsum - jnp.sum(mask)
+    return out if acc is None else acc + out
 
 
-def dense_masked_sum(payload: jax.Array, weights: jax.Array) -> jax.Array:
+def dense_masked_sum(payload: jax.Array, weights: jax.Array,
+                     acc: jax.Array | None = None) -> jax.Array:
     """Server side of the dense fp32 uplink: one weighted einsum.
 
     (n_clients, d) payload + (n_clients,) weights -> (d,) f32 weighted sum —
     the aggregation every dense-wire codec (identity, qsgd, dp-over-dense)
-    shares. Dead clients (weight 0) contribute exactly 0.
+    shares. Dead clients (weight 0) contribute exactly 0. ``acc`` carries a
+    running partial sum across client shards (the streaming driver's dense
+    fallback: the carry stays one (d,) buffer).
     """
-    return jnp.einsum("nd,n->d", payload.astype(jnp.float32), weights)
+    out = jnp.einsum("nd,n->d", payload.astype(jnp.float32), weights)
+    return out if acc is None else acc + out
 
 
 def scatter_sum_coo(values: jax.Array, indices: jax.Array,
-                    weights: jax.Array, n_coords: int) -> jax.Array:
+                    weights: jax.Array, n_coords: int,
+                    acc: jax.Array | None = None) -> jax.Array:
     """Server side of the sparse COO uplink: weighted scatter-add.
 
     (n_clients, k) f32 values + (n_clients, k) int32 indices +
@@ -301,20 +332,27 @@ def scatter_sum_coo(values: jax.Array, indices: jax.Array,
     (weight 0) contribute exactly 0; duplicate indices across clients
     accumulate. The compressed-domain counterpart of ``unpack_sum`` for the
     "sparse_coo" wire layout — the dense (n_clients, d) scatter surface
-    never exists, only the output-sized accumulator.
+    never exists, only the output-sized accumulator. ``acc`` scatter-adds
+    into a carried (n_coords,) partial sum instead of a fresh zero buffer
+    (streaming cohort fold).
     """
     vals = (values * weights[:, None]).reshape(-1)
     idx = indices.reshape(-1)
-    return jnp.zeros((n_coords,), jnp.float32).at[idx].add(vals)
+    base = jnp.zeros((n_coords,), jnp.float32) if acc is None else acc
+    return base.at[idx].add(vals)
 
 
-def unpack_sum_dense(packed: jax.Array, weights: jax.Array) -> jax.Array:
+def unpack_sum_dense(packed: jax.Array, weights: jax.Array,
+                     acc: jax.Array | None = None) -> jax.Array:
     """Legacy dense-matrix weighted sign sum (pre-fused server decode).
 
     Materializes the full (n_clients, d) fp32 sign matrix before the einsum
     — a 32x working-set blowup over the wire bytes. Kept ONLY as the oracle
     for the sign-reduce equivalence tests and as the "old" side of the
-    ``fed_round_step`` benchmark; no production path calls it.
+    ``fed_round_step`` benchmark; no production path calls it. ``acc``
+    mirrors the fold hook of :func:`unpack_sum` so the oracle covers the
+    streaming fold tests too.
     """
     signs = jax.vmap(unpack_signs)(packed).astype(jnp.float32)
-    return jnp.einsum("nd,n->d", signs, weights)
+    out = jnp.einsum("nd,n->d", signs, weights)
+    return out if acc is None else acc + out

@@ -57,7 +57,7 @@ def _dryrun_model(arch, shape):
 
 
 def build_train_cell(arch, shape, mesh, agg_backend="auto",
-                     encode_backend="auto"):
+                     encode_backend="auto", cohort="auto"):
     """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
     arch = __import__("dataclasses").replace(arch, model=_dryrun_model(arch, shape))
     bundle = build_model(arch.model)
@@ -80,7 +80,7 @@ def build_train_cell(arch, shape, mesh, agg_backend="auto",
     rep = SH.replicated(mesh)
 
     ctx = SH.round_context(plan, agg_backend=agg_backend,
-                           encode_backend=encode_backend)
+                           encode_backend=encode_backend, cohort=cohort)
     step = fedavg.build_round_step(
         bundle.loss_fn, comp, fcfg, ctx,
         spmd_axes=(plan.client_axes if plan.client_axes else None),
@@ -340,7 +340,8 @@ def analyze(fn, arg_shapes, mesh, label: str) -> dict:
 
 
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
-             agg_backend: str = "auto", encode_backend: str = "auto") -> dict:
+             agg_backend: str = "auto", encode_backend: str = "auto",
+             cohort: str = "auto") -> dict:
     arch = get_arch(arch_id)
     shape = SHAPES[shape_name]
     bundle = build_model(arch.model)
@@ -352,7 +353,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     with mesh, sharding_hints(mesh, plan0.seq_axes, plan0.micro_axes):
         if shape.kind == "train":
             fn, args, plan = build_train_cell(arch, shape, mesh, agg_backend,
-                                              encode_backend)
+                                              encode_backend, cohort)
         elif shape.kind == "prefill":
             fn, args, plan = build_prefill_cell(arch, shape, mesh)
         else:
@@ -390,6 +391,9 @@ def main():
                     choices=list(compression.AGG_BACKENDS))
     ap.add_argument("--encode-backend", default="auto",
                     choices=list(compression.ENCODE_BACKENDS))
+    ap.add_argument("--cohort", default="auto",
+                    help="cohort execution policy: auto | vmap | "
+                         "stream(shard=K[,unroll=U])")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -404,7 +408,8 @@ def main():
                 try:
                     res = run_cell(arch_id, shape_name, multi_pod=mp,
                                    agg_backend=args.agg_backend,
-                                   encode_backend=args.encode_backend)
+                                   encode_backend=args.encode_backend,
+                                   cohort=args.cohort)
                 except Exception as e:  # record the failure, keep sweeping
                     res = {"label": f"{arch_id}/{shape_name}/"
                            f"{'multi' if mp else 'single'}",

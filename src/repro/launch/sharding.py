@@ -58,7 +58,8 @@ def make_plan(arch, shape, mesh) -> ParallelPlan:
 
 def round_context(plan: ParallelPlan, *, agg_backend: str = "auto",
                   encode_backend: str = "auto",
-                  dynamic_sigma: bool = False) -> RoundContext:
+                  dynamic_sigma: bool = False,
+                  cohort: str = "auto") -> RoundContext:
     """The launcher-standard RoundContext for a parallel plan.
 
     One construction point for every mesh launcher (dryrun, and the shape
@@ -74,7 +75,7 @@ def round_context(plan: ParallelPlan, *, agg_backend: str = "auto",
     return RoundContext(agg_backend=agg_backend,
                         encode_backend=encode_backend,
                         weights_are_mask=True, dynamic_sigma=dynamic_sigma,
-                        donate_state=True)
+                        donate_state=True, cohort=cohort)
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,13 @@ def main():
                     help="sign-family client encode backend (auto = in-kernel"
                          " counter noise on TPU, fused jnp elsewhere; "
                          "reference = dense jax.random draw)")
+    ap.add_argument("--cohort", default="auto",
+                    help="cohort execution policy: 'auto' (stream only when "
+                         "the round is large), 'vmap', or "
+                         "'stream(shard=K[,unroll=U])' — stream runs client "
+                         "shards of K through the fused encode under a scan, "
+                         "carrying only the reduced wire accumulator "
+                         "(grammar: docs/API.md)")
     ap.add_argument("--z", type=int, default=1, help="1=Gaussian, 0=uniform")
     ap.add_argument("--sigma", type=float, default=0.01,
                     help="z-sign noise scale / dpgauss noise stddev")
@@ -107,7 +114,8 @@ def main():
     ctx = fedavg.RoundContext(agg_backend=args.agg_backend,
                               encode_backend=args.encode_backend,
                               weights_are_mask=True,
-                              dynamic_sigma=args.plateau)
+                              dynamic_sigma=args.plateau,
+                              cohort=args.cohort)
     step = jax.jit(fedavg.build_round_step(bundle.loss_fn, comp, cfg, ctx),
                    donate_argnums=(0,) if ctx.donate_state else ())
 

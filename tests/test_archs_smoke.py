@@ -55,7 +55,7 @@ def test_reduced_fed_round(arch_id):
     """Full federated round on a reduced model: 4 clients, E=2, z-sign."""
     arch = get_arch(arch_id).reduced()
     bundle = build_model(arch.model)
-    comp = compression.make_compressor("zsign", z=1, sigma=0.05)
+    comp = compression.Pipeline("zsign(z=1,sigma=0.05)")
     cfg = fedavg.FedConfig(n_clients=4, local_steps=2, client_lr=0.05,
                            server_lr=0.5)
     step = jax.jit(fedavg.build_round_step(bundle.loss_fn, comp, cfg))

@@ -52,7 +52,7 @@ def test_corrupt_checkpoint_falls_back(tmp_path):
 def test_restart_replays_identically(tmp_path):
     """Kill-and-restart produces the same trajectory as an uninterrupted run
     (deterministic rng in state + deterministic data) — the core FT invariant."""
-    comp = compression.make_compressor("zsign", z=1, sigma=0.5)
+    comp = compression.Pipeline("zsign(z=1,sigma=0.5)")
     cfg = fedavg.FedConfig(n_clients=4, client_lr=0.05, server_lr=0.1)
     loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
     step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg))

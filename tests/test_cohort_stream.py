@@ -1,0 +1,464 @@
+"""Streaming massive-cohort engine: stream-vs-vmap equivalence suite.
+
+The round driver has two execution plans over the same round math
+(core/fedavg.py): ``vmap`` (one vmap over all parallel clients) and
+``stream`` (shard-sized slices under a lax.scan folding into ONE wire
+accumulator). Contract:
+
+  * per-client PRNG keys derive from the GLOBAL client index
+    (noise.client_keys), so randomness is invariant to the shard partition;
+  * 0/1 participation masks: the two plans are BIT-identical for any shard
+    size (integer sign sums / dyadic scatter sums associate exactly);
+  * fp32 aggregation weights (EF per-client scales): bit-identical when the
+    shard size is a multiple of wire.SIGN_REDUCE_CLIENT_BLK (the fold
+    continues the same blocked accumulation order), f32-rounding-close
+    otherwise;
+  * the streaming jaxpr never materializes an (n_total, d) f32 buffer or a
+    full-cohort uint8 payload stack — peak wire memory is O(shard * d / 8);
+  * ``auto`` (and a bare ``stream``) gate small rounds back to the vmap
+    plan; an explicit ``stream(shard=K)`` always streams.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core import fedavg, wire
+from repro.core import noise as Z
+from repro.core.context import (STREAM_AUTO_MIN_ELEMS, STREAM_DEFAULT_SHARD,
+                                CohortPolicy, RoundContext)
+from repro.fed.sampling import CohortSampler
+
+
+# ---------------------------------------------------------------------------
+# policy parsing + the auto-gate
+# ---------------------------------------------------------------------------
+
+def test_cohort_policy_parse():
+    assert CohortPolicy.parse("auto") == CohortPolicy("auto")
+    assert CohortPolicy.parse("vmap") == CohortPolicy("vmap")
+    assert CohortPolicy.parse("stream") == CohortPolicy("stream")
+    pol = CohortPolicy.parse("stream(shard=16,unroll=2)")
+    assert (pol.mode, pol.shard, pol.unroll) == ("stream", 16, 2)
+    # idempotent on an already-parsed policy
+    assert CohortPolicy.parse(pol) is pol
+    # shard=0 is VALID ("engine default"), so it still auto-gates
+    assert CohortPolicy.parse("stream(shard=0)").shard == 0
+    for bad in ["nope", "stream(shard=a)", "vmap(shard=2)",
+                "stream(shard=2,unroll=0)", "stream(frac=2)"]:
+        with pytest.raises(ValueError):
+            CohortPolicy.parse(bad)
+    with pytest.raises(ValueError):
+        RoundContext(cohort="stream(shard=-1)")
+
+
+def test_resolve_cohort_gating():
+    big = STREAM_AUTO_MIN_ELEMS  # elems threshold: total * n_coords
+    # explicit vmap never streams
+    assert fedavg.resolve_cohort("vmap", 1 << 20, 1 << 20) == ("vmap", 0, 1)
+    # auto below the threshold keeps the vmap plan
+    assert fedavg.resolve_cohort("auto", 8, 100) == ("vmap", 0, 1)
+    assert fedavg.resolve_cohort("stream", 8, 100) == ("vmap", 0, 1)
+    # auto above the threshold streams at the default shard
+    assert fedavg.resolve_cohort("auto", 4096, big // 1024) == \
+        ("stream", STREAM_DEFAULT_SHARD, 1)
+    # explicit shard forces streaming below the threshold
+    assert fedavg.resolve_cohort("stream(shard=4)", 8, 100) == ("stream", 4, 1)
+    # shard clamps to the cohort; forced single-shard still streams
+    assert fedavg.resolve_cohort("stream(shard=64)", 10, 100) == \
+        ("stream", 10, 1)
+    # unroll rides along
+    assert fedavg.resolve_cohort("stream(shard=4,unroll=3)", 8, 100) == \
+        ("stream", 4, 3)
+    # auto where one shard would cover the whole cohort -> vmap
+    assert fedavg.resolve_cohort(
+        "auto", STREAM_DEFAULT_SHARD // 2, 1 << 22) == ("vmap", 0, 1)
+
+
+def test_client_keys_invariant_to_partition():
+    """client_keys is a counter derivation: any shard partition concatenates
+    to the same per-client key rows."""
+    key = jax.random.PRNGKey(3)
+    whole = np.asarray(Z.client_keys(key, 0, 12))
+    parts = np.concatenate([np.asarray(Z.client_keys(key, 0, 5)),
+                            np.asarray(Z.client_keys(key, 5, 7))])
+    np.testing.assert_array_equal(whole, parts)
+    # distinct clients -> distinct keys
+    assert len({tuple(r) for r in whole.tolist()}) == 12
+
+
+# ---------------------------------------------------------------------------
+# wire fold API: aggregate(..., acc=...) continues one concatenated reduce
+# ---------------------------------------------------------------------------
+
+def test_wire_fold_mask_exact_any_split():
+    rng = np.random.RandomState(0)
+    packed = jnp.asarray(rng.randint(0, 256, (20, 64)), jnp.uint8)
+    mask = jnp.asarray(rng.randint(0, 2, 20).astype(np.float32))
+    want = np.asarray(wire.unpack_sum(packed, mask))
+    for split in [1, 7, 8, 13]:
+        acc = None
+        for lo in range(0, 20, split):
+            acc = wire.unpack_sum(packed[lo:lo + split], mask[lo:lo + split],
+                                  acc=acc)
+        np.testing.assert_array_equal(np.asarray(acc), want, err_msg=str(split))
+        acc = None
+        for lo in range(0, 20, split):
+            acc = wire.unpack_sum_mask(packed[lo:lo + split],
+                                       mask[lo:lo + split], acc=acc)
+        np.testing.assert_array_equal(np.asarray(acc), want, err_msg=str(split))
+
+
+def test_wire_fold_fp32_weights_exact_at_client_blk_multiples():
+    blk = wire.SIGN_REDUCE_CLIENT_BLK
+    rng = np.random.RandomState(1)
+    packed = jnp.asarray(rng.randint(0, 256, (4 * blk, 128)), jnp.uint8)
+    w = jnp.asarray(rng.rand(4 * blk).astype(np.float32))
+    want = np.asarray(wire.unpack_sum(packed, w))
+    acc = None
+    for lo in range(0, 4 * blk, blk):
+        acc = wire.unpack_sum(packed[lo:lo + blk], w[lo:lo + blk], acc=acc)
+    np.testing.assert_array_equal(np.asarray(acc), want)
+
+
+def test_scatter_and_dense_fold():
+    rng = np.random.RandomState(2)
+    vals = jnp.asarray(rng.randint(-8, 8, (6, 3)).astype(np.float32))
+    idx = jnp.asarray(rng.randint(0, 10, (6, 3)))
+    m = jnp.asarray(rng.randint(0, 2, 6).astype(np.float32))
+    want = np.asarray(wire.scatter_sum_coo(vals, idx, m, 10))
+    got = wire.scatter_sum_coo(vals[3:], idx[3:], m[3:], 10,
+                               acc=wire.scatter_sum_coo(vals[:3], idx[:3],
+                                                        m[:3], 10))
+    np.testing.assert_array_equal(np.asarray(got), want)
+    dense = jnp.asarray(rng.randint(-4, 4, (6, 10)).astype(np.float32))
+    want = np.asarray(wire.dense_masked_sum(dense, m))
+    got = wire.dense_masked_sum(dense[3:], m[3:],
+                                acc=wire.dense_masked_sum(dense[:3], m[:3]))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: streaming rounds == vmap rounds
+# ---------------------------------------------------------------------------
+
+def _run_rounds(spec, cohort, *, n=16, d=96, rounds=4, seed=5,
+                mask=None, glr=0.01, slr=0.3, integer_targets=False):
+    comp = C.Pipeline(spec)
+    cfg = fedavg.FedConfig(n_clients=n, client_lr=glr, server_lr=slr)
+    ctx = RoundContext(cohort=cohort)
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg, ctx))
+    y = jax.random.normal(jax.random.PRNGKey(seed), (1, n, 1, d))
+    if integer_targets:
+        y = jnp.round(y * 4.0)  # dyadic targets keep every sum associative
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    mask = jnp.ones((1, n)) if mask is None else mask
+    for _ in range(rounds):
+        st, m = step(st, {"y": y}, mask)
+    return st, m
+
+
+# 8 of 16 live -> n_live is a power of two, so the post-aggregate mean stays
+# dyadic for the integer-target (top-k) case
+_MASK16 = jnp.ones((1, 16)).at[0, jnp.asarray([1, 4, 5, 9, 11, 12, 13, 15])
+                               ].set(0.0)
+
+
+@pytest.mark.parametrize("shard", [1, 7, 64])
+def test_stream_bit_identical_zsign_packed(shard):
+    """0/1 masks -> integer sign sums: streaming at ANY shard size is
+    bit-identical to the vmap plan, dead clients included."""
+    ref, mref = _run_rounds("zsign_packed(z=1,sigma=0.7)", "vmap",
+                            mask=_MASK16)
+    got, mgot = _run_rounds("zsign_packed(z=1,sigma=0.7)",
+                            f"stream(shard={shard})", mask=_MASK16)
+    np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                  np.asarray(got.params["x"]))
+    assert float(mref.loss) == float(mgot.loss)
+    assert float(mref.participation) == float(mgot.participation) == 8.0
+
+
+def test_stream_bit_identical_ef_zsign_at_blk_multiple():
+    """EF per-client fp32 scale weights: shard == SIGN_REDUCE_CLIENT_BLK
+    continues the same blocked accumulation order -> bit-identical params
+    AND residuals."""
+    blk = wire.SIGN_REDUCE_CLIENT_BLK
+    ref, _ = _run_rounds("ef|zsign", "vmap", mask=_MASK16)
+    got, _ = _run_rounds("ef|zsign", f"stream(shard={blk})", mask=_MASK16)
+    np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                  np.asarray(got.params["x"]))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state),
+                                  np.asarray(got.comp_state))
+
+
+@pytest.mark.parametrize("shard", [1, 7])
+def test_stream_close_ef_zsign_any_shard(shard):
+    """Off-blk shard sizes change the fp32 association order of the EF
+    scale-weighted reduce: rounding-close, never drifting."""
+    ref, _ = _run_rounds("ef|zsign", "vmap", mask=_MASK16)
+    got, _ = _run_rounds("ef|zsign", f"stream(shard={shard})", mask=_MASK16)
+    np.testing.assert_allclose(np.asarray(ref.params["x"]),
+                               np.asarray(got.params["x"]), rtol=5e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(ref.comp_state),
+                               np.asarray(got.comp_state), rtol=5e-5,
+                               atol=1e-7)
+
+
+@pytest.mark.parametrize("shard", [1, 7, 64])
+def test_stream_bit_identical_topk_dyadic(shard):
+    """top-k COO scatter sums: dyadic client values (integer targets, dyadic
+    lrs, power-of-two live count) make every addition exact, so the
+    shard-by-shard scatter fold is bit-identical to the one-shot scatter —
+    EF residuals included."""
+    kw = dict(mask=_MASK16, glr=0.5, slr=0.5, integer_targets=True)
+    ref, _ = _run_rounds("ef|topk(frac=0.25)", "vmap", **kw)
+    got, _ = _run_rounds("ef|topk(frac=0.25)", f"stream(shard={shard})", **kw)
+    np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                  np.asarray(got.params["x"]))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state),
+                                  np.asarray(got.comp_state))
+
+
+@pytest.mark.parametrize("shard", [1, 7, 64])
+def test_shard_size_invariance(shard):
+    """Streaming results do not depend on the shard size (counter-based
+    keys + associative integer aggregation)."""
+    base, _ = _run_rounds("zsign_packed(z=1,sigma=0.7)", "stream(shard=4)",
+                          mask=_MASK16)
+    got, _ = _run_rounds("zsign_packed(z=1,sigma=0.7)",
+                         f"stream(shard={shard})", mask=_MASK16)
+    np.testing.assert_array_equal(np.asarray(base.params["x"]),
+                                  np.asarray(got.params["x"]))
+
+
+def test_stream_dead_clients_keep_residual_and_padding_is_inert():
+    """A cohort that does not divide the shard (10 clients, shard 4): padded
+    slots contribute nothing, dead clients keep residuals bit-exactly, live
+    clients update — same as the vmap plan."""
+    n, d = 10, 24
+    mask0 = jnp.ones((1, n))
+    mask = mask0.at[0, 2].set(0.0).at[0, 9].set(0.0)
+    outs = {}
+    for cohort in ["vmap", "stream(shard=4)"]:
+        comp = C.Pipeline("ef|zsign")
+        cfg = fedavg.FedConfig(n_clients=n, client_lr=0.01, server_lr=0.3)
+        loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg,
+                                               RoundContext(cohort=cohort)))
+        y = jax.random.normal(jax.random.PRNGKey(7), (1, n, 1, d))
+        st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                      jax.random.PRNGKey(1))
+        st, _ = step(st, {"y": y}, mask0)       # all-live: residuals nonzero
+        before = np.asarray(st.comp_state).copy()
+        st, m = step(st, {"y": y}, mask)        # kill clients 2 and 9
+        assert st.comp_state.shape == (1, n, d)
+        assert float(m.participation) == n - 2
+        after = np.asarray(st.comp_state)
+        np.testing.assert_array_equal(after[0, 2], before[0, 2])
+        np.testing.assert_array_equal(after[0, 9], before[0, 9])
+        for i in range(n):
+            if i not in (2, 9):
+                assert np.any(after[0, i] != before[0, i]), i
+        outs[cohort] = after
+    # shard 4 streams 10 clients as 3 shards (2 padded slots); blk-off fold
+    # of fp32 scale weights -> rounding-close residuals across plans
+    np.testing.assert_allclose(outs["vmap"], outs["stream(shard=4)"],
+                               rtol=5e-5, atol=1e-7)
+
+
+def test_stream_groups_flatten_to_cohort():
+    """client_groups > 1 under streaming: the (G, N) cohort flattens to
+    G*N slots and matches the same clients run as one flat group."""
+    d = 48
+    y = jax.random.normal(jax.random.PRNGKey(11), (2, 4, 1, d))
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    outs = {}
+    for groups, n in [(2, 4), (1, 8)]:
+        comp = C.Pipeline("zsign(z=1,sigma=0.5)")
+        cfg = fedavg.FedConfig(n_clients=n, client_groups=groups,
+                               client_lr=0.01, server_lr=0.3)
+        step = jax.jit(fedavg.build_round_step(
+            loss_fn, comp, cfg, RoundContext(cohort="stream(shard=3)")))
+        st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                      jax.random.PRNGKey(1))
+        st = st._replace(rng=jax.random.PRNGKey(42))
+        for _ in range(3):
+            st, _ = step(st, {"y": y.reshape(groups, n, 1, d)},
+                         jnp.ones((groups, n)))
+        outs[groups] = np.asarray(st.params["x"])
+    np.testing.assert_array_equal(outs[2], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# memory pins: no full-cohort buffers on the streaming plan
+# ---------------------------------------------------------------------------
+
+def _walk_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None:
+                yield from _walk_eqns(inner)
+            if isinstance(v, (list, tuple)):
+                for vv in v:
+                    inner = getattr(vv, "jaxpr", None)
+                    if inner is not None:
+                        yield from _walk_eqns(inner)
+
+
+def _stream_round_jaxpr(n_total, shard, d):
+    """A streaming round whose batch leaves are tiny per client, so any
+    (n_total, d)-sized array in the jaxpr is a genuine full-cohort gradient
+    or payload stack, never input data."""
+    comp = C.Pipeline("zsign_packed(z=1,sigma=0.5)")
+    cfg = fedavg.FedConfig(n_clients=n_total, client_lr=0.01, server_lr=0.3)
+    # d model coords driven by a scalar per-client target
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    step = fedavg.build_round_step(
+        loss_fn, comp, cfg, RoundContext(cohort=f"stream(shard={shard})"))
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    batch = {"y": jnp.zeros((1, n_total, 1, 1))}
+    return jax.make_jaxpr(step)(st, batch, jnp.ones((1, n_total)))
+
+
+def test_stream_jaxpr_has_no_full_cohort_buffers():
+    n_total, shard = 64, 8
+    d = 2 * C.ENCODE_TILE              # 16384 coords, 2048 wire bytes
+    n_bytes = d // 8
+    jaxpr = _stream_round_jaxpr(n_total, shard, d)
+    scans = [e for e in _walk_eqns(jaxpr.jaxpr)
+             if e.primitive.name == "scan"]
+    assert scans, "streaming must lower to lax.scan"
+    for eqn in _walk_eqns(jaxpr.jaxpr):
+        for var in list(eqn.outvars) + list(eqn.invars):
+            aval = getattr(var, "aval", None)
+            if aval is None or not hasattr(aval, "shape"):
+                continue
+            shape = tuple(aval.shape)
+            if aval.dtype == jnp.float32 and shape[-2:] == (n_total, d):
+                raise AssertionError(
+                    f"full-cohort (n_total, d) f32 buffer in streaming "
+                    f"jaxpr: {eqn}")
+            if aval.dtype == jnp.uint8 and len(shape) >= 2 and \
+                    shape[-2] == n_total and shape[-1] >= n_bytes:
+                raise AssertionError(
+                    f"full-cohort uint8 payload stack in streaming "
+                    f"jaxpr: {eqn}")
+
+
+def test_stream_scan_honors_unroll():
+    jaxpr = None
+    for unroll in [1, 2]:
+        comp = C.Pipeline("zsign(z=1,sigma=0.5)")
+        cfg = fedavg.FedConfig(n_clients=8, client_lr=0.01, server_lr=0.3)
+        loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+        step = fedavg.build_round_step(
+            loss_fn, comp, cfg,
+            RoundContext(cohort=f"stream(shard=2,unroll={unroll})"))
+        st = fedavg.init_server_state({"x": jnp.zeros(16)}, cfg, comp,
+                                      jax.random.PRNGKey(1))
+        jaxpr = jax.make_jaxpr(step)(st, {"y": jnp.zeros((1, 8, 1, 16))},
+                                     jnp.ones((1, 8)))
+        scans = [e for e in _walk_eqns(jaxpr.jaxpr)
+                 if e.primitive.name == "scan"]
+        assert scans
+        assert any(e.params.get("unroll") == unroll for e in scans), unroll
+
+
+def test_auto_small_round_compiles_without_scan():
+    """cohort=auto (and bare stream) below the element threshold keep the
+    scan-free vmap plan — no lax.scan in the round jaxpr at E == 1."""
+    for cohort in ["auto", "stream"]:
+        comp = C.Pipeline("zsign(z=1,sigma=0.5)")
+        cfg = fedavg.FedConfig(n_clients=8, client_lr=0.01, server_lr=0.3)
+        loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+        step = fedavg.build_round_step(loss_fn, comp, cfg,
+                                       RoundContext(cohort=cohort))
+        st = fedavg.init_server_state({"x": jnp.zeros(32)}, cfg, comp,
+                                      jax.random.PRNGKey(1))
+        jaxpr = jax.make_jaxpr(step)(st, {"y": jnp.zeros((1, 8, 1, 32))},
+                                     jnp.ones((1, 8)))
+        assert not [e for e in _walk_eqns(jaxpr.jaxpr)
+                    if e.primitive.name == "scan"], cohort
+
+
+# ---------------------------------------------------------------------------
+# massive-cohort sampling (fed/sampling.py CohortSampler)
+# ---------------------------------------------------------------------------
+
+def test_cohort_sampler_uniform_tier():
+    s = CohortSampler(total_clients=100_000, per_round=100, seed=0)
+    idx, w = s.sample()
+    assert idx.shape == (100,) and w.shape == (100,)
+    assert np.all(np.diff(idx) > 0)          # sorted, distinct
+    assert np.all(w == 1.0)                  # exact membership mask
+    assert 0 <= idx.min() and idx.max() < 100_000
+
+
+def test_cohort_sampler_importance_weights_debias():
+    total, k = 5000, 500
+    scores = np.ones(total)
+    scores[:100] = 50.0                      # hot clients
+    s = CohortSampler(total_clients=total, per_round=k, tier="importance",
+                      scores=scores, seed=1)
+    idx, w = s.sample()
+    assert idx.size == k
+    p = scores / scores.sum()
+    np.testing.assert_allclose(w, 1.0 / (k * p[idx]), rtol=1e-6)
+    # hot clients are much more likely to appear, and carry smaller weights
+    hot = (idx < 100).mean()
+    assert hot > 0.1
+    assert w[idx < 100].mean() < w[idx >= 100].mean()
+
+
+def test_cohort_sampler_arrival_tier():
+    s = CohortSampler(total_clients=20_000, per_round=1, tier="arrival",
+                      rate=0.05, seed=2)
+    idx, w = s.sample()
+    assert 0.03 * 20_000 < idx.size < 0.07 * 20_000
+    assert np.all(w == pytest.approx(20.0))  # 1/rate Horvitz-Thompson
+
+
+def test_cohort_sampler_shard_weights_match_dense():
+    s = CohortSampler(total_clients=1000, per_round=64, seed=3)
+    idx, w = s.sample()
+    dense = s.dense(idx, w, (1, 1000)).reshape(-1)
+    rows = list(s.iter_shards(idx, w, shard=64))
+    assert len(rows) == -(-1000 // 64)
+    got = np.concatenate(rows)[:1000]
+    np.testing.assert_array_equal(got, dense)
+    # spot-check the binary-search slicing
+    np.testing.assert_array_equal(s.shard_weights(idx, w, 3, 64),
+                                  dense[3 * 64:4 * 64])
+
+
+def test_cohort_sampler_validation():
+    with pytest.raises(ValueError):
+        CohortSampler(total_clients=10, per_round=11)
+    with pytest.raises(ValueError):
+        CohortSampler(total_clients=10, per_round=2, tier="nope")
+    with pytest.raises(ValueError):
+        CohortSampler(total_clients=10, per_round=2, tier="importance")
+    with pytest.raises(ValueError):
+        CohortSampler(total_clients=10, per_round=2, tier="arrival", rate=0.0)
+
+
+def test_cohort_sampler_drives_streaming_round():
+    """End-to-end: a CohortSampler mask through a streamed round matches the
+    same mask through the vmap plan (uniform tier -> exact 0/1 mask)."""
+    n = 24
+    s = CohortSampler(total_clients=n, per_round=8, seed=9)
+    mask = jnp.asarray(s.mask((1, n)))
+    assert float(mask.sum()) == 8.0
+    ref, _ = _run_rounds("zsign_packed(z=1,sigma=0.7)", "vmap", n=n,
+                         mask=mask, rounds=2)
+    got, _ = _run_rounds("zsign_packed(z=1,sigma=0.7)", "stream(shard=5)",
+                         n=n, mask=mask, rounds=2)
+    np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                  np.asarray(got.params["x"]))

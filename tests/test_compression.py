@@ -39,14 +39,14 @@ def roundtrip(comp, g, key=None, mask=None, n_clients=1):
     return spec.unflatten(dec), st2
 
 
-@pytest.mark.parametrize("name,kw", [
-    ("identity", {}), ("zsign", {"z": 1, "sigma": 0.5}),
-    ("zsign", {"z": 0, "sigma": 0.5}), ("stosign", {}),
-    ("efsign", {}), ("qsgd", {"s": 2}), ("topk", {"frac": 0.5}),
-    ("dpgauss", {"sigma": 0.1}), ("zsign_packed", {"z": 1, "sigma": 0.5}),
+@pytest.mark.parametrize("spec", [
+    "identity", "zsign(z=1,sigma=0.5)",
+    "zsign(z=0,sigma=0.5)", "stosign",
+    "ef|zsign", "qsgd(s=2)", "ef|topk(frac=0.5)",
+    "dp(noise=0.1)|dense", "zsign_packed(z=1,sigma=0.5)",
 ])
-def test_roundtrip_shapes(name, kw):
-    comp = C.make_compressor(name, **kw)
+def test_roundtrip_shapes(spec):
+    comp = C.Pipeline(spec)
     g = tree_of(np.random.randn(17))
     dec, _ = roundtrip(comp, g, n_clients=2)
     assert jax.tree_util.tree_structure(dec) == jax.tree_util.tree_structure(g)
@@ -54,13 +54,13 @@ def test_roundtrip_shapes(name, kw):
         assert a.shape == b.shape
 
 
-@pytest.mark.parametrize("name,kw", [
-    ("zsign", {"z": 1, "sigma": 0.5}), ("stosign", {}), ("efsign", {}),
-    ("zsign_packed", {"z": 1, "sigma": 0.5}),
+@pytest.mark.parametrize("spec", [
+    "zsign(z=1,sigma=0.5)", "stosign", "ef|zsign",
+    "zsign_packed(z=1,sigma=0.5)",
 ])
-def test_sign_family_transmits_bitpacked_uint8(name, kw):
+def test_sign_family_transmits_bitpacked_uint8(spec):
     """Every sign-family compressor ships uint8 at <= 1 bit per coordinate."""
-    comp = C.make_compressor(name, **kw)
+    comp = C.Pipeline(spec)
     assert comp.wire_bits_per_coord <= 1.0
     wf = comp.wire_format()
     assert wf.dtype == "uint8" and wf.bits_per_coord <= 1.0
@@ -75,7 +75,7 @@ def test_sign_family_transmits_bitpacked_uint8(name, kw):
 
 
 def test_zsign_is_sign_when_sigma_zero():
-    comp = C.make_compressor("zsign", z=1, sigma=0.0)
+    comp = C.Pipeline("zsign(z=1,sigma=0.0)")
     flat = jnp.asarray([-2.0, -0.1, 0.0, 0.1, 3.0], jnp.float32)
     enc, _ = comp.encode(jax.random.PRNGKey(0), flat, None)
     signs = wire.unpack_signs(enc)[:5]
@@ -85,7 +85,7 @@ def test_zsign_is_sign_when_sigma_zero():
 
 def test_zsign_unbiased_estimator_statistically():
     """decode(mean over many independent encodings) ~ g for large sigma."""
-    comp = C.make_compressor("zsign", z=0, sigma=5.0)  # uniform, sigma>|x|
+    comp = C.Pipeline("zsign(z=0,sigma=5.0)")  # uniform, sigma>|x|
     g = {"w": jnp.asarray(np.linspace(-2, 2, 16), jnp.float32)}
     dec, _ = roundtrip(comp, g, n_clients=4000)
     # uniform noise with sigma > |x|: exactly unbiased (Remark 1)
@@ -94,7 +94,7 @@ def test_zsign_unbiased_estimator_statistically():
 
 
 def test_qsgd_unbiased():
-    comp = C.make_compressor("qsgd", s=1)
+    comp = C.Pipeline("qsgd(s=1)")
     flat = jnp.asarray(np.random.RandomState(0).randn(32), jnp.float32)
     encs = [comp.encode(jax.random.PRNGKey(i), flat, None)[0]
             for i in range(3000)]
@@ -105,7 +105,7 @@ def test_qsgd_unbiased():
 def test_efsign_error_feedback_contracts():
     """EF residual compensates over repeated encoding of a constant gradient:
     the running decoded average converges to g."""
-    comp = C.make_compressor("efsign")
+    comp = C.Pipeline("ef|zsign")
     flat = jnp.asarray([1.0, -0.2, 0.05, 3.0])
     state = comp.init_state(4)
     dec_sum = np.zeros(4)
@@ -130,16 +130,16 @@ def test_bitpack_roundtrip(n):
 
 
 def test_wire_bits_accounting():
-    assert C.make_compressor("zsign").wire_bits_per_coord == 1.0
-    assert C.make_compressor("identity").wire_bits_per_coord == 32.0
-    assert C.make_compressor("efsign").wire_bits_per_coord == 1.0
+    assert C.Pipeline("zsign").wire_bits_per_coord == 1.0
+    assert C.Pipeline("identity").wire_bits_per_coord == 32.0
+    assert C.Pipeline("ef|zsign").wire_bits_per_coord == 1.0
     # derived from hyper-parameters, not hardcoded:
-    assert C.make_compressor("topk", frac=0.1).wire_bits_per_coord == \
+    assert C.Pipeline("ef|topk(frac=0.1)").wire_bits_per_coord == \
         pytest.approx(6.4)
-    assert C.make_compressor("topk", frac=0.5).wire_bits_per_coord == \
+    assert C.Pipeline("ef|topk(frac=0.5)").wire_bits_per_coord == \
         pytest.approx(32.0)
-    assert C.make_compressor("qsgd", s=1).wire_bits_per_coord == 2.0
-    assert C.make_compressor("qsgd", s=4).wire_bits_per_coord == 4.0
+    assert C.Pipeline("qsgd(s=1)").wire_bits_per_coord == 2.0
+    assert C.Pipeline("qsgd(s=4)").wire_bits_per_coord == 4.0
 
 
 def test_treespec_flatten_unflatten_roundtrip():
@@ -192,8 +192,8 @@ def test_codec_matches_per_leaf_reference_zsign(name):
     backends have their own stream — their statistics are covered in
     tests/test_encode_fused.py)."""
     z, sigma, n = 1, 0.7, 5
-    comp = C.make_compressor(name, z=z, sigma=sigma,
-                             encode_backend="reference")
+    comp = C.Pipeline(f"{name}(z={z},sigma={sigma},"
+                      f"encode_backend=reference)")
     g = {"a": jnp.asarray(np.random.RandomState(0).randn(37), jnp.float32),
          "b": {"c": jnp.asarray(np.random.RandomState(1).randn(4, 9),
                                 jnp.float32)}}
@@ -217,7 +217,7 @@ def test_codec_matches_per_leaf_reference_zsign(name):
 
 
 def test_codec_matches_per_leaf_reference_identity():
-    comp = C.make_compressor("identity")
+    comp = C.Pipeline("identity")
     g = tree_of(np.random.RandomState(3).randn(23))
     spec = wire.tree_spec(g)
     flat = spec.flatten(g)
@@ -232,7 +232,7 @@ def test_codec_matches_per_leaf_reference_identity():
 
 
 def test_topk_masked_aggregate_scatter():
-    comp = C.make_compressor("topk", frac=0.25)
+    comp = C.Pipeline("ef|topk(frac=0.25)")
     d = 16
     flats = [jnp.zeros(d).at[i].set(10.0 + i) for i in range(3)]
     encs, states = [], []
@@ -257,7 +257,7 @@ def test_topk_masked_aggregate_scatter():
 def test_efsign_zero_coord_residual_matches_wire():
     """Regression: at p == 0 the wire transmits a +1 bit, so the residual
     must record -scale there (jnp.sign's 0-at-0 would leak +scale/round)."""
-    comp = C.make_compressor("efsign")
+    comp = C.Pipeline("ef|zsign")
     flat = jnp.asarray([0.0, 1.0, -1.0, 0.0])
     enc, res = comp.encode(None, flat, comp.init_state(4))
     scale = float(enc["scale"])
@@ -312,7 +312,7 @@ def test_topk_chunked_distribution_large_d():
 
 def test_efsign_scale_weighted_aggregate():
     """EF aggregation weights each client's signs by its own fp32 scale."""
-    comp = C.make_compressor("efsign")
+    comp = C.Pipeline("ef|zsign")
     d = 8
     f1 = jnp.asarray([1.0, -1.0, 2.0, -2.0, 1.0, -1.0, 2.0, -2.0])
     f2 = 4.0 * f1

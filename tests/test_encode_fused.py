@@ -97,10 +97,10 @@ def test_compressor_backends_bit_exact(name):
     d = 2 * 8192 + 117
     flat = jax.random.normal(jax.random.PRNGKey(1), (d,))
     key = jax.random.PRNGKey(7)
-    kw = {} if name == "stosign" else {"z": 1, "sigma": 0.4}
+    opts = "" if name == "stosign" else "z=1,sigma=0.4,"
     outs = {}
     for backend in ["jnp", "pallas"]:
-        comp = C.make_compressor(name, encode_backend=backend, **kw)
+        comp = C.Pipeline(f"{name}({opts}encode_backend={backend})")
         outs[backend], _ = comp.encode(key, flat, None)
     np.testing.assert_array_equal(np.asarray(outs["jnp"]),
                                   np.asarray(outs["pallas"]))
@@ -112,7 +112,7 @@ def test_vmapped_encode_matches_per_client():
     n, d = 5, 8192 + 13
     keys = jax.random.split(jax.random.PRNGKey(3), n)
     flats = jax.random.normal(jax.random.PRNGKey(4), (n, d))
-    comp = C.make_compressor("zsign", z=1, sigma=0.5, encode_backend="jnp")
+    comp = C.Pipeline("zsign(z=1,sigma=0.5,encode_backend=jnp)")
     stacked = jax.vmap(lambda k, f: comp.encode(k, f, None)[0])(keys, flats)
     for i in range(n):
         single, _ = comp.encode(keys[i], flats[i], None)
@@ -123,7 +123,7 @@ def test_vmapped_encode_matches_per_client():
 
 
 def test_unknown_encode_backend_raises():
-    comp = C.make_compressor("zsign", encode_backend="nope")
+    comp = C.Pipeline("zsign(encode_backend=nope)")
     with pytest.raises(ValueError, match="unknown encode backend"):
         comp.encode(jax.random.PRNGKey(0), jnp.ones((8,)), None)
 
@@ -210,7 +210,7 @@ def test_stosign_fused_mean_sign_matches_clip():
     encodings approaches clip(x / ||x||, -1, 1) (exactly unbiased regime)."""
     reps, vals = 4096, jnp.asarray([-0.5, -0.1, 0.0, 0.2, 0.6])
     flat = jnp.repeat(vals, reps)
-    comp = C.make_compressor("stosign", encode_backend="jnp")
+    comp = C.Pipeline("stosign(encode_backend=jnp)")
     payload, _ = comp.encode(jax.random.PRNGKey(9), flat, None)
     signs = np.asarray(wire.unpack_signs(payload), np.float64)[: flat.size]
     mean_sign = signs.reshape(5, reps).mean(axis=1)
@@ -229,8 +229,8 @@ def test_reference_backend_is_dense_draw():
     d, z, sigma = 1000, 1, 0.6
     key = jax.random.PRNGKey(2)
     flat = jax.random.normal(jax.random.PRNGKey(1), (d,))
-    comp = C.make_compressor("zsign", z=z, sigma=sigma,
-                             encode_backend="reference")
+    comp = C.Pipeline(f"zsign(z={z},sigma={sigma},"
+                      f"encode_backend=reference)")
     got, _ = comp.encode(key, flat, None)
     want = wire.pack_flat(flat + sigma * Z.sample_z_noise(key, (d,), z))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
@@ -242,13 +242,12 @@ def test_finite_z_falls_back_to_dense():
     d = 500
     key = jax.random.PRNGKey(4)
     flat = jax.random.normal(jax.random.PRNGKey(3), (d,))
-    ref, _ = C.make_compressor("zsign", z=2, sigma=0.5,
-                               encode_backend="reference").encode(
-                                   key, flat, None)
+    ref, _ = C.Pipeline("zsign(z=2,sigma=0.5,"
+                        "encode_backend=reference)").encode(key, flat, None)
     for backend in ["auto", "jnp"]:
-        got, _ = C.make_compressor("zsign", z=2, sigma=0.5,
-                                   encode_backend=backend).encode(
-                                       key, flat, None)
+        got, _ = C.Pipeline(f"zsign(z=2,sigma=0.5,"
+                            f"encode_backend={backend})").encode(
+                                key, flat, None)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
@@ -259,7 +258,7 @@ def test_sigma_zero_is_noise_free_on_all_backends(name, backend):
     noise-free signs."""
     d = 8192 + 5
     flat = jax.random.normal(jax.random.PRNGKey(6), (d,))
-    comp = C.make_compressor(name, z=1, sigma=0.0, encode_backend=backend)
+    comp = C.Pipeline(f"{name}(z=1,sigma=0.0,encode_backend={backend})")
     payload, _ = comp.encode(jax.random.PRNGKey(0), flat, None)
     signs = np.asarray(wire.unpack_signs(payload))[:d]
     want = np.where(np.asarray(flat) >= 0, 1, -1)
@@ -287,8 +286,8 @@ def test_sigma_zero_packed_draws_no_rng():
     d = 8192
     flat = jnp.ones((d,))
     for backend in ["reference", "jnp", "pallas"]:
-        comp = C.make_compressor("zsign_packed", z=1, sigma=0.0,
-                                 encode_backend=backend)
+        comp = C.Pipeline(f"zsign_packed(z=1,sigma=0.0,"
+                          f"encode_backend={backend})")
         jaxpr = jax.make_jaxpr(
             lambda k, f: comp.encode(k, f, None)[0])(
                 jax.random.PRNGKey(0), flat)
@@ -339,8 +338,8 @@ def test_no_dense_noise_buffer_in_encode_jaxpr(setup):
     n, d = 16, 8 * TILE + 100
     keys = jax.random.split(jax.random.PRNGKey(0), n)
     flats = jnp.zeros((n, d))
-    comp = C.make_compressor("zsign", z=1, sigma=0.5, encode_backend=backend,
-                             encode_chunk_tiles=chunk)
+    comp = C.Pipeline(f"zsign(z=1,sigma=0.5,encode_backend={backend},"
+                      f"encode_chunk_tiles={chunk})")
     fan_out = jax.vmap(lambda k, f: comp.encode(k, f, None)[0])
     worst = _max_f32_outvar_bytes(jax.make_jaxpr(fan_out)(keys, flats).jaxpr)
     stacked_noise_bytes = 4 * n * d
@@ -348,8 +347,7 @@ def test_no_dense_noise_buffer_in_encode_jaxpr(setup):
     assert worst < stacked_noise_bytes / 4, (backend, worst)
     assert worst <= limit, (backend, worst)
 
-    ref = C.make_compressor("zsign", z=1, sigma=0.5,
-                            encode_backend="reference")
+    ref = C.Pipeline("zsign(z=1,sigma=0.5,encode_backend=reference)")
     worst_ref = _max_f32_outvar_bytes(
         jax.make_jaxpr(jax.vmap(lambda k, f: ref.encode(k, f, None)[0]))(
             keys, flats).jaxpr)
@@ -366,8 +364,8 @@ def test_no_dense_noise_buffer_in_compiled_single_pass():
     flats = jnp.zeros((n, d))
     temps = {}
     for backend in ["jnp", "reference"]:
-        comp = C.make_compressor("zsign", z=1, sigma=0.5,
-                                 encode_backend=backend)
+        comp = C.Pipeline(f"zsign(z=1,sigma=0.5,"
+                          f"encode_backend={backend})")
         fan_out = jax.jit(jax.vmap(lambda k, f: comp.encode(k, f, None)[0]))
         mem = fan_out.lower(keys, flats).compile().memory_analysis()
         temps[backend] = mem.temp_size_in_bytes
@@ -392,12 +390,12 @@ def _consensus(comp, groups, n, d, seed=0):
 
 
 def test_stacks_group_payloads_dispatch():
-    assert C.make_compressor("zsign").stacks_group_payloads()
-    assert C.make_compressor("efsign").stacks_group_payloads()
-    assert C.make_compressor("topk").stacks_group_payloads()
-    assert not C.make_compressor("identity").stacks_group_payloads()
-    assert not C.make_compressor("qsgd").stacks_group_payloads()
-    assert not C.make_compressor("dpgauss").stacks_group_payloads()
+    assert C.Pipeline("zsign").stacks_group_payloads()
+    assert C.Pipeline("ef|zsign").stacks_group_payloads()
+    assert C.Pipeline("ef|topk").stacks_group_payloads()
+    assert not C.Pipeline("identity").stacks_group_payloads()
+    assert not C.Pipeline("qsgd").stacks_group_payloads()
+    assert not C.Pipeline("dp(noise=1.0)|dense").stacks_group_payloads()
 
 
 @pytest.mark.parametrize("mask_on", [True, False])
@@ -409,7 +407,7 @@ def test_group_scan_bit_identical_to_vmap_path(mask_on):
     d = 80
     outs = {}
     for groups, n in [(1, 8), (2, 4)]:
-        comp = C.make_compressor("zsign", z=1, sigma=1.0)
+        comp = C.Pipeline("zsign(z=1,sigma=1.0)")
         step, st, y = _consensus(comp, groups, n, d, seed=5)
         mask = jnp.ones((groups, n))
         if mask_on:
@@ -447,7 +445,7 @@ def test_group_scan_emits_payload_stack_not_dense_partials():
     uint8 payloads; no fp32 array of (G*N, d) or per-group dense decode
     appears before the single final aggregate."""
     d = 2 * TILE
-    comp = C.make_compressor("zsign", z=1, sigma=0.5, encode_chunk_tiles=1)
+    comp = C.Pipeline("zsign(z=1,sigma=0.5,encode_chunk_tiles=1)")
     G, n = 4, 4
     cfg = fedavg.FedConfig(n_clients=n, client_groups=G, client_lr=0.01,
                            server_lr=0.3)
@@ -483,8 +481,8 @@ def test_weights_are_mask_dispatches_popcount():
     payload = jnp.zeros((n, n_bytes), jnp.uint8)
     mask = jnp.ones((n,))
     for flag, want in [(True, True), (False, False)]:
-        comp = C.make_compressor("zsign", agg_backend="jnp",
-                                 weights_are_mask=flag)
+        comp = C.Pipeline(f"zsign(agg_backend=jnp,"
+                          f"weights_are_mask={flag})")
         jaxpr = jax.make_jaxpr(
             lambda p, m: comp.aggregate(p, m, 8 * n_bytes))(payload, mask)
         has_pc = any(e.primitive.name == "population_count"
@@ -498,7 +496,7 @@ def test_weights_are_mask_identical_results():
     d = 120
     outs = {}
     for flag in [False, True]:
-        comp = C.make_compressor("zsign", z=1, sigma=1.0)
+        comp = C.Pipeline("zsign(z=1,sigma=1.0)")
         loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
         cfg = fedavg.FedConfig(n_clients=6, client_lr=0.01, server_lr=0.3)
         step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg,
@@ -518,7 +516,7 @@ def test_e1_fast_client_path_matches_legacy():
     (the benchmark's dense-baseline engine) agree to f32 rounding — the
     only difference is the (gamma*g)/gamma round-trip the fast path skips."""
     d, n = 96, 6
-    comp = C.make_compressor("identity")
+    comp = C.Pipeline("identity")
     loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
     cfg = fedavg.FedConfig(n_clients=n, client_lr=0.01, server_lr=0.5)
     y = jax.random.normal(jax.random.PRNGKey(2), (1, n, 1, d))
@@ -540,4 +538,4 @@ def test_efsign_has_no_mask_flag():
     engine must not be able to flip a flag on it."""
     assert "weights_are_mask" not in {
         f.name for f in __import__("dataclasses").fields(
-            C.make_compressor("efsign"))}
+            C.Pipeline("ef|zsign"))}

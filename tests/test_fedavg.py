@@ -36,7 +36,7 @@ def run(step, state, batch, mask, T):
 
 
 def test_uncompressed_fedavg_converges_exactly():
-    step, st, b, m, opt = consensus_setup(compression.make_compressor("identity"))
+    step, st, b, m, opt = consensus_setup(compression.Pipeline("identity"))
     st, _ = run(step, st, b, m, 1500)
     assert float(jnp.linalg.norm(st.params["x"] - opt)) < 1e-3
 
@@ -59,8 +59,8 @@ def test_signsgd_counterexample_stalls():
             st, _ = step(st, batch, jnp.ones((1, 2)))
         return float(st.params["x"][0])
 
-    x_sign = simulate(compression.make_compressor("zsign", sigma=0.0))
-    x_zsign = simulate(compression.make_compressor("zsign", z=1, sigma=2.0))
+    x_sign = simulate(compression.Pipeline("zsign(sigma=0.0)"))
+    x_zsign = simulate(compression.Pipeline("zsign(z=1,sigma=2.0)"))
     assert abs(x_sign - A / 2) < 1e-6          # stuck exactly at x0
     assert abs(x_zsign) < abs(x_sign - 0.0)    # moved toward optimum 0
     assert abs(x_zsign) < 0.25
@@ -68,7 +68,7 @@ def test_signsgd_counterexample_stalls():
 
 @pytest.mark.parametrize("z", [1, 0])
 def test_zsign_consensus_converges(z):
-    comp = compression.make_compressor("zsign", z=z, sigma=2.0)
+    comp = compression.Pipeline(f"zsign(z={z},sigma=2.0)")
     step, st, b, m, opt = consensus_setup(comp, slr=0.05)
     st, _ = run(step, st, b, m, 2000)
     assert float(jnp.linalg.norm(st.params["x"] - opt)) < 1.5
@@ -78,7 +78,7 @@ def test_multiple_local_steps_reduce_rounds():
     """FedAvg benefit (paper Fig. 5): E=4 reaches a target loss in fewer
     rounds than E=1 at the same client lr."""
     def dist_after(E, T):
-        comp = compression.make_compressor("zsign", z=1, sigma=1.0)
+        comp = compression.Pipeline("zsign(z=1,sigma=1.0)")
         step, st, b, m, opt = consensus_setup(comp, E=E, glr=0.05, slr=0.05)
         st, _ = run(step, st, b, m, T)
         return float(jnp.linalg.norm(st.params["x"] - opt))
@@ -88,7 +88,7 @@ def test_multiple_local_steps_reduce_rounds():
 
 def test_sequential_groups_match_parallel():
     """groups x parallel decomposition is exact for linear decoders."""
-    comp = compression.make_compressor("identity")
+    comp = compression.Pipeline("identity")
     step1, st1, b1, m1, opt = consensus_setup(comp, n=8, groups=1, seed=3)
     # same 8 clients as 2 groups of 4
     cfg2 = fedavg.FedConfig(n_clients=4, client_groups=2, client_lr=0.01,
@@ -108,7 +108,7 @@ def test_sequential_groups_match_parallel():
 
 def test_partial_participation_mask():
     """Dead clients excluded; aggregation renormalized by live count."""
-    comp = compression.make_compressor("identity")
+    comp = compression.Pipeline("identity")
     step, st, b, m, opt = consensus_setup(comp, n=10)
     mask = m.at[0, 5:].set(0.0)   # only clients 0-4 live
     st, metrics = step(st, b, mask)
@@ -121,7 +121,7 @@ def test_partial_participation_mask():
 
 
 def test_dp_clipping_bounds_update():
-    comp = compression.make_compressor("identity")
+    comp = compression.Pipeline("identity")
     cfg = fedavg.FedConfig(n_clients=2, client_lr=0.01, server_lr=1.0,
                            dp_clip=0.5)
     loss_fn = lambda p, b: jnp.sum((p["x"] - b["y"]) ** 2) * 100.0
@@ -134,14 +134,13 @@ def test_dp_clipping_bounds_update():
     assert float(jnp.linalg.norm(st2.params["x"])) <= 0.01 * 0.5 + 1e-6
 
 
-@pytest.mark.parametrize("name,kw", [("efsign", {}),
-                                     ("topk", {"frac": 0.25})])
+@pytest.mark.parametrize("spec", ["ef|zsign", "ef|topk(frac=0.25)"])
 @pytest.mark.parametrize("groups", [1, 2])
-def test_dead_clients_keep_residual_exactly(name, kw, groups):
+def test_dead_clients_keep_residual_exactly(spec, groups):
     """Participation-masked aggregation with STATEFUL compressors: a dead
     client's flat residual buffer must be bit-identical across the round,
     on both the vmap (groups=1) and the lax.scan (groups=2) paths."""
-    comp = compression.make_compressor(name, **kw)
+    comp = compression.Pipeline(spec)
     step, st, b, m, _ = consensus_setup(comp, d=16, n=4, groups=groups,
                                         seed=11)
     # one full-participation round so residuals become nonzero
@@ -167,7 +166,7 @@ def test_dead_clients_keep_residual_exactly(name, kw, groups):
 def test_stateful_masked_groups_match_vmap_path():
     """8 clients as 1x8 (vmap) vs 2x4 (scan) with a stateful compressor and
     partial participation: identical params and identical residuals."""
-    comp = compression.make_compressor("efsign")
+    comp = compression.Pipeline("ef|zsign")
     cfg1 = fedavg.FedConfig(n_clients=8, client_groups=1, client_lr=0.01,
                             server_lr=0.5)
     cfg2 = fedavg.FedConfig(n_clients=4, client_groups=2, client_lr=0.01,
@@ -197,8 +196,8 @@ def test_stateful_masked_groups_match_vmap_path():
 
 
 def test_uplink_bits_zsign_vs_identity():
-    za = compression.make_compressor("zsign", z=1, sigma=1.0)
-    ia = compression.make_compressor("identity")
+    za = compression.Pipeline("zsign(z=1,sigma=1.0)")
+    ia = compression.Pipeline("identity")
     s1, st1, b, m, _ = consensus_setup(za)
     s2, st2, *_ = consensus_setup(ia)
     _, m1 = s1(st1, b, m)

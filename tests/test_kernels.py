@@ -84,7 +84,7 @@ def test_packed_compressor_matches_int8_path():
     mask = jnp.ones((1, n))
     outs = {}
     for name in ["zsign", "zsign_packed"]:
-        comp = compression.make_compressor(name, z=1, sigma=1.0)
+        comp = compression.Pipeline(f"{name}(z=1,sigma=1.0)")
         step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg))
         st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
                                       jax.random.PRNGKey(1))
@@ -118,8 +118,8 @@ def test_efsign_compressor_kernel_path_matches():
     from repro.core import compression
     import numpy as np
     flat = jnp.asarray(np.random.RandomState(0).randn(500), jnp.float32)
-    c1 = compression.make_compressor("efsign")
-    c2 = compression.EFSignCompressor(name="efsign", use_kernel=True)
+    c1 = compression.Pipeline("ef|zsign")
+    c2 = compression.Pipeline("ef|zsign(use_kernel=true)")
     s1, s2 = c1.init_state(500), c2.init_state(500)
     for i in range(5):
         e1, s1 = c1.encode(None, flat, s1)

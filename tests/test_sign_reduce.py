@@ -117,23 +117,31 @@ def test_efsign_scales_through_all_backends():
     flats = [jnp.asarray(rng.randn(d), jnp.float32) * (i + 0.5)
              for i in range(n)]
     encs = []
+    efsign = C.Pipeline("ef|zsign")
     for f in flats:
-        e, _ = C.make_compressor("efsign").encode(
-            None, f, C.make_compressor("efsign").init_state(d))
+        e, _ = efsign.encode(None, f, efsign.init_state(d))
         encs.append(e)
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *encs)
     mask = jnp.asarray([1, 1, 0, 1, 0, 1], jnp.float32)
     outs = {}
     for backend in ["jnp", "pallas", "dense"]:
-        comp = C.EFSignCompressor(name="efsign", agg_backend=backend)
+        comp = C.Pipeline(f"ef|zsign(agg_backend={backend})")
         outs[backend] = np.asarray(comp.aggregate(stacked, mask, d))
     np.testing.assert_array_equal(outs["jnp"], outs["pallas"])
     np.testing.assert_allclose(outs["jnp"], outs["dense"], rtol=1e-5,
                                atol=1e-5)
 
 
-@pytest.mark.parametrize("name", ["zsign", "stosign", "zsign_packed"])
-def test_mask_compressors_identical_across_backends(name):
+def _with_opts(spec: str, opts: str) -> str:
+    """Append codec kwargs to the last stage of a pipeline spec string."""
+    if spec.endswith(")"):
+        return f"{spec[:-1]},{opts})"
+    return f"{spec}({opts})"
+
+
+@pytest.mark.parametrize("spec", ["zsign(z=1,sigma=0.5)", "stosign",
+                                  "zsign_packed(z=1,sigma=0.5)"])
+def test_mask_compressors_identical_across_backends(spec):
     """zsign/stosign/zsign_packed aggregation is bit-identical through every
     backend (mask weights -> integer sums)."""
     d, n = 10_007, 9
@@ -141,8 +149,7 @@ def test_mask_compressors_identical_across_backends(name):
     spec_flat = jnp.asarray(rng.randn(d), jnp.float32)
     key = jax.random.PRNGKey(0)
     encs = []
-    base = C.make_compressor(name, **({"z": 1, "sigma": 0.5}
-                                      if name != "stosign" else {}))
+    base = C.Pipeline(spec)
     for i in range(n):
         e, _ = base.encode(jax.random.fold_in(key, i), spec_flat, None)
         encs.append(e)
@@ -150,9 +157,7 @@ def test_mask_compressors_identical_across_backends(name):
     mask = jnp.asarray(rng.randint(0, 2, n).astype(np.float32))
     outs = []
     for backend in C.AGG_BACKENDS:
-        comp = C.make_compressor(
-            name, agg_backend=backend,
-            **({"z": 1, "sigma": 0.5} if name != "stosign" else {}))
+        comp = C.Pipeline(_with_opts(spec, f"agg_backend={backend}"))
         outs.append(np.asarray(comp.aggregate(stacked, mask, d)))
     for o in outs[1:]:
         np.testing.assert_array_equal(outs[0], o)
@@ -168,7 +173,7 @@ def test_fractional_weights_correct_on_every_backend():
     want = np.asarray(wire.unpack_sum_dense(packed, w))
     for name in ["zsign", "stosign"]:
         for backend in ["jnp", "pallas", "dense"]:
-            comp = C.make_compressor(name, agg_backend=backend)
+            comp = C.Pipeline(f"{name}(agg_backend={backend})")
             got = np.asarray(comp.aggregate(packed, w, 64))
             np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
                                        err_msg=f"{name}/{backend}")
@@ -197,7 +202,8 @@ def test_no_dense_sign_matrix_in_aggregate_jaxpr():
     d = n_bytes * 8
     for name, backend in [("zsign", "jnp"), ("stosign", "jnp"),
                           ("efsign", "jnp"), ("zsign", "pallas")]:
-        comp = C.make_compressor(name, agg_backend=backend)
+        spec = "ef|zsign" if name == "efsign" else name
+        comp = C.Pipeline(_with_opts(spec, f"agg_backend={backend}"))
         if name == "efsign":
             payload = {"packed": jnp.zeros((n, n_bytes), jnp.uint8),
                        "scale": jnp.ones((n,))}
