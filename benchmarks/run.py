@@ -1,6 +1,7 @@
 """Benchmark harness: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast] [--json]
+                                            [--devices D]
 
 Prints ``name,metric,value`` CSV rows. ``--json`` additionally writes the
 perf-trajectory files every later perf PR is compared against:
@@ -23,14 +24,36 @@ perf-trajectory files every later perf PR is compared against:
                          sign-matrix aggregation) vs fully-fused
   cohort_round           streaming massive-cohort round: n=1k/10k clients
                          shard-scanned in O(shard*d/8) wire memory, with XLA
-                         peak-temp estimates (rows in BENCH_round.json)
+                         peak-temp estimates; with --devices D also the
+                         shard_map multi-device rows + scaling efficiency
+                         (rows in BENCH_round.json)
+
+``--devices D`` forces D host devices (threads) so the ``stream(devices=D)``
+rows run without real hardware. It must take effect before jax initializes
+its backend, hence the pre-import argv peek below.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+
+def _apply_devices_flag() -> int:
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int, default=0)
+    ns, _ = ap.parse_known_args()
+    if ns.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={ns.devices}"
+        ).strip()
+    return ns.devices
+
+
+_DEVICES = _apply_devices_flag()
 
 import jax
 import jax.numpy as jnp
@@ -383,7 +406,12 @@ def cohort_round(fast=False):
     estimates next to the analytic working sets — the O(n*d) f32 stack the
     one-shot vmap path would materialize vs the O(shard*d/8) wire slab
     streaming actually touches. n = 100k compiles (and reports the memory
-    estimate) without executing."""
+    estimate) without executing. When more than one device is visible
+    (``--devices D``), also times the shard_map-partitioned round
+    (``stream(devices=D)``, one O(d) psum) at the smaller size and emits
+    scaling-efficiency rows — on forced host devices (threads on one core)
+    these measure partition OVERHEAD, efficiency ~ 1/D by construction;
+    wall-clock scaling needs real chips."""
     from repro.fed import sampling
     dim, classes, width = 256, 10, (64 if fast else 1024)
     shard = 32 if fast else 64
@@ -393,7 +421,7 @@ def cohort_round(fast=False):
     d = sum(p.size for p in jax.tree_util.tree_leaves(params))
     nb = -(-d // 8)
     emit("cohort_round", "cohort_model_coords", d)
-    emit("cohort_round", "cohort_shard_clients", shard)
+    emit("cohort_round", "cohort_shard_auto_clients", fedavg.auto_shard_size(d))
     comp = compression.Pipeline("zsign(z=1,sigma=0.05)")
 
     def build(n, cohort):
@@ -420,18 +448,23 @@ def cohort_round(fast=False):
         return round(t / 1e6, 1)
 
     sizes = [256, 1024] if fast else [1024, 10_000]
+    t_stream = {}
     for n in sizes:
         compiled, state, batch, mask = build(n, f"stream(shard={shard})")
         emit("cohort_round", f"cohort_temp_stream_MB_n{n}", temp_mb(compiled))
         iters = 1 if n > 2048 else 2
         state, m = compiled(state, batch, mask)  # warmup; rebind donated state
         jax.block_until_ready((state, m))
+        if n == sizes[0]:
+            # recorded by the round itself (RoundMetrics), not hardcoded
+            emit("cohort_round", "cohort_shard_clients", int(m.shard_clients))
         t0 = time.perf_counter()
         for _ in range(iters):
             state, m = compiled(state, batch, mask)
         jax.block_until_ready((state, m))
+        t_stream[n] = (time.perf_counter() - t0) / iters * 1e6
         emit("cohort_round", f"cohort_round_stream_us_n{n}",
-             round((time.perf_counter() - t0) / iters * 1e6, 1))
+             round(t_stream[n], 1))
         emit("cohort_round", f"cohort_wire_shard_bytes_n{n}", shard * nb)
         emit("cohort_round", f"cohort_wire_full_stack_bytes_n{n}", n * nb)
         emit("cohort_round", f"cohort_dense_f32_bytes_n{n}", n * d * 4)
@@ -442,6 +475,50 @@ def cohort_round(fast=False):
     compiled_v, *_ = build(sizes[0], "vmap")
     emit("cohort_round", f"cohort_temp_vmap_MB_n{sizes[0]}",
          temp_mb(compiled_v))
+
+    # multi-device partition (--devices D): the shard sequence split over a
+    # 1-D `clients` mesh, one O(d) fp32 psum before decode. On forced host
+    # devices D "devices" are threads on the SAME core, so the ideal-speedup
+    # denominator D in the efficiency row makes efficiency ~ 1/D — the row
+    # tracks partition overhead honestly rather than simulating hardware.
+    dc = jax.device_count()
+    if dc >= 2:
+        nd = sizes[0]
+        td = {}
+        for dev in [1] + [dd for dd in (2, 4, 8) if dd <= dc]:
+            compiled, state, batch, mask = build(
+                nd, f"stream(shard={shard},devices={dev})")
+            state, m = compiled(state, batch, mask)  # warmup
+            jax.block_until_ready((state, m))
+            t0 = time.perf_counter()
+            state, m = compiled(state, batch, mask)
+            jax.block_until_ready((state, m))
+            td[dev] = (time.perf_counter() - t0) * 1e6
+            emit("cohort_round", f"cohort_round_stream_us_n{nd}_d{dev}",
+                 round(td[dev], 1))
+        for dev in sorted(td)[1:]:
+            emit("cohort_round", f"cohort_stream_scaling_eff_n{nd}_d{dev}",
+                 round(td[1] / (dev * td[dev]), 3))
+
+        # the acceptance-bar pair at the large size: D=1 is the main loop's
+        # stream row (identical plan — devices defaults to 1), D=4 measured
+        # here with one timed round.
+        nbig = sizes[-1]
+        if not fast and dc >= 4 and nbig in t_stream:
+            emit("cohort_round", f"cohort_round_stream_us_n{nbig}_d1",
+                 round(t_stream[nbig], 1))
+            compiled, state, batch, mask = build(
+                nbig, f"stream(shard={shard},devices=4)")
+            state, m = compiled(state, batch, mask)  # warmup
+            jax.block_until_ready((state, m))
+            t0 = time.perf_counter()
+            state, m = compiled(state, batch, mask)
+            jax.block_until_ready((state, m))
+            t4 = (time.perf_counter() - t0) * 1e6
+            emit("cohort_round", f"cohort_round_stream_us_n{nbig}_d4",
+                 round(t4, 1))
+            emit("cohort_round", f"cohort_stream_scaling_eff_n{nbig}_d4",
+                 round(t_stream[nbig] / (4 * t4), 3))
 
     if not fast:
         t0 = time.perf_counter()
@@ -553,6 +630,9 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_round.json / BENCH_kernels.json")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force D host devices (consumed before jax import) "
+                         "so cohort_round emits stream(devices=D) rows")
     args = ap.parse_args()
     print("name,metric,value")
     for b in BENCHES:

@@ -89,10 +89,12 @@ deployment's ``agg_backend`` / ``encode_backend`` / mask guarantee, and
 jnp-elsewhere. ``Pipeline.with_context(ctx)`` rebinds every sign stage —
 kernels are dispatched per-stage, not per-class.
 
-The legacy entry point ``make_compressor(name, **kw)`` remains as a thin
-deprecation shim that builds the equivalent pipeline (one DeprecationWarning
-per call); the old class names are factory functions doing the same. Fused
-encode/reduce internals (``fused_sign_encode_jnp``, ``sign_reduce``,
+The legacy monolithic class names survive as factory functions building the
+equivalent pipeline (``EFSignCompressor()`` == ``Pipeline("ef|zsign")``, bit
+for bit — pinned in tests/test_pipeline.py); the ``make_compressor(name)``
+string entry point was removed in PR 7 after its deprecation cycle — build
+a ``Pipeline("<spec>")`` instead (docs/API.md has the migration table).
+Fused encode/reduce internals (``fused_sign_encode_jnp``, ``sign_reduce``,
 wire-size accounting) are unchanged from the pre-pipeline module — see
 wire.py for the accounting notes and kernels/zsign for the TPU paths.
 """
@@ -100,7 +102,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Any, Tuple
 
 import jax
@@ -118,7 +119,7 @@ __all__ = [
     "ErrorFeedback", "DPTransform", "RoundContext",
     "Compressor", "ZSignCompressor", "StoSignCompressor", "EFSignCompressor",
     "QSGDCompressor", "TopKCompressor", "DPGaussianCompressor",
-    "PackedZSignCompressor", "make_compressor", "available", "global_norm",
+    "PackedZSignCompressor", "available", "global_norm",
     "pack_signs", "unpack_signs", "sign_reduce", "fused_sign_encode_jnp",
     "AGG_BACKENDS", "ENCODE_BACKENDS",
 ]
@@ -943,6 +944,18 @@ class Pipeline:
         return self.codec.decode_mean(
             flat_mean, sigma=(sigma if self._sigma_stage == "codec" else None))
 
+    def reduce_across_devices(self, acc: jax.Array,
+                              axis_name: str) -> jax.Array:
+        """Combine per-device partial ``aggregate`` accumulators over a
+        shard_map mesh axis. Because every codec's ``aggregate`` is a linear
+        fp32 SUM over its client axis — bitpacked sign wires, COO scatters
+        and dense einsums alike — the cross-device reduce is one O(d) psum
+        of the accumulator (wire.psum_accumulator), NEVER a gather of the
+        per-client payload stack. The multi-device streaming driver
+        (fedavg.stream_cohort) calls this once per round, after each
+        device's shard scan."""
+        return wire.psum_accumulator(acc, axis_name)
+
 
 # ---------------------------------------------------------------------------
 # legacy shim: the monolithic compressor names, as pipeline factories
@@ -1007,18 +1020,3 @@ _REGISTRY = {
 
 def available() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
-
-
-def make_compressor(name: str, **kw) -> Pipeline:
-    """DEPRECATED legacy entry point: builds the equivalent Pipeline.
-
-    Emits exactly one DeprecationWarning per call; prefer
-    ``Pipeline("<spec>")`` (e.g. ``Pipeline("zsign(z=1,sigma=0.01)")``,
-    ``Pipeline("ef|topk(frac=0.01)")``) — see docs/API.md for the migration
-    table.
-    """
-    warnings.warn(
-        f"make_compressor({name!r}) is deprecated; build a compression "
-        f"Pipeline from a spec string instead (see docs/API.md)",
-        DeprecationWarning, stacklevel=2)
-    return _REGISTRY[name](name=name, **kw)

@@ -45,16 +45,61 @@ ENCODE_BACKENDS = ("auto", "jnp", "pallas", "reference")
 #: cohort execution modes for the round driver (see CohortPolicy)
 COHORT_MODES = ("auto", "vmap", "stream")
 
+#: shard-feeding modes for the streaming plan: "device" keeps the whole
+#: cohort's batch/mask/state on device and scans it; "host" drives a
+#: double-buffered host loop (fedavg.iter_shards + async jax.device_put of
+#: shard t+1 while shard t computes) for cohorts whose mask/key/weight
+#: tensors exceed device memory. A feed="host" round step is a Python loop —
+#: it must NOT be wrapped in jax.jit.
+COHORT_FEEDS = ("device", "host")
+
 #: auto-gate threshold for the streaming cohort executor, in client-coordinate
-#: elements (total_clients * n_coords). Below it one vmap over the whole
-#: cohort is both faster (lax.scan costs ~30-80 ms/round of loop overhead on
-#: XLA CPU) and small enough to hold; at or above it the streaming driver's
-#: O(shard * d/8) wire working set wins. 2**24 elements ~ 64 MB of dense f32
-#: client state — roughly where the full-cohort vmap stops being free.
+#: elements (total_clients * n_coords). MEASURED on 1-core XLA CPU, jax
+#: 0.4.37 (PR 7, jitted round step, median of 5-7):
+#:
+#:   * shard lax.scan loop overhead is ~0.1-0.2 ms per scanned shard, NOT
+#:     the milliseconds the pre-PR-7 carry-over guessed: a 64-step
+#:     stream(shard=4) round over 256 clients at d=1024 runs in 10.0 ms
+#:     total, vs 14.4 ms for 16 steps of shard=16 (compute dominates).
+#:   * unpacked sign wires: the two plans are within ~5% below the gate
+#:     (n=256, d=1024: vmap 14.6 ms vs stream(shard=8) 15.4 ms; ef|zsign
+#:     0.64 vs 0.65 ms) — vmap is kept there for its scan-free jaxpr, not
+#:     for a large win.
+#:   * zsign_packed: streaming wins at EVERY size because the vmapped fused
+#:     packed encode scales superlinearly in the vmapped width (d=1024:
+#:     1.15 ms at n=16 -> 357 ms at n=256; ROADMAP carry-over), e.g. at the
+#:     gate (total*d = 2**24: n=512, d=32768) vmap 23.8 s vs stream(16)
+#:     0.95 s.
+#:
+#: At or above 2**24 elements (~64 MB of dense f32 client gradients) the
+#: streaming plan's O(shard * d) working set is required regardless of
+#: speed, so the gate stays at the memory bound rather than chasing the
+#: wire-format-dependent crossover below it.
 STREAM_AUTO_MIN_ELEMS = 1 << 24
 
-#: default clients per shard when a streaming policy does not pin one
+#: default clients per shard when a streaming policy does not pin one and
+#: shard auto-tuning has nothing to go on (n_coords == 0)
 STREAM_DEFAULT_SHARD = 64
+
+#: sentinel for ``stream(shard=auto)`` — fedavg.auto_shard_size picks K from
+#: the model coordinate count and STREAM_SHARD_BUDGET_BYTES
+STREAM_SHARD_AUTO = -1
+
+#: sentinel for ``stream(devices=auto)`` — resolve_cohort expands it to
+#: jax.device_count() at plan-resolution time
+COHORT_DEVICES_AUTO = 0
+
+#: per-device memory budget for one in-flight shard of client state. The
+#: streaming engine's per-shard working set is ~one dense f32 gradient per
+#: client plus the packed wire row (4*d + d/8 bytes per client), so the
+#: auto-tuned shard size is budget // (4.125 * d), clamped to
+#: [STREAM_SHARD_MIN, STREAM_SHARD_MAX] and rounded down to a multiple of
+#: wire.SIGN_REDUCE_CLIENT_BLK to keep the fp32 fold bit-reproducible.
+STREAM_SHARD_BUDGET_BYTES = 256 << 20
+
+#: clamp bounds for the auto-tuned stream shard size (clients per shard)
+STREAM_SHARD_MIN = 8
+STREAM_SHARD_MAX = 512
 
 _VALID = {"agg": AGG_BACKENDS, "encode": ENCODE_BACKENDS}
 
@@ -92,32 +137,64 @@ class CohortPolicy:
       mode="auto"    stream iff total_clients * n_coords >=
                      STREAM_AUTO_MIN_ELEMS (the small-run regression gate).
 
-    ``shard == 0`` leaves the shard size to the engine
-    (STREAM_DEFAULT_SHARD); a bare ``stream`` spec therefore still
-    auto-gates back to vmap below the threshold, while an explicit
-    ``stream(shard=K)`` FORCES streaming at exactly K clients per shard
-    (the bit-identity tests rely on this). ``unroll`` is handed to the
-    shard ``lax.scan`` to amortize loop overhead.
+    ``shard == 0`` leaves the shard size to the engine (auto-tuned from the
+    model coordinate count, see fedavg.auto_shard_size); a bare ``stream``
+    spec therefore still auto-gates back to vmap below the threshold, while
+    an explicit ``stream(shard=K)`` FORCES streaming at exactly K clients
+    per shard (the bit-identity tests rely on this). ``shard=auto``
+    (STREAM_SHARD_AUTO) also forces streaming, with the auto-tuned K.
+    ``unroll`` is handed to the shard ``lax.scan`` to amortize loop
+    overhead.
+
+    ``devices`` adds the cross-device axis: the flat shard sequence is
+    partitioned into contiguous per-device slices over a 1-D ``clients``
+    mesh with ``shard_map``; each device runs the shard scan on its slice
+    and the fp32 wire accumulators meet in ONE ``lax.psum`` (O(d) per device,
+    independent of cohort size — the reduce stays in the compressed domain).
+    ``devices=1`` (default) is the single-device scan; ``devices=auto``
+    (COHORT_DEVICES_AUTO) expands to every local device; any other value
+    pins the mesh size. Counter-based client keys make the bits invariant
+    to device placement. ``feed`` selects device-resident shards (default)
+    or the host-side double-buffered feeder (see COHORT_FEEDS);
+    ``feed=host`` is single-device and its round step must not be jitted.
     """
     mode: str = "auto"
     shard: int = 0
     unroll: int = 1
+    devices: int = 1
+    feed: str = "device"
 
     def __post_init__(self):
         if self.mode not in COHORT_MODES:
             raise ValueError(f"unknown cohort mode {self.mode!r}; expected "
                              f"one of {COHORT_MODES}")
-        if self.shard < 0 or self.unroll < 1:
-            raise ValueError(f"cohort policy needs shard >= 0 and "
-                             f"unroll >= 1, got shard={self.shard} "
+        if self.shard < STREAM_SHARD_AUTO or self.unroll < 1:
+            raise ValueError(f"cohort policy needs shard >= 0 (or 'auto') "
+                             f"and unroll >= 1, got shard={self.shard} "
                              f"unroll={self.unroll}")
-        if self.shard and self.mode != "stream":
-            raise ValueError(f"shard={self.shard} only applies to "
-                             f"cohort mode 'stream', not {self.mode!r}")
+        if self.devices < COHORT_DEVICES_AUTO:
+            raise ValueError(f"cohort policy needs devices >= 1 (or 'auto'),"
+                             f" got devices={self.devices}")
+        if self.feed not in COHORT_FEEDS:
+            raise ValueError(f"unknown cohort feed {self.feed!r}; expected "
+                             f"one of {COHORT_FEEDS}")
+        if self.mode != "stream":
+            for name, val, default in (("shard", self.shard, 0),
+                                       ("devices", self.devices, 1),
+                                       ("feed", self.feed, "device")):
+                if val != default:
+                    raise ValueError(f"{name}={val!r} only applies to cohort "
+                                     f"mode 'stream', not {self.mode!r}")
+        if self.feed == "host" and self.devices != 1:
+            raise ValueError("feed='host' is a single-device driver; it "
+                             "cannot be combined with devices="
+                             f"{self.devices!r}")
 
     @classmethod
     def parse(cls, spec: "str | CohortPolicy") -> "CohortPolicy":
-        """``auto | vmap | stream | stream(shard=K[,unroll=U])`` -> policy."""
+        """``auto | vmap | stream |
+        stream(shard=K|auto[,unroll=U][,devices=D|auto][,feed=device|host])``
+        -> policy."""
         if isinstance(spec, cls):
             return spec
         s = spec.strip()
@@ -132,14 +209,30 @@ class CohortPolicy:
                 raise ValueError(f"cohort argument {part!r} in {spec!r} "
                                  f"must be key=value")
             k, v = part.split("=", 1)
-            if k.strip() not in ("shard", "unroll"):
-                raise ValueError(f"unknown cohort argument {k.strip()!r} in "
-                                 f"{spec!r}; expected shard= or unroll=")
-            try:
-                kw[k.strip()] = int(v.strip())
-            except ValueError:
-                raise ValueError(f"cohort argument {part!r} in {spec!r} "
-                                 f"must be an integer") from None
+            k, v = k.strip(), v.strip()
+            if k not in ("shard", "unroll", "devices", "feed"):
+                raise ValueError(f"unknown cohort argument {k!r} in "
+                                 f"{spec!r}; expected shard=, unroll=, "
+                                 f"devices= or feed=")
+            if k == "feed":
+                kw[k] = v
+            elif k == "shard" and v == "auto":
+                kw[k] = STREAM_SHARD_AUTO
+            elif k == "devices" and v == "auto":
+                kw[k] = COHORT_DEVICES_AUTO
+            else:
+                try:
+                    iv = int(v)
+                except ValueError:
+                    raise ValueError(
+                        f"cohort argument {part!r} in {spec!r} must be an "
+                        f"integer" + (" or 'auto'"
+                                      if k in ("shard", "devices") else "")
+                    ) from None
+                if iv < 0:
+                    raise ValueError(f"cohort argument {part!r} in {spec!r} "
+                                     f"must be non-negative")
+                kw[k] = iv
         return cls(mode=mode.strip(), **kw)
 
 
@@ -161,7 +254,8 @@ class RoundContext:
     dynamic_sigma: bool = False
     donate_state: bool = True
     #: cohort execution policy for the round driver — a CohortPolicy spec
-    #: string: "auto" | "vmap" | "stream" | "stream(shard=K[,unroll=U])"
+    #: string: "auto" | "vmap" | "stream" | "stream(shard=K|auto[,unroll=U]
+    #: [,devices=D|auto][,feed=device|host])"
     cohort: str = "auto"
 
     def __post_init__(self):

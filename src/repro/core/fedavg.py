@@ -51,11 +51,37 @@ picks the walk:
               (integer sign sums — any shard size) and for fp32-weighted
               (EF) aggregation at shard sizes that are multiples of
               wire.SIGN_REDUCE_CLIENT_BLK; see wire.unpack_sum.
+
+              ``stream(devices=D)`` adds the cross-DEVICE axis: the shard
+              sequence is partitioned into contiguous per-device slices
+              over a 1-D ``clients`` mesh (``shard_map``); every device
+              runs the same shard scan on its slice, folding into its own
+              local wire accumulator, and the accumulators meet in ONE
+              ``lax.psum`` (wire.psum_accumulator) before decode — the
+              cross-device reduce stays in the compressed-sum domain, so
+              per-device interconnect traffic is O(d) fp32 regardless of
+              cohort size (never a payload stack, never per-client data).
+              Model params are replicated; batch/mask/EF-state shards are
+              device-local; the per-client EF residuals come back sharded
+              along the cohort axis. Counter-based client keys make the
+              bits invariant to device placement, so D in {1..} produces
+              bit-identical rounds for 0/1 masks at any shard size.
+
+              ``stream(feed=host)`` swaps the device-resident shard tensor
+              for a host-side double-buffered feeder (``iter_shards`` +
+              async ``jax.device_put`` of shard t+1 while shard t
+              computes): only ONE shard of batch/mask/state lives on
+              device at a time, for cohorts whose round tensors exceed
+              device memory. The returned round step is a Python loop —
+              do not wrap it in jax.jit.
   ``auto``    stream iff ``total_clients * n_coords`` reaches
               context.STREAM_AUTO_MIN_ELEMS — small rounds keep the vmap
-              path (lax.scan costs ~30-80 ms/round of loop overhead on XLA
-              CPU), huge cohorts get the O(wire) memory contract. A bare
-              ``stream`` gates the same way; ``stream(shard=K)`` forces.
+              path (measured on XLA CPU the shard lax.scan costs only
+              ~0.1-0.2 ms/shard of loop overhead and the plans are within
+              ~5% for unpacked wires; see the constant's docstring for the
+              numbers), huge cohorts get the O(wire) memory contract. A
+              bare ``stream`` gates the same way; ``stream(shard=K)`` /
+              ``devices=`` / ``feed=host`` force.
 
 Per-client compressor state (EF / top-k residuals) is a flat fp32 buffer of
 shape (client_groups, n_clients, n_coords); dead clients keep their previous
@@ -71,11 +97,16 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import noise as znoise
 from repro.core import wire
-from repro.core.context import (STREAM_AUTO_MIN_ELEMS, STREAM_DEFAULT_SHARD,
-                                CohortPolicy, RoundContext)
+from repro.core.context import (COHORT_DEVICES_AUTO, STREAM_AUTO_MIN_ELEMS,
+                                STREAM_DEFAULT_SHARD, STREAM_SHARD_AUTO,
+                                STREAM_SHARD_BUDGET_BYTES, STREAM_SHARD_MAX,
+                                STREAM_SHARD_MIN, CohortPolicy, RoundContext)
 from repro.core.dp import clip_flat
 from repro.optim.optimizers import Optimizer, make_optimizer
 
@@ -106,6 +137,9 @@ class RoundMetrics(NamedTuple):
     grad_est_norm: jax.Array
     participation: jax.Array
     uplink_bits: jax.Array
+    #: clients per stream shard this round (0 on the vmap plan) — recorded so
+    #: benchmark rows stay self-describing when the shard size is auto-tuned
+    shard_clients: jax.Array = np.int32(0)
 
 
 class RoundMath(NamedTuple):
@@ -146,27 +180,124 @@ def _server_optimizer(cfg: FedConfig) -> Optimizer:
     return make_optimizer(cfg.server_opt, lr=cfg.server_lr, **dict(cfg.server_opt_kw))
 
 
-def resolve_cohort(policy, total_clients: int, n_coords: int):
+class CohortPlan(NamedTuple):
+    """Resolved execution plan of the round driver (see resolve_cohort)."""
+    mode: str          # "vmap" | "stream"
+    shard: int         # clients per stream shard (0 on the vmap plan)
+    unroll: int        # lax.scan unroll of the shard loop
+    devices: int       # size of the 'clients' shard_map mesh axis (1 = none)
+    feed: str          # "device" | "host" shard feeding
+
+
+#: the vmap plan — one vmap over the whole cohort, no device axis
+VMAP_PLAN = CohortPlan("vmap", 0, 1, 1, "device")
+
+
+def auto_shard_size(n_coords: int) -> int:
+    """Pick the streaming shard size K from the model coordinate count and
+    the per-device memory budget (context.STREAM_SHARD_BUDGET_BYTES).
+
+    The streaming engine's per-shard working set is ~one dense f32 gradient
+    per in-flight client plus its packed wire row (4*d + d/8 bytes each), so
+    K = budget // (4*d + d/8), clamped to [STREAM_SHARD_MIN,
+    STREAM_SHARD_MAX] and rounded down to a multiple of
+    wire.SIGN_REDUCE_CLIENT_BLK — keeping every shard block-aligned so the
+    fp32-weighted fold stays bit-reproducible across shard boundaries.
+    """
+    if n_coords <= 0:
+        return STREAM_DEFAULT_SHARD
+    per_client = 4 * n_coords + n_coords // 8
+    k = STREAM_SHARD_BUDGET_BYTES // per_client
+    k = (k // wire.SIGN_REDUCE_CLIENT_BLK) * wire.SIGN_REDUCE_CLIENT_BLK
+    return int(min(max(k, STREAM_SHARD_MIN), STREAM_SHARD_MAX))
+
+
+def resolve_cohort(policy, total_clients: int, n_coords: int,
+                   spmd_axes=None) -> CohortPlan:
     """CohortPolicy (or its spec string) + static round shapes -> the
-    driver's execution plan: ("vmap", 0, 1) or ("stream", shard, unroll).
+    driver's CohortPlan: ("vmap", 0, 1, 1, "device") or
+    ("stream", shard, unroll, devices, feed).
 
     THE one place the streaming auto-gate lives: ``auto`` and a bare
-    ``stream`` fall back to the vmap path below STREAM_AUTO_MIN_ELEMS
-    client-coordinate elements (where the shard scan's ~30-80 ms/round XLA
-    CPU loop overhead would dominate), while an explicit ``stream(shard=K)``
-    always streams — the bit-identity tests and memory pins force the path
-    this way at small sizes. The shard size is clamped to the cohort.
+    ``stream`` fall back to the vmap plan below STREAM_AUTO_MIN_ELEMS
+    client-coordinate elements (below the measured scan-overhead crossover;
+    see context.py), while an explicit ``stream(shard=K)``, ``shard=auto``,
+    ``devices=`` or ``feed=host`` always streams — the bit-identity tests
+    and memory pins force the path this way at small sizes. ``shard=0`` and
+    ``shard=auto`` both take the memory-budget K of ``auto_shard_size``;
+    the shard is clamped to the cohort. ``devices=auto`` expands to every
+    local device; the resolved count is clamped to the shard count (no
+    all-padding devices) and validated against jax.device_count().
+
+    ``spmd_axes`` is the launcher's client-axis mesh sharding (dryrun /
+    multi-chip plans): when set, the client axis is already parallelized by
+    the surrounding mesh, so ``auto`` resolves to the vmap plan (the shard
+    scan would SERIALIZE the sharded axis and force XLA into involuntary
+    rematerializations) and a forced stream policy is a config conflict —
+    the streaming cohort's own device axis is ``stream(devices=D)``.
     """
     pol = CohortPolicy.parse(policy)
     if pol.mode == "vmap":
-        return ("vmap", 0, 1)
-    forced = pol.mode == "stream" and pol.shard > 0
+        return VMAP_PLAN
+    forced = pol.mode == "stream" and (pol.shard != 0 or pol.devices != 1
+                                       or pol.feed == "host")
+    if spmd_axes is not None:
+        if forced:
+            raise ValueError(
+                f"cohort policy {policy!r} forces the streaming plan, "
+                f"but the launcher plan shards the client axis over mesh "
+                f"axes {spmd_axes!r} — the shard scan would serialize the "
+                "axis the mesh parallelizes. Drop the stream(...) policy "
+                "(the mesh already provides client parallelism) or use a "
+                "launcher plan without client_axes.")
+        return VMAP_PLAN
     if not forced and total_clients * n_coords < STREAM_AUTO_MIN_ELEMS:
-        return ("vmap", 0, 1)
-    shard = min(pol.shard or STREAM_DEFAULT_SHARD, total_clients)
+        return VMAP_PLAN
+    want = (auto_shard_size(n_coords)
+            if pol.shard in (0, STREAM_SHARD_AUTO) else pol.shard)
+    shard = min(want, total_clients)
     if shard >= total_clients and not forced:
-        return ("vmap", 0, 1)   # one shard IS the vmap path, minus the scan
-    return ("stream", shard, pol.unroll)
+        return VMAP_PLAN   # one shard IS the vmap path, minus the scan
+    devices = pol.devices
+    if devices == COHORT_DEVICES_AUTO:
+        devices = jax.device_count()
+    if devices > jax.device_count():
+        raise ValueError(
+            f"cohort plan wants devices={devices} but only "
+            f"{jax.device_count()} are visible (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=D to "
+            f"simulate a multi-device host on CPU)")
+    devices = max(1, min(devices, -(-total_clients // shard)))
+    return CohortPlan("stream", shard, pol.unroll, devices, pol.feed)
+
+
+def iter_shards(batch, mask, cstate, *, shard: int, total: int):
+    """Host-side shard feeder for ``stream(feed=host)``: yields one
+    ``(s_idx, batch_s, cstate_s, mask_s)`` tuple of numpy slices per shard,
+    in global shard order.
+
+    The slices mirror the device-resident reshard of ``stream_cohort``
+    exactly — the final shard wrap-pads with the cohort's first rows under a
+    zero participation mask, and ``s_idx`` is the GLOBAL shard index (a
+    ``np.uint32`` scalar, so the jitted per-shard kernel traces once) — which
+    is what makes the host-fed round bit-identical to the device-fed one.
+    The host driver ``jax.device_put``s tuple t+1 while tuple t computes
+    (double buffering), so only one shard of batch/mask/state occupies
+    device memory at a time.
+    """
+    n_shards = -(-total // shard)
+    flat = lambda x: np.asarray(x).reshape((total,) + np.shape(x)[2:])
+    b = jax.tree.map(flat, batch)
+    m = np.asarray(mask, dtype=np.float32).reshape(total)
+    c = None if cstate is None else jax.tree.map(flat, cstate)
+    for s in range(n_shards):
+        sl = np.arange(s * shard, (s + 1) * shard)
+        rows = sl % total
+        take = lambda x: x[rows]
+        yield (np.uint32(s),
+               jax.tree.map(take, b),
+               None if c is None else jax.tree.map(take, c),
+               (m[rows] * (sl < total)).astype(np.float32))
 
 
 def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
@@ -348,30 +479,44 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
     total = cfg.client_groups * cfg.n_clients
 
     def stream_cohort(spec, params, batch, mask, cstate, sub, sigma,
-                      shard: int, unroll: int):
+                      shard: int, unroll: int, devices: int = 1):
         """The streaming massive-cohort executor: reshard the flat cohort
         into ``shard``-client slices, lax.scan them through the round math,
         and FOLD each shard's payload stack into one running wire
         accumulator — the full-cohort stack never exists; the scan carry is
-        the aggregate's own output buffer (O(d/8) bytes for sign wires)."""
+        the aggregate's own output buffer (O(d/8) bytes for sign wires).
+
+        With ``devices > 1`` the shard sequence is split into contiguous
+        per-device slices over a 1-D ``clients`` mesh (shard_map): each
+        device runs the identical scan on its slice (shard indices stay
+        GLOBAL, so the counter-based key derivation is placement-invariant)
+        and the local fp32 accumulators meet in one O(d) psum — the only
+        cross-device collective of the round."""
         n_shards = -(-total // shard)
-        pad = n_shards * shard - total
+        if devices > 1:
+            # pad the shard count so each device scans an equal slice;
+            # all-pad shards carry a zero mask and contribute exactly 0
+            n_shards = -(-n_shards // devices) * devices
+        slots = n_shards * shard
+        pad = slots - total
 
         def reshard(x):
-            # (G, N, ...) -> (n_shards, shard, ...); the last shard is
-            # padded by wrapping to the cohort's first rows (real, finite
-            # data) under a zero mask, so padding contributes exactly 0
+            # (G, N, ...) -> (n_shards, shard, ...); padded slots wrap to
+            # the cohort's first rows (real, finite data) under a zero
+            # mask, so padding contributes exactly 0. Cyclic gather rather
+            # than jnp.pad(mode="wrap"): device padding can exceed one
+            # period of a small cohort.
             y = x.reshape((total,) + x.shape[2:])
             if pad:
-                y = jnp.pad(y, ((0, pad),) + ((0, 0),) * (y.ndim - 1),
-                            mode="wrap")
+                y = jnp.take(y, jnp.arange(slots) % total, axis=0)
             return y.reshape((n_shards, shard) + y.shape[1:])
 
         s_batch = jax.tree.map(reshard, batch)
-        s_mask = reshard(mask) * (jnp.arange(n_shards * shard)
+        s_mask = reshard(mask) * (jnp.arange(slots)
                                   .reshape(n_shards, shard) < total)
         s_cstate = (None if cstate is None
                     else jax.tree.map(reshard, cstate))
+        s_idx = jnp.arange(n_shards, dtype=jnp.uint32)
         shard0 = lambda t: (None if t is None
                             else jax.tree.map(lambda x: x[0], t))
 
@@ -382,32 +527,70 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 m, spec.n_coords),
             shard0(s_batch), znoise.client_keys(sub, 0, shard),
             shard0(s_cstate), s_mask[0])
-        acc0 = jnp.zeros(agg_shape.shape, agg_shape.dtype)
 
-        def body(carry, xs):
-            acc, loss_acc = carry
-            s_idx, batch_s, cstate_s, mask_s = xs
-            # per-shard keys from the shard's global client offset: the
-            # derivation is counter-based, so the key of client j never
-            # depends on the shard partition (bit-identity vs vmap)
-            keys_s = znoise.client_keys(sub, s_idx * jnp.uint32(shard),
-                                        shard)
-            enc, new_cstate_s, loss_s = math.group_encode(
-                spec, params, batch_s, keys_s, cstate_s, mask_s, sigma)
-            acc = constrain_wire(compressor.aggregate(
-                enc, mask_s, spec.n_coords, acc=acc))
-            return (acc, loss_acc + loss_s), new_cstate_s
+        def scan_shards(params_d, sub_d, sigma_d, idx_d, batch_d, cstate_d,
+                        mask_d, constrain_acc):
+            acc0 = jnp.zeros(agg_shape.shape, agg_shape.dtype)
 
-        (enc_sum, loss_sum), cstate_sh = jax.lax.scan(
-            body, (acc0, jnp.zeros(())),
-            (jnp.arange(n_shards, dtype=jnp.uint32), s_batch, s_cstate,
-             s_mask),
-            unroll=unroll)
+            def body(carry, xs):
+                acc, loss_acc = carry
+                g_idx, batch_s, cstate_s, mask_s = xs
+                # per-shard keys from the shard's GLOBAL client offset: the
+                # derivation is counter-based, so the key of client j never
+                # depends on the shard partition or device placement
+                # (bit-identity vs vmap and vs any device count)
+                keys_s = znoise.client_keys(sub_d,
+                                            g_idx * jnp.uint32(shard),
+                                            shard)
+                enc, new_cstate_s, loss_s = math.group_encode(
+                    spec, params_d, batch_s, keys_s, cstate_s, mask_s,
+                    sigma_d)
+                acc = constrain_acc(compressor.aggregate(
+                    enc, mask_s, spec.n_coords, acc=acc))
+                return (acc, loss_acc + loss_s), new_cstate_s
+
+            return jax.lax.scan(body, (acc0, jnp.zeros(())),
+                                (idx_d, batch_d, cstate_d, mask_d),
+                                unroll=unroll)
+
+        if devices <= 1:
+            (enc_sum, loss_sum), cstate_sh = scan_shards(
+                params, sub, sigma, s_idx, s_batch, s_cstate, s_mask,
+                constrain_wire)
+        else:
+            mesh = Mesh(np.asarray(jax.devices()[:devices]), ("clients",))
+            rep, shd = P(), P("clients")
+
+            def per_device(params_d, sub_d, sigma_d, idx_d, batch_d,
+                           cstate_d, mask_d):
+                # launcher wire constraints name OUTER mesh axes — they
+                # cannot apply inside the shard body; the post-psum result
+                # is constrained by the caller instead
+                (acc, loss), cstate_out = scan_shards(
+                    params_d, sub_d, sigma_d, idx_d, batch_d, cstate_d,
+                    mask_d, lambda a: a)
+                # THE cross-device reduce: one O(d) fp32 psum of the local
+                # wire accumulators — compressed-domain all the way; the
+                # per-client payload stack never crosses the interconnect
+                if hasattr(compressor, "reduce_across_devices"):
+                    acc = compressor.reduce_across_devices(acc, "clients")
+                else:
+                    acc = wire.psum_accumulator(acc, "clients")
+                loss = jax.lax.psum(loss, "clients")
+                return acc, loss, cstate_out
+
+            enc_sum, loss_sum, cstate_sh = shard_map(
+                per_device, mesh=mesh,
+                in_specs=(rep, rep, rep, shd, shd, shd, shd),
+                out_specs=(rep, rep, shd),
+                check_rep=False,
+            )(params, sub, sigma, s_idx, s_batch, s_cstate, s_mask)
+            enc_sum = constrain_wire(enc_sum)
         if cstate_sh is None:
             new_cstate = None
         else:
             new_cstate = jax.tree.map(
-                lambda x: x.reshape((n_shards * shard,) + x.shape[2:])
+                lambda x: x.reshape((slots,) + x.shape[2:])
                 [:total].reshape((cfg.client_groups, cfg.n_clients)
                                  + x.shape[2:]),
                 cstate_sh)
@@ -417,13 +600,13 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         spec = wire.tree_spec(state.params)
         rng, sub = jax.random.split(state.rng)
         sigma = state.sigma
-        plan, shard, unroll = resolve_cohort(cohort_policy, total,
-                                             spec.n_coords)
+        plan = resolve_cohort(cohort_policy, total, spec.n_coords,
+                              spmd_axes)
 
-        if plan == "stream":
+        if plan.mode == "stream":
             enc_sum, new_cstate, loss_sum = stream_cohort(
                 spec, state.params, batch, mask, state.comp_state, sub,
-                sigma, shard, unroll)
+                sigma, plan.shard, plan.unroll, plan.devices)
         else:
             # per-client keys by global index — identical to the streaming
             # derivation, so the two plans are interchangeable mid-training
@@ -441,6 +624,14 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                               else jax.tree.map(lambda x: x[None],
                                                 new_cstate_g))
             elif compressor.stacks_group_payloads():
+                # NOTE a "flatten small (G, N) rounds into one G*N vmap"
+                # gate was tried here (PR 7) and measured AGAINST on XLA
+                # CPU: the group lax.scan costs only ~0.1-0.2 ms/step of
+                # loop overhead, while widening the vmap regresses the
+                # fused packed encode 8-10x (its vmapped tile loop scales
+                # superlinearly in the vmapped width — G=8,N=32,d=4096:
+                # flattened 420 ms vs group-scan 41 ms; see ROADMAP
+                # carry-overs). The scan stays.
                 # compressed-domain group scan: the scan OUTPUT is the
                 # stacked wire payloads (1 bit/coord for sign families),
                 # and the server runs ONE aggregate over the (G*N, ...)
@@ -486,6 +677,11 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                     body, (zero_enc, jnp.zeros(())),
                     (batch, all_keys, state.comp_state, mask))
 
+        return _finish(state, spec, rng, sigma, enc_sum, new_cstate,
+                       loss_sum, mask, plan.shard)
+
+    def _finish(state, spec, rng, sigma, enc_sum, new_cstate, loss_sum,
+                mask, shard_used):
         n_live = jnp.maximum(jnp.sum(mask), 1.0)
         g_flat = constrain_wire(compressor.decode_mean(
             enc_sum / n_live, sigma=sigma if dynamic_sigma else None))
@@ -500,13 +696,84 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
             grad_est_norm=jnp.linalg.norm(g_flat[:spec.n_coords]),
             participation=n_live,
             uplink_bits=n_live * float(spec.n_coords
-                                       * compressor.wire_bits_per_coord))
+                                       * compressor.wire_bits_per_coord),
+            shard_clients=np.int32(shard_used))
         new_state = ServerState(params=new_params, opt_state=new_opt,
                                 comp_state=new_cstate, rng=rng,
                                 round=state.round + 1, sigma=sigma)
         return new_state, metrics
 
-    return round_step
+    # ---- stream(feed=host): the double-buffered host shard driver -------
+    shard_fns = {}
+
+    def _host_shard_fn(spec, shard):
+        # one jitted per-shard kernel, cached across rounds; s_idx arrives
+        # as a traced uint32 scalar so every shard reuses the same trace
+        key = (shard, spec.n_coords)
+        if key not in shard_fns:
+            def fn(params, sub, sigma, s_idx, batch_s, cstate_s, mask_s,
+                   acc, loss_acc):
+                keys_s = znoise.client_keys(sub, s_idx * jnp.uint32(shard),
+                                            shard)
+                enc, new_cstate_s, loss_s = math.group_encode(
+                    spec, params, batch_s, keys_s, cstate_s, mask_s, sigma)
+                acc = constrain_wire(compressor.aggregate(
+                    enc, mask_s, spec.n_coords, acc=acc))
+                return acc, loss_acc + loss_s, new_cstate_s
+            shard_fns[key] = jax.jit(fn)
+        return shard_fns[key]
+
+    def host_round_step(state: ServerState, batch, mask):
+        """Python-loop round driver for ``stream(feed=host)`` — do NOT wrap
+        in jax.jit (it slices host numpy per shard). Bit-identical to the
+        device-fed stream: same shard slices, same global-index keys, same
+        left-fold accumulator order."""
+        spec = wire.tree_spec(state.params)
+        plan = resolve_cohort(cohort_policy, total, spec.n_coords,
+                              spmd_axes)
+        shard = plan.shard
+        n_shards = -(-total // shard)
+        rng, sub = jax.random.split(state.rng)
+        sigma = state.sigma
+        stateful = state.comp_state is not None
+
+        gen = iter_shards(batch, mask, state.comp_state, shard=shard,
+                          total=total)
+        cur = jax.device_put(next(gen))
+        agg_shape = jax.eval_shape(
+            lambda b, k, c, m: compressor.aggregate(
+                math.group_encode(spec, state.params, b, k, c, m,
+                                  sigma)[0], m, spec.n_coords),
+            cur[1], znoise.client_keys(sub, 0, shard), cur[2], cur[3])
+        acc = jnp.zeros(agg_shape.shape, agg_shape.dtype)
+        loss_sum = jnp.zeros(())
+        fn = _host_shard_fn(spec, shard)
+        rows_host, prev_rows = [], None
+        for s in range(n_shards):
+            # double buffer: upload shard s+1 (async dispatch) before
+            # launching shard s's compute ...
+            nxt = jax.device_put(next(gen)) if s + 1 < n_shards else None
+            acc, loss_sum, rows = fn(state.params, sub, sigma, *cur, acc,
+                                     loss_sum)
+            # ... and drain shard s-1's finished state rows to host while
+            # shard s computes, so only one shard's tensors stay on device
+            if stateful and prev_rows is not None:
+                rows_host.append(jax.tree.map(np.asarray, prev_rows))
+            prev_rows = rows
+            cur = nxt
+        new_cstate = None
+        if stateful:
+            rows_host.append(jax.tree.map(np.asarray, prev_rows))
+            stacked = jax.tree.map(lambda *rs: np.concatenate(rs, axis=0),
+                                   *rows_host)
+            new_cstate = jax.tree.map(
+                lambda x: x[:total].reshape(
+                    (cfg.client_groups, cfg.n_clients) + x.shape[1:]),
+                stacked)
+        return _finish(state, spec, rng, sigma, acc, new_cstate, loss_sum,
+                       jnp.asarray(mask), plan.shard)
+
+    return host_round_step if cohort_policy.feed == "host" else round_step
 
 
 def make_batch_spec(cfg: FedConfig, per_step_batch: dict) -> dict:

@@ -356,3 +356,20 @@ def unpack_sum_dense(packed: jax.Array, weights: jax.Array,
     signs = jax.vmap(unpack_signs)(packed).astype(jnp.float32)
     out = jnp.einsum("nd,n->d", signs, weights)
     return out if acc is None else acc + out
+
+
+def psum_accumulator(acc: jax.Array, axis_name: str) -> jax.Array:
+    """Cross-device reduce of a wire ACCUMULATOR over a named mesh axis.
+
+    Every codec's ``aggregate`` is a linear fp32 SUM over its client axis,
+    so per-device partial accumulators combine by plain addition — one
+    ``lax.psum`` of the (d,)-sized (or (d_pad,)-sized) f32 buffer is the
+    entire cross-device protocol of a streamed multi-device round. Per
+    device that is O(d) fp32 on the interconnect, independent of cohort
+    size: the compressed-domain analogue of the server all-reduce, and the
+    ONLY collective the multi-device cohort engine is allowed to emit
+    (jaxpr-pinned in tests/test_cohort_stream.py). Integer-valued sign sums
+    (0/1 masks) stay exact under the psum's reduction order, which is what
+    makes device count a bit-invariant choice there.
+    """
+    return jax.lax.psum(acc, axis_name)

@@ -184,6 +184,25 @@ class CohortSampler:
         for s in range(n_shards):
             yield self.shard_weights(idx, w, s, shard)
 
+    def device_partitions(self, idx: np.ndarray, w: np.ndarray, *,
+                          shard: int, devices: int) -> Iterator[np.ndarray]:
+        """Per-device weight blocks for the multi-device streaming round
+        (``stream(devices=D)``): device d gets the same CONTIGUOUS slice of
+        the global shard sequence the engine's shard_map partition assigns
+        it — ceil(n_shards / devices) shards each, the trailing all-padding
+        shards densified as zero rows. Yields ``devices`` arrays of shape
+        (shards_per_device, shard), still O(k) sampling work + O(slice)
+        output per device, so a host can stage each device's feed
+        independently."""
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        n_shards = -(-self.total_clients // shard)
+        n_shards = -(-n_shards // devices) * devices   # engine's device pad
+        per = n_shards // devices
+        for d in range(devices):
+            yield np.stack([self.shard_weights(idx, w, s, shard)
+                            for s in range(d * per, (d + 1) * per)])
+
     def dense(self, idx: np.ndarray, w: np.ndarray,
               layout: tuple) -> np.ndarray:
         """Full (groups, n_clients) weight mask for the engine's round-step

@@ -393,7 +393,8 @@ def main():
                     choices=list(compression.ENCODE_BACKENDS))
     ap.add_argument("--cohort", default="auto",
                     help="cohort execution policy: auto | vmap | "
-                         "stream(shard=K[,unroll=U])")
+                         "stream(shard=K|auto[,unroll=U][,devices=D|auto]"
+                         "[,feed=device|host])")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 

@@ -16,6 +16,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_cohort_mesh(devices: int = 0):
+    """1-D ``clients`` mesh for the streaming cohort engine's device axis
+    (core/fedavg.py ``stream(devices=D)``): the shard sequence partitions
+    over this axis and the per-device wire accumulators meet in one O(d)
+    psum. ``devices=0`` takes every local device. On a CPU-only host,
+    simulate a multi-device mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=D``."""
+    n = devices or jax.device_count()
+    if n > jax.device_count():
+        raise ValueError(f"cohort mesh wants {n} devices but only "
+                         f"{jax.device_count()} are visible")
+    return jax.make_mesh((n,), ("clients",))
+
+
 def axis_size(mesh, axes) -> int:
     n = 1
     for a in axes:

@@ -56,6 +56,21 @@ def make_plan(arch, shape, mesh) -> ParallelPlan:
                         n_clients, groups, micro, E)
 
 
+def cohort_plan(n_clients: int, *, client_groups: int = 1, micro: int = 1,
+                local_steps: int = 1) -> ParallelPlan:
+    """ParallelPlan for the 1-D cohort mesh (launch.mesh.make_cohort_mesh):
+    clients shard over the ``clients`` axis; params, activations and the
+    aggregated wire buffer stay replicated (no model/tensor parallelism).
+    ``wire_state_specs`` under this plan lays the per-client EF residuals
+    out SHARDED along the cohort axis — the layout the streaming engine's
+    ``stream(devices=D)`` shard_map produces, so residuals persist
+    device-local across rounds and never reshard."""
+    return ParallelPlan(client_axes=("clients",), micro_axes=(),
+                        seq_axes=(), replica_axes=(),
+                        n_clients=n_clients, client_groups=client_groups,
+                        micro=micro, local_steps=local_steps)
+
+
 def round_context(plan: ParallelPlan, *, agg_backend: str = "auto",
                   encode_backend: str = "auto",
                   dynamic_sigma: bool = False,
@@ -191,7 +206,12 @@ def wire_state_specs(cstate_shapes, plan: ParallelPlan):
     group scan's (client_groups, n_clients, n_bytes) payload stack: at
     1 bit/coord the whole stack is G*N/32 the size of ONE dense f32 partial,
     so replicating it costs less than the per-group f32 accumulate it
-    replaced."""
+    replaced.
+
+    Under the 1-D cohort mesh (``cohort_plan`` + ``make_cohort_mesh``) the
+    client axis is ``clients``, matching the sharded residual output of the
+    streaming engine's ``stream(devices=D)`` shard_map: each device keeps
+    exactly its own clients' residual rows round over round."""
     def spec(leaf):
         s = [None] * len(leaf.shape)
         if len(leaf.shape) >= 2:

@@ -58,11 +58,14 @@ def main():
                          "reference = dense jax.random draw)")
     ap.add_argument("--cohort", default="auto",
                     help="cohort execution policy: 'auto' (stream only when "
-                         "the round is large), 'vmap', or "
-                         "'stream(shard=K[,unroll=U])' — stream runs client "
-                         "shards of K through the fused encode under a scan, "
-                         "carrying only the reduced wire accumulator "
-                         "(grammar: docs/API.md)")
+                         "the round is large), 'vmap', or 'stream(shard=K|"
+                         "auto[,unroll=U][,devices=D|auto][,feed=device|"
+                         "host])' — stream runs client shards of K through "
+                         "the fused encode under a scan, carrying only the "
+                         "reduced wire accumulator; devices=D splits the "
+                         "shard sequence over a D-device 'clients' mesh "
+                         "with one O(d) psum; feed=host double-buffers "
+                         "shards from host memory (grammar: docs/API.md)")
     ap.add_argument("--z", type=int, default=1, help="1=Gaussian, 0=uniform")
     ap.add_argument("--sigma", type=float, default=0.01,
                     help="z-sign noise scale / dpgauss noise stddev")
@@ -116,8 +119,13 @@ def main():
                               weights_are_mask=True,
                               dynamic_sigma=args.plateau,
                               cohort=args.cohort)
-    step = jax.jit(fedavg.build_round_step(bundle.loss_fn, comp, cfg, ctx),
-                   donate_argnums=(0,) if ctx.donate_state else ())
+    step = fedavg.build_round_step(bundle.loss_fn, comp, cfg, ctx)
+    if fedavg.CohortPolicy.parse(args.cohort).feed != "host":
+        step = jax.jit(step,
+                       donate_argnums=(0,) if ctx.donate_state else ())
+    # else: stream(feed=host) returns a Python-loop driver that device_puts
+    # one shard at a time — it must NOT be jitted (and state donation is
+    # meaningless for it; the jitted PER-SHARD kernel is cached inside)
 
     params = bundle.init(jax.random.PRNGKey(0))
     n_params = sum(p.size for p in jax.tree_util.tree_leaves(params))

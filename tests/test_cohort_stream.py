@@ -17,6 +17,24 @@ accumulator). Contract:
     full-cohort uint8 payload stack — peak wire memory is O(shard * d / 8);
   * ``auto`` (and a bare ``stream``) gate small rounds back to the vmap
     plan; an explicit ``stream(shard=K)`` always streams.
+
+Multi-device (``stream(devices=D)``, shard_map over a 1-D ``clients`` mesh):
+
+  * 0/1 masks: D in {1, 2, 4, 8} is BIT-identical to the vmap plan and the
+    single-device stream at any shard size — integer sign sums stay exact
+    under the cross-device psum, and counter-based keys are placement-
+    invariant;
+  * fp32 EF scale weights: residuals (per-client, never summed across
+    devices) are bit-identical per round; params are f32-close (the psum
+    meets the per-device partial sums in a different association order than
+    the sequential fold). ``ef|zsign(scale=none)`` has 0/1 weights, so it is
+    fully exact multi-round at any D;
+  * the ONLY cross-device collective in the round jaxpr is an O(d) fp32
+    psum of the wire accumulator (plus the scalar loss psum) — never a
+    payload stack, never per-client data (the jaxpr pin below).
+
+These run under XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI
+multi-device smoke job); with fewer visible devices they skip.
 """
 import jax
 import jax.numpy as jnp
@@ -26,9 +44,22 @@ import pytest
 from repro.core import compression as C
 from repro.core import fedavg, wire
 from repro.core import noise as Z
-from repro.core.context import (STREAM_AUTO_MIN_ELEMS, STREAM_DEFAULT_SHARD,
+from repro.core.context import (COHORT_DEVICES_AUTO, STREAM_AUTO_MIN_ELEMS,
+                                STREAM_DEFAULT_SHARD, STREAM_SHARD_AUTO,
+                                STREAM_SHARD_MAX, STREAM_SHARD_MIN,
                                 CohortPolicy, RoundContext)
 from repro.fed.sampling import CohortSampler
+
+_DC = jax.device_count()
+
+
+def _devices(d):
+    """Parametrize a device count, skipping when the host shows fewer
+    devices (run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+    to unskip — see the CI multi-device smoke job)."""
+    return pytest.param(d, marks=pytest.mark.skipif(
+        _DC < d, reason=f"needs {d} devices (have {_DC}); set "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count={d}"))
 
 
 # ---------------------------------------------------------------------------
@@ -45,35 +76,98 @@ def test_cohort_policy_parse():
     assert CohortPolicy.parse(pol) is pol
     # shard=0 is VALID ("engine default"), so it still auto-gates
     assert CohortPolicy.parse("stream(shard=0)").shard == 0
+    # the device axis and the shard/feed sentinels
+    assert CohortPolicy.parse("stream(shard=auto)").shard == STREAM_SHARD_AUTO
+    assert CohortPolicy.parse("stream(devices=4)").devices == 4
+    assert CohortPolicy.parse(
+        "stream(devices=auto)").devices == COHORT_DEVICES_AUTO
+    pol = CohortPolicy.parse("stream(shard=auto,devices=auto,unroll=2)")
+    assert pol == CohortPolicy("stream", STREAM_SHARD_AUTO, 2,
+                               COHORT_DEVICES_AUTO, "device")
+    assert CohortPolicy.parse("stream(feed=host)").feed == "host"
+    assert CohortPolicy.parse("stream(shard=8,feed=device)").feed == "device"
     for bad in ["nope", "stream(shard=a)", "vmap(shard=2)",
-                "stream(shard=2,unroll=0)", "stream(frac=2)"]:
+                "stream(shard=2,unroll=0)", "stream(frac=2)",
+                "stream(unroll=auto)",       # auto is shard/devices-only
+                "vmap(devices=2)",           # device axis is stream-only
+                "auto(feed=host)",
+                "stream(feed=nope)",
+                "stream(devices=2,feed=host)"]:  # host feed is single-device
         with pytest.raises(ValueError):
             CohortPolicy.parse(bad)
     with pytest.raises(ValueError):
         RoundContext(cohort="stream(shard=-1)")
+    with pytest.raises(ValueError):
+        RoundContext(cohort="stream(devices=-2)")
 
 
 def test_resolve_cohort_gating():
     big = STREAM_AUTO_MIN_ELEMS  # elems threshold: total * n_coords
+    plan = lambda shard, unroll=1, devices=1, feed="device": \
+        fedavg.CohortPlan("stream", shard, unroll, devices, feed)
     # explicit vmap never streams
-    assert fedavg.resolve_cohort("vmap", 1 << 20, 1 << 20) == ("vmap", 0, 1)
+    assert fedavg.resolve_cohort("vmap", 1 << 20, 1 << 20) == fedavg.VMAP_PLAN
     # auto below the threshold keeps the vmap plan
-    assert fedavg.resolve_cohort("auto", 8, 100) == ("vmap", 0, 1)
-    assert fedavg.resolve_cohort("stream", 8, 100) == ("vmap", 0, 1)
-    # auto above the threshold streams at the default shard
-    assert fedavg.resolve_cohort("auto", 4096, big // 1024) == \
-        ("stream", STREAM_DEFAULT_SHARD, 1)
+    assert fedavg.resolve_cohort("auto", 8, 100) == fedavg.VMAP_PLAN
+    assert fedavg.resolve_cohort("stream", 8, 100) == fedavg.VMAP_PLAN
+    # auto above the threshold streams at the memory-budget shard size
+    d = big // 1024
+    assert fedavg.resolve_cohort("auto", 4096, d) == \
+        plan(fedavg.auto_shard_size(d))
     # explicit shard forces streaming below the threshold
-    assert fedavg.resolve_cohort("stream(shard=4)", 8, 100) == ("stream", 4, 1)
+    assert fedavg.resolve_cohort("stream(shard=4)", 8, 100) == plan(4)
     # shard clamps to the cohort; forced single-shard still streams
-    assert fedavg.resolve_cohort("stream(shard=64)", 10, 100) == \
-        ("stream", 10, 1)
+    assert fedavg.resolve_cohort("stream(shard=64)", 10, 100) == plan(10)
     # unroll rides along
     assert fedavg.resolve_cohort("stream(shard=4,unroll=3)", 8, 100) == \
-        ("stream", 4, 3)
-    # auto where one shard would cover the whole cohort -> vmap
-    assert fedavg.resolve_cohort(
-        "auto", STREAM_DEFAULT_SHARD // 2, 1 << 22) == ("vmap", 0, 1)
+        plan(4, unroll=3)
+    # shard=auto forces streaming at the auto-tuned (clamped) size
+    assert fedavg.resolve_cohort("stream(shard=auto)", 8, 100) == plan(8)
+    # feed=host forces streaming and survives into the plan
+    assert fedavg.resolve_cohort("stream(feed=host)", 8, 100) == \
+        plan(8, feed="host")
+    # auto where one (auto-sized) shard covers the whole cohort -> vmap
+    assert fedavg.resolve_cohort("auto", 4, 1 << 22) == fedavg.VMAP_PLAN
+    # devices clamp to the shard count (no all-padding devices) and
+    # validate against the visible device count
+    got = fedavg.resolve_cohort("stream(shard=4,devices=auto)", 8, 100)
+    assert got == plan(4, devices=min(jax.device_count(), 2))
+    with pytest.raises(ValueError, match="device"):
+        fedavg.resolve_cohort(
+            f"stream(shard=4,devices={jax.device_count() + 1})", 8, 100)
+    # a launcher plan that shards the client axis over its own mesh
+    # (spmd_axes, e.g. dryrun's 16x16 production cell) pre-empts streaming:
+    # auto keeps the vmap plan even far above the element threshold (the
+    # shard scan would serialize the mesh-parallel axis and trigger
+    # involuntary remats), and a FORCED stream there is a config conflict
+    assert fedavg.resolve_cohort("auto", 4096, d,
+                                 spmd_axes=("data",)) == fedavg.VMAP_PLAN
+    assert fedavg.resolve_cohort("stream", 4096, d,
+                                 spmd_axes=("data",)) == fedavg.VMAP_PLAN
+    with pytest.raises(ValueError, match="client axis"):
+        fedavg.resolve_cohort("stream(shard=4)", 4096, d,
+                              spmd_axes=("data",))
+    with pytest.raises(ValueError, match="client axis"):
+        fedavg.resolve_cohort("stream(feed=host)", 4096, d,
+                              spmd_axes=("data",))
+
+
+def test_auto_shard_size():
+    blk = wire.SIGN_REDUCE_CLIENT_BLK
+    # no model info -> the static default
+    assert fedavg.auto_shard_size(0) == STREAM_DEFAULT_SHARD
+    # tiny models clamp high, huge models clamp low
+    assert fedavg.auto_shard_size(100) == STREAM_SHARD_MAX
+    assert fedavg.auto_shard_size(1 << 28) == STREAM_SHARD_MIN
+    # the benchmark model (~1.3M coords) fits 48 clients in the 256 MB
+    # budget: 48 * (4*d + d/8) bytes ~ 250 MB
+    assert fedavg.auto_shard_size(1_323_018) == 48
+    # always a SIGN_REDUCE_CLIENT_BLK multiple inside the clamp band, so
+    # the fp32-weighted fold stays blocked identically across shards
+    for d in [1 << 18, 1 << 20, 3_000_000, 10_000_001]:
+        k = fedavg.auto_shard_size(d)
+        assert k % blk == 0 or k in (STREAM_SHARD_MIN, STREAM_SHARD_MAX)
+        assert STREAM_SHARD_MIN <= k <= STREAM_SHARD_MAX
 
 
 def test_client_keys_invariant_to_partition():
@@ -144,12 +238,15 @@ def test_scatter_and_dense_fold():
 # ---------------------------------------------------------------------------
 
 def _run_rounds(spec, cohort, *, n=16, d=96, rounds=4, seed=5,
-                mask=None, glr=0.01, slr=0.3, integer_targets=False):
+                mask=None, glr=0.01, slr=0.3, integer_targets=False,
+                jit=True):
     comp = C.Pipeline(spec)
     cfg = fedavg.FedConfig(n_clients=n, client_lr=glr, server_lr=slr)
     ctx = RoundContext(cohort=cohort)
     loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
-    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg, ctx))
+    step = fedavg.build_round_step(loss_fn, comp, cfg, ctx)
+    if jit:  # feed=host returns a Python-loop driver that must not be jitted
+        step = jax.jit(step)
     y = jax.random.normal(jax.random.PRNGKey(seed), (1, n, 1, d))
     if integer_targets:
         y = jnp.round(y * 4.0)  # dyadic targets keep every sum associative
@@ -221,6 +318,143 @@ def test_stream_bit_identical_topk_dyadic(shard):
                                   np.asarray(got.params["x"]))
     np.testing.assert_array_equal(np.asarray(ref.comp_state),
                                   np.asarray(got.comp_state))
+
+
+# ---------------------------------------------------------------------------
+# multi-device: shard_map rounds == vmap == single-device stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("devices", [_devices(2), _devices(4), _devices(8)])
+@pytest.mark.parametrize("shard", [3, 8])
+def test_shard_map_bit_identical_zsign_packed(devices, shard):
+    """0/1 masks -> integer sign sums stay exact under the cross-device
+    psum, and counter-based keys are placement-invariant: D devices are
+    bit-identical to the vmap plan AND the D=1 stream at any shard size,
+    multi-round, dead clients included."""
+    spec = "zsign_packed(z=1,sigma=0.7)"
+    ref, mref = _run_rounds(spec, "vmap", mask=_MASK16)
+    one, _ = _run_rounds(spec, f"stream(shard={shard})", mask=_MASK16)
+    got, mgot = _run_rounds(spec, f"stream(shard={shard},devices={devices})",
+                            mask=_MASK16)
+    np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                  np.asarray(got.params["x"]))
+    np.testing.assert_array_equal(np.asarray(one.params["x"]),
+                                  np.asarray(got.params["x"]))
+    # the loss METRIC is a plain fp32 sum of per-client losses (not part of
+    # the integer-exact wire fold), so the psum may re-associate it by an ulp
+    assert float(mref.loss) == pytest.approx(float(mgot.loss), rel=1e-6)
+    assert float(mref.participation) == float(mgot.participation) == 8.0
+
+
+@pytest.mark.parametrize("devices", [_devices(2), _devices(4), _devices(8)])
+def test_shard_map_ef_zsign_one_round(devices):
+    """EF fp32 scale weights across devices: the per-client residuals are
+    never summed across devices, so ONE round from the same state leaves
+    them bit-identical to the vmap plan (dead clients keep theirs exactly);
+    the params go through the psum (a different fp32 association order than
+    the sequential fold) and are f32-rounding-close."""
+    kw = dict(mask=_MASK16, rounds=1)
+    ref, _ = _run_rounds("ef|zsign", "vmap", **kw)
+    got, _ = _run_rounds("ef|zsign", f"stream(shard=8,devices={devices})",
+                         **kw)
+    np.testing.assert_array_equal(np.asarray(ref.comp_state),
+                                  np.asarray(got.comp_state))
+    np.testing.assert_allclose(np.asarray(ref.params["x"]),
+                               np.asarray(got.params["x"]), rtol=5e-5,
+                               atol=1e-7)
+
+
+@pytest.mark.parametrize("devices", [_devices(2), _devices(4), _devices(8)])
+def test_shard_map_ef_zsign_scale_none_exact_multiround(devices):
+    """ef|zsign(scale=none) aggregates with pure 0/1 weights (no per-client
+    fp32 scale), so the sharded-residual EF round is FULLY bit-identical
+    across device counts over multiple rounds — params and residuals."""
+    spec = "ef|zsign(scale=none)"
+    ref, _ = _run_rounds(spec, "vmap", mask=_MASK16)
+    for cohort in ["stream(shard=8)", f"stream(shard=8,devices={devices})",
+                   f"stream(shard=3,devices={devices})"]:
+        got, _ = _run_rounds(spec, cohort, mask=_MASK16)
+        np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                      np.asarray(got.params["x"]),
+                                      err_msg=cohort)
+        np.testing.assert_array_equal(np.asarray(ref.comp_state),
+                                      np.asarray(got.comp_state),
+                                      err_msg=cohort)
+
+
+@pytest.mark.parametrize("devices", [_devices(2), _devices(4), _devices(8)])
+def test_shard_map_topk_dyadic_exact(devices):
+    """top-k COO scatter across devices: dyadic client values (integer
+    targets, dyadic lrs, power-of-two live count) keep every addition —
+    including the psum — exact, so shard_map rounds are bit-identical to
+    vmap, EF residuals included."""
+    kw = dict(mask=_MASK16, glr=0.5, slr=0.5, integer_targets=True)
+    ref, _ = _run_rounds("ef|topk(frac=0.25)", "vmap", **kw)
+    got, _ = _run_rounds("ef|topk(frac=0.25)",
+                         f"stream(shard=3,devices={devices})", **kw)
+    np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                  np.asarray(got.params["x"]))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state),
+                                  np.asarray(got.comp_state))
+
+
+def test_host_feed_bit_identical_to_device_stream():
+    """stream(feed=host): the double-buffered host feeder slices the same
+    shards with the same global-index keys and the same left-fold order, so
+    the host round is bit-identical to the device-fed stream — residual
+    state included. Both run un-jitted here: the host driver cannot be
+    jitted, and whole-round jit may fuse the decode/update tail into
+    different (ulp-level) fp32 arithmetic than the eager tail, which is a
+    jit-vs-eager artifact orthogonal to the shard feeding."""
+    spec = "ef|zsign(scale=none)"
+    ref, mref = _run_rounds(spec, "stream(shard=5)", mask=_MASK16, rounds=3,
+                            jit=False)
+    got, mgot = _run_rounds(spec, "stream(shard=5,feed=host)", mask=_MASK16,
+                            rounds=3, jit=False)
+    np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                  np.asarray(got.params["x"]))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state),
+                                  np.asarray(got.comp_state))
+    assert float(mref.loss) == float(mgot.loss)
+    assert int(mgot.shard_clients) == 5
+
+
+def test_round_metrics_record_shard():
+    """RoundMetrics.shard_clients: the resolved (possibly auto-tuned) shard
+    size rides out with every streamed round; the vmap plan records 0."""
+    _, m = _run_rounds("zsign(z=1,sigma=0.5)", "stream(shard=7)", rounds=1)
+    assert int(m.shard_clients) == 7
+    _, m = _run_rounds("zsign(z=1,sigma=0.5)", "vmap", rounds=1)
+    assert int(m.shard_clients) == 0
+    # shard=auto resolves through auto_shard_size (d=96 clamps to the max,
+    # then to the cohort size)
+    _, m = _run_rounds("zsign(z=1,sigma=0.5)", "stream(shard=auto)", rounds=1)
+    assert int(m.shard_clients) == 16
+
+
+@pytest.mark.parametrize("devices", [_devices(2)])
+def test_shard_map_groups_flatten_to_cohort(devices):
+    """client_groups > 1 under the device axis: the (G, N) cohort flattens
+    to G*N slots before the mesh partition, matching the flat-group run."""
+    d = 48
+    y = jax.random.normal(jax.random.PRNGKey(11), (2, 4, 1, d))
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    outs = {}
+    for groups, n in [(2, 4), (1, 8)]:
+        comp = C.Pipeline("zsign(z=1,sigma=0.5)")
+        cfg = fedavg.FedConfig(n_clients=n, client_groups=groups,
+                               client_lr=0.01, server_lr=0.3)
+        step = jax.jit(fedavg.build_round_step(
+            loss_fn, comp, cfg,
+            RoundContext(cohort=f"stream(shard=3,devices={devices})")))
+        st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                      jax.random.PRNGKey(1))
+        st = st._replace(rng=jax.random.PRNGKey(42))
+        for _ in range(3):
+            st, _ = step(st, {"y": y.reshape(groups, n, 1, d)},
+                         jnp.ones((groups, n)))
+        outs[groups] = np.asarray(st.params["x"])
+    np.testing.assert_array_equal(outs[2], outs[1])
 
 
 @pytest.mark.parametrize("shard", [1, 7, 64])
@@ -301,14 +535,12 @@ def _walk_eqns(jaxpr):
     for eqn in jaxpr.eqns:
         yield eqn
         for v in eqn.params.values():
-            inner = getattr(v, "jaxpr", None)
-            if inner is not None:
-                yield from _walk_eqns(inner)
-            if isinstance(v, (list, tuple)):
-                for vv in v:
-                    inner = getattr(vv, "jaxpr", None)
-                    if inner is not None:
-                        yield from _walk_eqns(inner)
+            for vv in (v if isinstance(v, (list, tuple)) else (v,)):
+                # ClosedJaxpr carries .jaxpr; shard_map's param is a RAW
+                # Jaxpr (has .eqns directly) — recurse into both
+                inner = getattr(vv, "jaxpr", vv)
+                if hasattr(inner, "eqns"):
+                    yield from _walk_eqns(inner)
 
 
 def _stream_round_jaxpr(n_total, shard, d):
@@ -352,7 +584,41 @@ def test_stream_jaxpr_has_no_full_cohort_buffers():
                     f"jaxpr: {eqn}")
 
 
-def test_stream_scan_honors_unroll():
+_COLLECTIVES = frozenset({
+    "psum", "all_gather", "all_to_all", "ppermute", "pmin", "pmax",
+    "reduce_scatter", "pgather", "pbroadcast", "all_gather_invariant"})
+
+
+@pytest.mark.parametrize("devices", [_devices(2), _devices(4)])
+def test_shard_map_only_collective_is_od_psum(devices):
+    """The cross-device reduce stays in the compressed-sum domain: the ONLY
+    collectives in a stream(devices=D) round jaxpr are fp32 psums of O(d)
+    (the wire accumulator) and O(1) (the loss scalar). No all_gather /
+    all_to_all / ppermute, no uint8 payload stack and no per-client tensor
+    ever crosses the interconnect, so per-device traffic is independent of
+    the cohort size."""
+    n_total, shard = 32, 4
+    d = 2 * C.ENCODE_TILE
+    comp = C.Pipeline("zsign_packed(z=1,sigma=0.5)")
+    cfg = fedavg.FedConfig(n_clients=n_total, client_lr=0.01, server_lr=0.3)
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    step = fedavg.build_round_step(
+        loss_fn, comp, cfg,
+        RoundContext(cohort=f"stream(shard={shard},devices={devices})"))
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    jaxpr = jax.make_jaxpr(step)(st, {"y": jnp.zeros((1, n_total, 1, 1))},
+                                 jnp.ones((1, n_total)))
+    eqns = list(_walk_eqns(jaxpr.jaxpr))
+    assert any(e.primitive.name == "shard_map" for e in eqns)
+    colls = [e for e in eqns if e.primitive.name in _COLLECTIVES]
+    assert colls, "the device fold must end in a psum"
+    for eqn in colls:
+        assert eqn.primitive.name == "psum", eqn
+        for var in list(eqn.invars) + list(eqn.outvars):
+            aval = var.aval
+            assert aval.dtype == jnp.float32, eqn
+            assert np.prod(aval.shape, dtype=int) <= d, eqn
     jaxpr = None
     for unroll in [1, 2]:
         comp = C.Pipeline("zsign(z=1,sigma=0.5)")
@@ -436,6 +702,32 @@ def test_cohort_sampler_shard_weights_match_dense():
     # spot-check the binary-search slicing
     np.testing.assert_array_equal(s.shard_weights(idx, w, 3, 64),
                                   dense[3 * 64:4 * 64])
+
+
+def test_cohort_sampler_device_partitions_match_shard_sequence():
+    """device_partitions hands device d the same contiguous slice of the
+    global shard sequence the engine's shard_map partition scans there —
+    concatenated over devices it is the full (device-padded) sequence."""
+    s = CohortSampler(total_clients=1000, per_round=64, seed=4)
+    idx, w = s.sample()
+    shard, devices = 64, 4
+    n_shards = -(-1000 // shard)                       # 16
+    padded = -(-n_shards // devices) * devices         # 16
+    blocks = list(s.device_partitions(idx, w, shard=shard, devices=devices))
+    assert len(blocks) == devices
+    assert all(b.shape == (padded // devices, shard) for b in blocks)
+    rows = list(s.iter_shards(idx, w, shard=shard))
+    rows += [np.zeros(shard, np.float32)] * (padded - len(rows))
+    np.testing.assert_array_equal(np.concatenate(blocks), np.stack(rows))
+    # uneven: 5 shards over 2 devices pads to 6 (the trailing all-padding
+    # shard densifies to a zero row)
+    s2 = CohortSampler(total_clients=300, per_round=32, seed=5)
+    i2, w2 = s2.sample()
+    blocks = list(s2.device_partitions(i2, w2, shard=64, devices=2))
+    assert [b.shape for b in blocks] == [(3, 64), (3, 64)]
+    np.testing.assert_array_equal(blocks[1][-1], np.zeros(64, np.float32))
+    with pytest.raises(ValueError):
+        list(s2.device_partitions(i2, w2, shard=64, devices=0))
 
 
 def test_cohort_sampler_validation():

@@ -1,12 +1,14 @@
-"""Composable compression-pipeline API: spec grammar, shim equivalence,
-stage composition, RoundContext policy, and the previously-impossible
-compositions (dp over the packed 1-bit wire, EF over top-k).
+"""Composable compression-pipeline API: spec grammar, legacy-factory
+equivalence, stage composition, RoundContext policy, and the
+previously-impossible compositions (dp over the packed 1-bit wire, EF over
+top-k).
 
 Contract under test (see core/compression.py):
-  * ``make_compressor(name, **kw)`` is a deprecation shim that builds the
+  * the legacy monolithic class names are factory functions building the
     EQUIVALENT pipeline — bit-exact against the explicit ``Pipeline`` spec
     on encode, compressed-domain aggregate, and decode, including dead-
-    client residual semantics;
+    client residual semantics (the ``make_compressor`` string entry point
+    finished its deprecation cycle and was REMOVED in PR 7);
   * ``ef`` composes over any codec via the one residual rule
     ``codec_input - local_decode(payload)``;
   * a ``dp`` transform's noise FUSES into a downstream sign codec's sigma,
@@ -29,13 +31,6 @@ from repro.core import compression as C
 from repro.core import fedavg, wire
 from repro.core import noise as Z
 from repro.core.context import RoundContext, resolve_backend
-
-
-def _silent(name, **kw):
-    """make_compressor without the (expected) DeprecationWarning noise."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return C.make_compressor(name, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -135,7 +130,7 @@ def test_dynamic_sigma_refused_over_calibrated_dp_stage():
             fedavg.build_round_step(lambda pr, b: 0.0, p,
                                     fedavg.FedConfig(), dynamic_sigma=True)
     # legacy dpgauss + Plateau still builds and consumes the dynamic sigma
-    legacy = _silent("dpgauss", sigma=0.3)
+    legacy = C.DPGaussianCompressor(sigma=0.3)
     step = fedavg.build_round_step(
         lambda pr, b: 0.5 * jnp.sum((pr["x"] - b["y"]) ** 2), legacy,
         fedavg.FedConfig(n_clients=2, client_lr=0.01), dynamic_sigma=True)
@@ -192,7 +187,7 @@ def test_legacy_factories_reject_unknown_kwargs():
     with pytest.raises(TypeError):
         C.DPGaussianCompressor(frac=0.1)
     with pytest.raises(TypeError):
-        _silent("zsign", frac=0.5)   # SignCodec has no such field
+        C.ZSignCompressor(frac=0.5)   # SignCodec has no such field
 
 
 def test_spec_sigma_is_explicit_vanilla_sign_by_default():
@@ -222,24 +217,26 @@ def test_packed_sigma_zero_noprng_jaxpr_pinned():
 
 
 # ---------------------------------------------------------------------------
-# shim equivalence: make_compressor(name) == explicit Pipeline, bit-exact
+# legacy-factory equivalence: factory class name == explicit Pipeline spec,
+# bit-exact (the make_compressor string shim is gone — see its removal test)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name,kw,spec", [
-    ("zsign", {"z": 1, "sigma": 0.5}, "zsign(z=1,sigma=0.5)"),
-    ("zsign", {"z": 0, "sigma": 2.0}, "zsign(z=inf,sigma=2.0)"),
-    ("zsign_packed", {"z": 1, "sigma": 0.5}, "zsign_packed(sigma=0.5)"),
-    ("stosign", {}, "stosign"),
-    ("efsign", {}, "ef|zsign"),
-    ("qsgd", {"s": 2}, "qsgd(s=2)"),
-    ("topk", {"frac": 0.25}, "ef|topk(frac=0.25)"),
-    ("dpgauss", {"sigma": 0.3}, "dp(noise=0.3)|dense"),
-])
-def test_shim_encode_aggregate_decode_bit_exact(name, kw, spec):
-    """Legacy name -> pipeline shim vs the explicit spec string: identical
-    payload bytes/values, identical masked aggregate, identical decode."""
+@pytest.mark.parametrize("factory,kw,spec", [
+    (C.ZSignCompressor, {"z": 1, "sigma": 0.5}, "zsign(z=1,sigma=0.5)"),
+    (C.ZSignCompressor, {"z": 0, "sigma": 2.0}, "zsign(z=inf,sigma=2.0)"),
+    (C.PackedZSignCompressor, {"z": 1, "sigma": 0.5},
+     "zsign_packed(sigma=0.5)"),
+    (C.StoSignCompressor, {}, "stosign"),
+    (C.EFSignCompressor, {}, "ef|zsign"),
+    (C.QSGDCompressor, {"s": 2}, "qsgd(s=2)"),
+    (C.TopKCompressor, {"frac": 0.25}, "ef|topk(frac=0.25)"),
+    (C.DPGaussianCompressor, {"sigma": 0.3}, "dp(noise=0.3)|dense"),
+], ids=lambda v: v if isinstance(v, str) else "")
+def test_factory_encode_aggregate_decode_bit_exact(factory, kw, spec):
+    """Legacy factory name vs the explicit spec string: identical payload
+    bytes/values, identical masked aggregate, identical decode."""
     d, n = 1000, 4
-    legacy = _silent(name, **kw)
+    legacy = factory(**kw)
     pipe = C.Pipeline(spec)
     flat = jnp.asarray(np.random.RandomState(0).randn(d), jnp.float32)
     mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
@@ -266,8 +263,8 @@ def test_shim_encode_aggregate_decode_bit_exact(name, kw, spec):
 
 
 @pytest.mark.parametrize("groups", [1, 2])
-def test_efsign_shim_vs_ef_zsign_engine_bit_identical(groups):
-    """make_compressor("efsign") vs Pipeline("ef|zsign") through the ROUND
+def test_efsign_factory_vs_ef_zsign_engine_bit_identical(groups):
+    """EFSignCompressor() vs Pipeline("ef|zsign") through the ROUND
     ENGINE under partial participation: bit-identical params AND residuals
     every round (dead clients keep their residual bit-exactly on both)."""
     d, n = 48, 4
@@ -277,7 +274,7 @@ def test_efsign_shim_vs_ef_zsign_engine_bit_identical(groups):
                            client_lr=0.01, server_lr=0.5)
     mask = jnp.ones((groups, n)).at[0, 1].set(0.0).at[groups - 1, 3].set(0.0)
     outs = {}
-    for label, comp in [("legacy", _silent("efsign")),
+    for label, comp in [("legacy", C.EFSignCompressor()),
                         ("spec", C.Pipeline("ef|zsign"))]:
         step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg))
         st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
@@ -511,21 +508,21 @@ def test_round_context_and_backend_validation():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shim
+# deprecation shim: removed in PR 7
 # ---------------------------------------------------------------------------
 
-def test_make_compressor_emits_exactly_one_deprecation_warning():
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        C.make_compressor("zsign", z=1, sigma=0.5)
-    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
-    assert len(dep) == 1
-    assert "Pipeline" in str(dep[0].message)
-    # the new API is warning-free, factories included
+def test_make_compressor_shim_is_gone_and_api_warning_free():
+    """The make_compressor(name) string entry point finished its deprecation
+    cycle: the attribute no longer exists (no half-removed stub), and the
+    surviving API — Pipeline specs and the legacy factory names — emits no
+    DeprecationWarning."""
+    assert not hasattr(C, "make_compressor")
+    assert "make_compressor" not in C.__all__
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         C.Pipeline("ef|zsign")
         C.ZSignCompressor(sigma=0.5)
+        C.EFSignCompressor()
     assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
 
 
