@@ -27,6 +27,10 @@ perf-trajectory files every later perf PR is compared against:
                          peak-temp estimates; with --devices D also the
                          shard_map multi-device rows + scaling efficiency
                          (rows in BENCH_round.json)
+  robust_agg             Byzantine-robust agg modes (vote/trimmed/median)
+                         vs the mean popcount round at n=32, ~1.3M coords,
+                         plus one adversarial round (--robust-agg shorthand;
+                         rows in BENCH_round.json)
 
 ``--devices D`` forces D host devices (threads) so the ``stream(devices=D)``
 rows run without real hardware. It must take effect before jax initializes
@@ -529,6 +533,60 @@ def cohort_round(fast=False):
              temp_mb(compiled_big))
 
 
+def robust_agg(fast=False):
+    """Byzantine-robust compressed-domain aggregation overhead: one jitted
+    round on the width-1024 MLP (~1.3M coords, n=32 clients) per ``agg=``
+    mode. vote/trimmed/median replace the popcount mean-reduce with the
+    carried int32 (signed_count, n_live) vote pair + a closed-form decode —
+    same payload bytes, same single reduce shape — so the robust round must
+    land within 1.3x of the mean round (the acceptance floor this bench
+    records). Also times one round under the sign-flip adversary to show
+    fault injection is wire-local (XOR on the uint8 stack, no extra
+    reduce)."""
+    dim, classes, width = 256, 10, (128 if fast else 1024)
+    micro = 8
+    n = 32
+    iters, warmup = (3, 1) if fast else (5, 2)
+    init, loss_fn, _ = mlp_loss_builder(dim, classes, width=width)
+    params = init(jax.random.PRNGKey(0))
+    d = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    emit("robust_agg", "robust_agg_model_coords", d)
+
+    def time_round(spec, adversary="none"):
+        cfg = fedavg.FedConfig(n_clients=n, client_lr=0.05,
+                               server_lr=sign_slr(0.01, 1, 0.05, 0.05))
+        kx, ky = jax.random.split(jax.random.PRNGKey(2))
+        batch = {"x": jax.random.normal(kx, (1, n, 1, micro, dim)),
+                 "y": jax.random.randint(ky, (1, n, 1, micro), 0, classes)}
+        mask = jnp.ones((1, n))
+        comp = compression.Pipeline(spec)
+        ctx = fedavg.RoundContext(weights_are_mask=True, adversary=adversary)
+        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg, ctx),
+                       donate_argnums=0)
+        state = fedavg.init_server_state(
+            jax.tree.map(jnp.array, params), cfg, comp, jax.random.PRNGKey(1))
+        return _time_donated_rounds(step, state, batch, mask, iters, warmup)
+
+    times = {}
+    for mode, spec in [("mean", "zsign(z=1,sigma=0.05)"),
+                       ("vote", "zsign(z=1,sigma=0.05,agg=vote)"),
+                       ("trimmed", "zsign(z=1,sigma=0.05,agg=trimmed,"
+                                   "trim_f=2)"),
+                       ("median", "zsign(z=1,sigma=0.05,agg=median)")]:
+        times[mode] = time_round(spec)
+        emit("robust_agg", f"robust_agg_round_us_{mode}_n{n}",
+             round(times[mode], 1))
+    for mode in ("vote", "trimmed", "median"):
+        emit("robust_agg", f"robust_agg_overhead_x_{mode}_n{n}",
+             round(times[mode] / times["mean"], 3))
+    t_adv = time_round("zsign(z=1,sigma=0.05,agg=vote)",
+                       adversary="sign_flip(f=8)")
+    emit("robust_agg", f"robust_agg_round_us_vote_signflip_n{n}",
+         round(t_adv, 1))
+    emit("robust_agg", f"robust_agg_adversary_overhead_x_n{n}",
+         round(t_adv / times["vote"], 3))
+
+
 def kernel_throughput(fast=False):
     """Pallas compression kernel vs pure-jnp reference (interpret mode on CPU
     measures correctness-path overhead; compiled-TPU numbers on hardware)."""
@@ -611,7 +669,8 @@ def client_encode(fast=False):
 
 BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
            fig5_local_steps, fig6_plateau, fig16_qsgd, fig17_dp, table2_bits,
-           kernel_throughput, client_encode, fed_round_step, cohort_round]
+           kernel_throughput, client_encode, fed_round_step, cohort_round,
+           robust_agg]
 
 # several benches may merge into one JSON file (kernel + encode rows).
 # The key prefix ATTRIBUTES existing rows to their bench so a re-run bench
@@ -620,6 +679,7 @@ BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
 # carry its prefix ("" = the file's default owner).
 _JSON_FILES = {"fed_round_step": ("BENCH_round.json", ""),
                "cohort_round": ("BENCH_round.json", "cohort_"),
+               "robust_agg": ("BENCH_round.json", "robust_agg_"),
                "kernel_throughput": ("BENCH_kernels.json", ""),
                "client_encode": ("BENCH_kernels.json", "encode_")}
 
@@ -633,7 +693,15 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="force D host devices (consumed before jax import) "
                          "so cohort_round emits stream(devices=D) rows")
+    ap.add_argument("--robust-agg", action="store_true",
+                    help="shorthand for --only robust_agg (robust agg-mode "
+                         "round overhead rows in BENCH_round.json)")
     args = ap.parse_args()
+    if args.robust_agg:
+        if args.only and args.only != "robust_agg":
+            raise SystemExit("--robust-agg conflicts with --only "
+                             f"{args.only}")
+        args.only = "robust_agg"
     print("name,metric,value")
     for b in BENCHES:
         if args.only and b.__name__ != args.only:

@@ -1,0 +1,82 @@
+"""Byzantine-robust compressed aggregation under a live wire attack.
+
+    PYTHONPATH=src python examples/byzantine_robust.py [--adversary SPEC]
+                                                       [--agg MODE] [--all]
+
+n=16 clients solve the consensus problem while f=6 of them (f < n/2)
+sign-flip every payload on the wire (``fed/adversary.py``). All robust
+``agg=`` modes stay in the compressed domain — majority vote, trimmed(f)
+mean and coordinate-wise median are closed-form post-processings of the
+carried int32 (signed_count, n_live) vote pair, so the round costs the same
+single reduce as the mean path (docs/API.md).
+
+Headline: ``agg=vote`` converges at full speed — each coordinate still
+steps a whole unit in the honest majority's direction — while ``agg=mean``
+is demonstrably degraded: the flipped votes collapse its step magnitude to
+(n - 2f)/n = 1/4, leaving it far from the optimum at the same round budget.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression, fedavg
+
+N, D, F, ROUNDS = 16, 128, 6, 60
+
+
+def run(agg: str, adversary: str, rounds: int = ROUNDS):
+    key = jax.random.PRNGKey(0)
+    targets = 5.0 + jax.random.normal(key, (1, N, D))
+    honest_opt = targets[0, F:].mean(0)
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    batch = {"y": targets[:, :, None]}
+    mask = jnp.ones((1, N))
+    comp = compression.Pipeline(f"zsign_packed(agg={agg})")
+    # effective sign step = server_lr * client_lr = 0.1 per coordinate
+    cfg = fedavg.FedConfig(n_clients=N, client_lr=0.05, server_lr=2.0)
+    ctx = fedavg.RoundContext(weights_are_mask=True, adversary=adversary)
+    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg, ctx))
+    state = fedavg.init_server_state({"x": jnp.zeros(D)}, cfg, comp,
+                                     jax.random.PRNGKey(1))
+    for _ in range(rounds):
+        state, m = step(state, batch, mask)
+    dist = float(jnp.linalg.norm(state.params["x"] - honest_opt))
+    return dist, float(jnp.linalg.norm(honest_opt)), m
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--adversary", default=f"sign_flip(f={F})",
+                    help="attack spec (fed/adversary.py grammar); e.g. "
+                         f"'byte_corrupt(f={F},p=0.2)', 'collude(f={F})', "
+                         f"'dropout(f={F})'")
+    ap.add_argument("--agg", default=None,
+                    help="run one agg mode (mean|vote|trimmed(f=..)|median) "
+                         "instead of the vote-vs-mean comparison")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every agg mode under the attack")
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    args = ap.parse_args()
+
+    modes = ([args.agg] if args.agg else
+             ["mean", "vote", "trimmed(f=6)", "median"] if args.all else
+             ["mean", "vote"])
+    print(f"consensus: d={D}, n={N} clients, adversary={args.adversary}, "
+          f"{args.rounds} rounds")
+    dists = {}
+    for agg in modes:
+        dist, d0, m = run(agg, args.adversary, args.rounds)
+        dists[agg] = dist
+        print(f"  agg={agg:14s} dist-to-honest-opt={dist:8.3f}  "
+              f"(init was {d0:.1f})  uplink="
+              f"{float(m.uplink_bits) / 1e3:.1f} kbit/round")
+    if "vote" in dists and "mean" in dists:
+        verdict = ("vote converged, mean degraded"
+                   if dists["vote"] < 0.5 * dists["mean"]
+                   else "no separation (attack below robustness threshold?)")
+        print(f"  -> {verdict}")
+
+
+if __name__ == "__main__":
+    main()

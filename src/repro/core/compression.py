@@ -65,8 +65,11 @@ it unchanged):
 
     init_state(n_coords)              -> per-client residual buffer or None
     encode(key, flat, state, sigma)   -> (payload, new_state)  # client
-    aggregate(payload, mask, n_coords)-> (d_pad,) f32 masked SUM  # server
-    decode_mean(flat_mean, sigma)     -> (d_pad,) f32 estimate    # server
+    aggregate(payload, mask, n_coords)-> masked SUM accumulator   # server
+                                         ((d_pad,) f32, or the (2, d_pad)
+                                         int32 vote pair for robust agg=)
+    decode_sum(enc_sum, n_live, sigma)-> (d_pad,) f32 estimate    # server
+    decode_mean(flat_mean, sigma)     -> (d_pad,) f32 estimate (mean law)
     wire_format()                     -> WireFormat (dtype, bits/coord, ...)
 
 ``flat`` is the pseudo-gradient flattened ONCE by the engine
@@ -102,6 +105,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import re
 from typing import Any, Tuple
 
 import jax
@@ -182,7 +186,8 @@ def fused_sign_encode_jnp(flat: jax.Array, key, sigma, *, z: int,
 def sign_reduce(packed: jax.Array, weights: jax.Array,
                 backend: str = "auto", *,
                 weights_are_mask: bool = False,
-                acc: jax.Array | None = None) -> jax.Array:
+                acc: jax.Array | None = None,
+                debug: bool = False) -> jax.Array:
     """Weighted sign-reduce over stacked bitpacked payloads.
 
     (n_clients, n_bytes) u8 + (n_clients,) f32 -> (8*n_bytes,) f32 weighted
@@ -212,6 +217,10 @@ def sign_reduce(packed: jax.Array, weights: jax.Array,
     hook (see wire.unpack_sum for the exactness contract). The Pallas
     kernel has no in-kernel init accumulator, so that backend adds ``acc``
     to the kernel's blocked sum — still integer-exact for 0/1 masks.
+
+    ``debug`` turns on the dynamic membership assertion of the popcount
+    path (``wire.check_mask_membership``; debug-wire mode) — it only fires
+    on the ``weights_are_mask`` route, where the contract applies.
     """
     backend = resolve_backend("agg", backend)
     if backend == "pallas":
@@ -221,7 +230,7 @@ def sign_reduce(packed: jax.Array, weights: jax.Array,
     if backend == "dense":
         return wire.unpack_sum_dense(packed, weights, acc)
     if weights_are_mask:
-        return wire.unpack_sum_mask(packed, weights, acc)
+        return wire.unpack_sum_mask(packed, weights, acc, debug=debug)
     return unpack_sum(packed, weights, acc)
 
 
@@ -396,6 +405,28 @@ class SignCodec:
     under an ``ef`` transform. ``weights_are_mask`` is the static 0/1-mask
     guarantee plumbed from RoundContext (never set on scale-weighted
     aggregation).
+
+    ``agg`` selects the SERVER aggregation law over the +/-1 votes:
+
+      "mean"        the default weighted sign mean (every path above).
+      "vote"        coordinate-wise majority vote (Stochastic-Sign SGD /
+                    signSGD-with-majority-vote): sign of the signed count,
+                    0 at ties. Byzantine-resilient for f < n/2 flippers.
+      "trimmed"     coordinate-wise trimmed mean dropping ``trim_f`` votes
+                    at each end (``agg=trimmed(f=2)`` sugar sets trim_f).
+      "median"      coordinate-wise median (= deepest trim).
+
+    The robust modes aggregate through the integer (signed_count, n_live)
+    VOTE PAIR (``wire.vote_accumulator``): still compressed-domain (no
+    (n_clients, d) matrix), still one accumulator across streamed shards,
+    still one psum across devices — now int32 of size 2*d_pad. They REQUIRE
+    the static ``weights_are_mask`` guarantee (fractional weights have no
+    vote-count semantics — refused with an error) and ``scale="none"``
+    (mean_abs magnitudes are fractional weights by construction). They
+    always run the jnp vote path: the Pallas ``sign_reduce`` kernel
+    computes f32 weighted sums, not count pairs, so ``agg_backend`` is
+    ignored for robust modes. ``debug_wire`` adds the runtime 0/1-mask
+    assertion (checkify) on the popcount/vote paths.
     """
     z: int = 1
     sigma: float = 0.0
@@ -407,6 +438,9 @@ class SignCodec:
     weights_are_mask: bool = False   # static guarantee: weights are 0/1
     dense_kernel: bool = False       # reference path via Pallas zsign_compress
     use_kernel: bool = False         # fused EF+sign Pallas kernel (under ef)
+    agg: str = "mean"                # "mean" | "vote" | "trimmed" | "median"
+    trim_f: int = 0                  # votes trimmed per end (agg=trimmed)
+    debug_wire: bool = False         # runtime 0/1-mask assertion (checkify)
     spec_name = "zsign"
     randomized = True
 
@@ -418,6 +452,36 @@ class SignCodec:
         if self.scale not in ("none", "mean_abs"):
             raise ValueError(f"scale must be 'none' or 'mean_abs', "
                              f"got {self.scale!r}")
+        # "trimmed(f=2)" spec sugar -> agg="trimmed", trim_f=2
+        agg = self.agg
+        if isinstance(agg, str) and agg.startswith("trimmed("):
+            m = re.fullmatch(r"trimmed\(\s*f\s*=\s*(\d+)\s*\)", agg)
+            if not m:
+                raise ValueError(f"malformed trimmed agg spec {agg!r}; "
+                                 f"expected trimmed(f=<int>)")
+            f = int(m.group(1))
+            if self.trim_f not in (0, f):
+                raise ValueError(f"conflicting trim levels: agg={agg!r} vs "
+                                 f"trim_f={self.trim_f}")
+            object.__setattr__(self, "agg", "trimmed")
+            object.__setattr__(self, "trim_f", f)
+        if self.agg not in wire.VOTE_AGG_MODES:
+            raise ValueError(f"unknown agg mode {self.agg!r}; expected one "
+                             f"of {wire.VOTE_AGG_MODES} (trimmed also as "
+                             f"'trimmed(f=<int>)')")
+        if self.agg == "trimmed" and self.trim_f < 1:
+            raise ValueError("agg=trimmed needs trim_f >= 1 — say "
+                             "agg=trimmed(f=2) or trim_f=2; trimmed(f=0) is "
+                             "exactly agg=mean")
+        if self.agg != "trimmed" and self.trim_f != 0:
+            raise ValueError(f"trim_f={self.trim_f} only applies to "
+                             f"agg=trimmed, not agg={self.agg!r}")
+        if self.agg != "mean" and self.scale != "none":
+            raise ValueError(
+                f"agg={self.agg!r} requires scale='none': scale="
+                f"{self.scale!r} aggregation weights clients by fractional "
+                f"magnitudes, which have no integer vote-count semantics "
+                f"(robust modes count +/-1 votes under a 0/1 mask)")
 
     def wire_format(self) -> WireFormat:
         layout = "bitpacked+scale" if self.scale == "mean_abs" else "bitpacked"
@@ -504,8 +568,21 @@ class SignCodec:
             # scale-weighted sum directly in the compressed domain.
             return sign_reduce(payload["packed"], mask * payload["scale"],
                                self.agg_backend, acc=acc)
+        if self.agg != "mean":
+            if not self.weights_are_mask:
+                raise ValueError(
+                    f"agg={self.agg!r} requires the static weights_are_mask "
+                    f"guarantee (0/1 participation masks): robust sign "
+                    f"aggregation counts +/-1 votes, and fractional weights "
+                    f"(importance/arrival sampler tiers, data-size weights) "
+                    f"have no vote-count semantics. Run under "
+                    f"RoundContext(weights_are_mask=True) with a uniform "
+                    f"0/1 sampler, or use agg=mean.")
+            return wire.vote_accumulator(payload, mask, acc,
+                                         debug=self.debug_wire)
         return sign_reduce(payload, mask, self.agg_backend,
-                           weights_are_mask=self.weights_are_mask, acc=acc)
+                           weights_are_mask=self.weights_are_mask, acc=acc,
+                           debug=self.debug_wire)
 
     def decode_mean(self, flat_mean, sigma=None):
         if self.scale == "mean_abs" or self.sigma_mode == "norm":
@@ -518,6 +595,31 @@ class SignCodec:
         else:
             scale = znoise.eta_z(self.z) * sigma
         return flat_mean * scale
+
+    def decode_sum(self, enc_sum, n_live, sigma=None):
+        """Server estimate from the aggregate output + live count.
+
+        The one server-side decode entry point: for ``agg="mean"`` it is
+        ``decode_mean(enc_sum / n_live)`` exactly; for the robust modes
+        ``enc_sum`` is the int32 vote pair and the estimate comes from the
+        closed forms in ``wire.vote_decode``. Decode laws per mode:
+
+          mean / trimmed   debiased by eta_z * sigma (Lemma 1 — the trimmed
+                           mean of the +/-1 votes estimates the same
+                           clipped expectation as the mean, so the same
+                           linear debias applies; exact only without
+                           adversaries, which is the point of trimming).
+          vote / median    returned RAW in {-1, 0, +1}: a majority decision
+                           is scale-invariant, so there is nothing to
+                           debias — the server takes signSGD-style
+                           fixed-magnitude steps of server_lr per coord.
+        """
+        if self.agg == "mean":
+            return self.decode_mean(enc_sum / n_live, sigma=sigma)
+        est = wire.vote_decode(enc_sum, self.agg, self.trim_f)
+        if self.agg == "trimmed":
+            return self.decode_mean(est, sigma=sigma)
+        return est
 
 
 @dataclasses.dataclass(frozen=True)
@@ -570,11 +672,30 @@ class TopKCodec:
     single-stage selection (every global top-k element is in its own chunk's
     top-k; tie-breaking by lowest index is preserved because candidates are
     ordered by (chunk, rank) — verified exhaustively in tests).
+
+    ``agg="coord"`` is the FedDropoutAvg-style COORDINATE-PARTICIPATION
+    normalization: because each client reports a different index set, the
+    global-n_live mean ("mean") shrinks every coordinate by (reporters /
+    n_live). "coord" instead scatter-adds a per-coordinate reporter COUNT
+    next to the value sum (a (2, n_coords) accumulator — still additive
+    across shards, still one psum across devices) and the decode divides
+    each coordinate by ITS OWN reporter count, so a coordinate reported by
+    3 of 50 live clients gets the mean of those 3 values, not 3/50 of it.
+    Unreported coordinates decode to 0. Composes with ``ef`` (the residual
+    is client-local, against the client's OWN scatter — unchanged), but the
+    server estimate is no longer linear in the payload stack, so the
+    EF-top-k contraction bound applies to the "mean" law only.
     """
     frac: float = 0.01
     chunk: int = 65536  # two-stage selection above this many coordinates
+    agg: str = "mean"   # "mean" | "coord" (per-coordinate participation)
     spec_name = "topk"
     randomized = False
+
+    def __post_init__(self):
+        if self.agg not in ("mean", "coord"):
+            raise ValueError(f"topk agg must be 'mean' or 'coord', "
+                             f"got {self.agg!r}")
 
     def wire_format(self) -> WireFormat:
         # fp32 value + int32 index per kept coordinate.
@@ -610,12 +731,28 @@ class TopKCodec:
 
     def aggregate(self, payload, mask: jax.Array, n_coords: int,
                   acc: jax.Array | None = None) -> jax.Array:
+        if self.agg == "coord":
+            vals = wire.scatter_sum_coo(
+                payload["values"], payload["indices"], mask, n_coords,
+                None if acc is None else acc[0])
+            cnt = wire.scatter_sum_coo(
+                jnp.ones_like(payload["values"]), payload["indices"], mask,
+                n_coords, None if acc is None else acc[1])
+            return jnp.stack([vals, cnt])
         return wire.scatter_sum_coo(payload["values"], payload["indices"],
                                     mask, n_coords, acc)
 
     def decode_mean(self, flat_mean, sigma=None):
         del sigma
         return flat_mean
+
+    def decode_sum(self, enc_sum, n_live, sigma=None):
+        del sigma
+        if self.agg == "coord":
+            # per-coordinate mean over the clients that REPORTED it; the
+            # value row is exactly 0 wherever the count row is 0
+            return enc_sum[0] / jnp.maximum(enc_sum[1], 1.0)
+        return enc_sum / n_live
 
 
 # ---------------------------------------------------------------------------
@@ -656,6 +793,28 @@ def _parse_value(v: str):
     return v
 
 
+def _split_args(args: str, tok: str):
+    """Split a stage's argument list on TOP-LEVEL commas only, so nested
+    call-style values (``agg=trimmed(f=2)``) stay one argument."""
+    parts, cur, depth = [], [], 0
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth < 0:
+                raise ValueError(f"unbalanced parentheses in {tok!r}")
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if depth != 0:
+        raise ValueError(f"unbalanced parentheses in {tok!r}")
+    parts.append("".join(cur))
+    return parts
+
+
 def _parse_stage(tok: str) -> Tuple[str, dict]:
     tok = tok.strip()
     if "(" in tok:
@@ -663,7 +822,8 @@ def _parse_stage(tok: str) -> Tuple[str, dict]:
             raise ValueError(f"malformed stage spec {tok!r}")
         name, args = tok[:-1].split("(", 1)
         kw = {}
-        for part in filter(None, (p.strip() for p in args.split(","))):
+        for part in filter(None,
+                           (p.strip() for p in _split_args(args, tok))):
             if "=" not in part:
                 raise ValueError(f"stage argument {part!r} in {tok!r} must "
                                  f"be key=value")
@@ -706,9 +866,13 @@ def parse_spec(spec: str):
     # convenience default: ef over the NOISE-FREE fixed-sigma sign codec is
     # EF-SignSGD, whose wire carries the mean-abs magnitude. Noisy z-sign
     # (sigma > 0, debiased by eta_z * sigma) and sto-sign (norm mode,
-    # majority vote) keep their own decode laws under ef.
+    # majority vote) keep their own decode laws under ef. Robust agg modes
+    # opt out too: they require scale='none' (mean_abs magnitudes are
+    # fractional weights), so "ef|zsign(agg=vote)" is EF over the raw-sign
+    # wire with majority-vote decode.
     if (isinstance(codec, SignCodec) and not explicit_scale
             and codec.sigma == 0.0 and codec.sigma_mode == "fixed"
+            and codec.agg == "mean"
             and any(isinstance(t, ErrorFeedback) for t in transforms)):
         codec = dataclasses.replace(codec, scale="mean_abs")
     return tuple(transforms), codec
@@ -845,6 +1009,8 @@ class Pipeline:
                 kw["encode_backend"] = ctx.encode_backend
             if ctx.weights_are_mask and codec.scale == "none":
                 kw["weights_are_mask"] = True
+            if ctx.debug_wire and not codec.debug_wire:
+                kw["debug_wire"] = True
             if kw:
                 codec = dataclasses.replace(codec, **kw)
         if codec is self.codec:
@@ -943,6 +1109,20 @@ class Pipeline:
     def decode_mean(self, flat_mean: jax.Array, sigma=None) -> jax.Array:
         return self.codec.decode_mean(
             flat_mean, sigma=(sigma if self._sigma_stage == "codec" else None))
+
+    def decode_sum(self, enc_sum: jax.Array, n_live: jax.Array,
+                   sigma=None) -> jax.Array:
+        """Server estimate from the ``aggregate`` output + live count — the
+        engine's decode entry point. For codecs whose aggregate is the plain
+        masked sum this is ``decode_mean(enc_sum / n_live)`` exactly; codecs
+        with a non-mean law (SignCodec robust ``agg=`` modes, TopKCodec
+        ``agg=coord``) own the full sum -> estimate mapping through their
+        ``decode_sum``."""
+        sig = sigma if self._sigma_stage == "codec" else None
+        dec = getattr(self.codec, "decode_sum", None)
+        if dec is not None:
+            return dec(enc_sum, n_live, sigma=sig)
+        return self.codec.decode_mean(enc_sum / n_live, sigma=sig)
 
     def reduce_across_devices(self, acc: jax.Array,
                               axis_name: str) -> jax.Array:

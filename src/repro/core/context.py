@@ -22,6 +22,12 @@ makes the policy a single frozen value:
   * ``cohort`` — how the round driver walks the cohort: one vmap over all
     clients, or the streaming shard scan that folds each shard's payloads
     into a running wire accumulator (see :class:`CohortPolicy`).
+  * ``debug_wire`` — runtime (checkify) verification of the 0/1-mask
+    membership contract on every popcount/vote reduce; defaults from the
+    ``REPRO_DEBUG_WIRE`` env var.
+  * ``adversary`` — wire-level fault-injection policy (fed/adversary.py
+    spec string) applied by the round driver: sign-flip / byte-corruption /
+    colluding cohorts / mid-round dropout on a deterministic schedule.
 
 ``resolve_backend`` is THE one place an "auto" backend becomes a concrete
 one: the Pallas kernels on TPU, the fused jnp paths elsewhere. Everything
@@ -32,6 +38,7 @@ function.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional
 
 import jax
@@ -257,6 +264,20 @@ class RoundContext:
     #: string: "auto" | "vmap" | "stream" | "stream(shard=K|auto[,unroll=U]
     #: [,devices=D|auto][,feed=device|host])"
     cohort: str = "auto"
+    #: debug-wire mode: insert a runtime checkify assertion that aggregation
+    #: masks honor the 0/1 membership contract before every popcount/vote
+    #: reduce (wire.check_mask_membership). Defaults from the
+    #: REPRO_DEBUG_WIRE env var ("1"/"true" enables). A debug-wire round
+    #: step must run eagerly or be functionalized:
+    #: ``err, out = checkify.checkify(jax.jit(step))(...); err.throw()``.
+    debug_wire: bool = dataclasses.field(
+        default_factory=lambda: os.environ.get(
+            "REPRO_DEBUG_WIRE", "").lower() in ("1", "true", "yes"))
+    #: wire-level fault-injection policy for the round driver — an
+    #: fed/adversary.py spec string: "none" | "sign_flip(f=4)" |
+    #: "byte_corrupt(f=2,p=0.1)" | "collude(f=4)" | "dropout(f=8)"
+    #: (+ schedule args every=/start=/rotate=/seed=)
+    adversary: str = "none"
 
     def __post_init__(self):
         # fail at construction, not at trace time inside the round step —
@@ -266,3 +287,8 @@ class RoundContext:
             if backend is not None:
                 resolve_backend(kind, backend)
         CohortPolicy.parse(self.cohort)
+        if self.adversary != "none":
+            # validate eagerly; imported lazily to keep core free of a
+            # module-load dependency on the fed layer
+            from repro.fed.adversary import parse_adversary
+            parse_adversary(self.adversary)

@@ -8,8 +8,16 @@ One *round step* is a single jitted function:
         -> compressor.encode  (the bitpacked 1-bit uplink payload)
     -> participation-masked flat aggregation over the client axis
        (uint8 collective + fused weighted sign-reduce == the compressed
-       all-reduce; sign families never re-inflate the dense sign matrix)
-    -> compressor.decode_mean -> unflatten ONCE -> server optimizer update.
+       all-reduce; sign families never re-inflate the dense sign matrix;
+       robust ``agg=vote|trimmed|median`` modes carry the int32 vote pair)
+    -> compressor.decode_sum -> unflatten ONCE -> server optimizer update.
+
+RoundContext.adversary threads a wire-level fault-injection policy
+(fed/adversary.py) through every cohort plan: mid-round dropout is applied
+to the slot mask at the top of the round; payload attacks (sign-flip, byte
+corruption, collusion) hit each shard's encoded uint8 stack inside
+``group_encode``, selected by GLOBAL client index + round counter so the
+attack is bit-identical under vmap, stream(shard=K) and stream(devices=D).
 
 The engine never touches per-leaf encodings: every compression Pipeline
 (core/compression.py) speaks the flat wire-buffer codec of core/wire.py, so
@@ -302,8 +310,17 @@ def iter_shards(batch, mask, cstate, *, shard: int, total: int):
 
 def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
                       dynamic_sigma: bool, legacy_client_path: bool,
-                      spmd_axes, constrain_wire: Callable) -> RoundMath:
-    """Build the round-math half: per-shard client compute, no scheduling."""
+                      spmd_axes, constrain_wire: Callable,
+                      adversary=None) -> RoundMath:
+    """Build the round-math half: per-shard client compute, no scheduling.
+
+    ``adversary`` is a bound fed/adversary.py policy (or None): payload
+    attacks are injected in ``group_encode`` on the ENCODED wire stack —
+    after the client encode, before aggregation and state masking — so an
+    EF client's residual tracks what it MEANT to send (wire-transit
+    corruption semantics) and every cohort plan sees the identical attack
+    (selection is by global client index + round).
+    """
     gamma = cfg.client_lr
 
     def local_sgd(params, client_batch):
@@ -344,10 +361,13 @@ def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
         return enc, new_cstate, loss
 
     def group_encode(spec, params, group_batch, keys, group_cstate, mask_g,
-                     sigma):
+                     sigma, idx_g=None, round_idx=None):
         """One shard of mask_g.shape[0] clients: returns the client-stacked
         payloads (NOT yet aggregated), the participation-masked new state,
-        and the masked loss sum."""
+        and the masked loss sum. ``idx_g`` is the shard's GLOBAL client
+        indices and ``round_idx`` the traced round counter — only consumed
+        by the adversary's payload injection (both optional: shape-probing
+        eval_shape calls skip them; corruption never changes shapes)."""
         cu = lambda *a: client_update(spec, *a)
         if mask_g.shape[0] == 1:
             # sequential-client (big-arch) mode: skip the vmap — a size-1
@@ -369,6 +389,11 @@ def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
                          0 if group_cstate is not None else None, None),
                 spmd_axis_name=spmd_axes,
             )(params, group_batch, keys, group_cstate, sigma)
+        if adversary is not None and idx_g is not None:
+            # wire-transit corruption: the payload stack is attacked AFTER
+            # the honest encode (EF residuals above stay honest) and BEFORE
+            # aggregation/state masking
+            enc = adversary.corrupt(enc, idx_g, round_idx)
         # participation mask: dead clients contribute zero (weight 0 in the
         # aggregate); stateful compressors keep their residual bit-exactly.
         if group_cstate is not None:
@@ -383,10 +408,11 @@ def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
         return enc, new_cstate, loss_sum
 
     def group_round(spec, params, group_batch, keys, group_cstate, mask_g,
-                    sigma):
-        """group_encode + masked aggregation to one flat fp32 SUM buffer."""
+                    sigma, idx_g=None, round_idx=None):
+        """group_encode + masked aggregation to one flat SUM accumulator."""
         enc, new_cstate, loss_sum = group_encode(
-            spec, params, group_batch, keys, group_cstate, mask_g, sigma)
+            spec, params, group_batch, keys, group_cstate, mask_g, sigma,
+            idx_g, round_idx)
         enc_sum = constrain_wire(
             compressor.aggregate(enc, mask_g, spec.n_coords))
         return enc_sum, new_cstate, loss_sum
@@ -471,15 +497,21 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
     gamma = cfg.client_lr
     constrain = param_constraint or (lambda t: t)
     constrain_wire = wire_constraint or (lambda f: f)
+    total = cfg.client_groups * cfg.n_clients
+    adversary = None
+    if getattr(ctx, "adversary", "none") != "none":
+        from repro.fed.adversary import parse_adversary
+        adversary = parse_adversary(ctx.adversary)
+        if adversary is not None:
+            adversary = adversary.bind(total)
     math = _build_round_math(
         loss_fn, compressor, cfg, dynamic_sigma=ctx.dynamic_sigma,
         legacy_client_path=ctx.legacy_client_path, spmd_axes=spmd_axes,
-        constrain_wire=constrain_wire)
+        constrain_wire=constrain_wire, adversary=adversary)
     dynamic_sigma = ctx.dynamic_sigma
-    total = cfg.client_groups * cfg.n_clients
 
     def stream_cohort(spec, params, batch, mask, cstate, sub, sigma,
-                      shard: int, unroll: int, devices: int = 1):
+                      round_idx, shard: int, unroll: int, devices: int = 1):
         """The streaming massive-cohort executor: reshard the flat cohort
         into ``shard``-client slices, lax.scan them through the round math,
         and FOLD each shard's payload stack into one running wire
@@ -528,8 +560,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
             shard0(s_batch), znoise.client_keys(sub, 0, shard),
             shard0(s_cstate), s_mask[0])
 
-        def scan_shards(params_d, sub_d, sigma_d, idx_d, batch_d, cstate_d,
-                        mask_d, constrain_acc):
+        def scan_shards(params_d, sub_d, sigma_d, round_d, idx_d, batch_d,
+                        cstate_d, mask_d, constrain_acc):
             acc0 = jnp.zeros(agg_shape.shape, agg_shape.dtype)
 
             def body(carry, xs):
@@ -542,9 +574,11 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 keys_s = znoise.client_keys(sub_d,
                                             g_idx * jnp.uint32(shard),
                                             shard)
+                idx_s = (g_idx.astype(jnp.int32) * shard
+                         + jnp.arange(shard, dtype=jnp.int32))
                 enc, new_cstate_s, loss_s = math.group_encode(
                     spec, params_d, batch_s, keys_s, cstate_s, mask_s,
-                    sigma_d)
+                    sigma_d, idx_s, round_d)
                 acc = constrain_acc(compressor.aggregate(
                     enc, mask_s, spec.n_coords, acc=acc))
                 return (acc, loss_acc + loss_s), new_cstate_s
@@ -555,22 +589,23 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
 
         if devices <= 1:
             (enc_sum, loss_sum), cstate_sh = scan_shards(
-                params, sub, sigma, s_idx, s_batch, s_cstate, s_mask,
-                constrain_wire)
+                params, sub, sigma, round_idx, s_idx, s_batch, s_cstate,
+                s_mask, constrain_wire)
         else:
             mesh = Mesh(np.asarray(jax.devices()[:devices]), ("clients",))
             rep, shd = P(), P("clients")
 
-            def per_device(params_d, sub_d, sigma_d, idx_d, batch_d,
-                           cstate_d, mask_d):
+            def per_device(params_d, sub_d, sigma_d, round_d, idx_d,
+                           batch_d, cstate_d, mask_d):
                 # launcher wire constraints name OUTER mesh axes — they
                 # cannot apply inside the shard body; the post-psum result
                 # is constrained by the caller instead
                 (acc, loss), cstate_out = scan_shards(
-                    params_d, sub_d, sigma_d, idx_d, batch_d, cstate_d,
-                    mask_d, lambda a: a)
-                # THE cross-device reduce: one O(d) fp32 psum of the local
-                # wire accumulators — compressed-domain all the way; the
+                    params_d, sub_d, sigma_d, round_d, idx_d, batch_d,
+                    cstate_d, mask_d, lambda a: a)
+                # THE cross-device reduce: one O(<= 2d) psum of the local
+                # wire accumulators (f32 sum, or the int32 vote pair for
+                # robust agg=) — compressed-domain all the way; the
                 # per-client payload stack never crosses the interconnect
                 if hasattr(compressor, "reduce_across_devices"):
                     acc = compressor.reduce_across_devices(acc, "clients")
@@ -581,10 +616,11 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
 
             enc_sum, loss_sum, cstate_sh = shard_map(
                 per_device, mesh=mesh,
-                in_specs=(rep, rep, rep, shd, shd, shd, shd),
+                in_specs=(rep, rep, rep, rep, shd, shd, shd, shd),
                 out_specs=(rep, rep, shd),
                 check_rep=False,
-            )(params, sub, sigma, s_idx, s_batch, s_cstate, s_mask)
+            )(params, sub, sigma, jnp.asarray(round_idx, jnp.int32), s_idx,
+              s_batch, s_cstate, s_mask)
             enc_sum = constrain_wire(enc_sum)
         if cstate_sh is None:
             new_cstate = None
@@ -602,16 +638,23 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         sigma = state.sigma
         plan = resolve_cohort(cohort_policy, total, spec.n_coords,
                               spmd_axes)
+        if adversary is not None:
+            # mid-round dropout fires on the FULL slot mask before anything
+            # else, so n_live, loss weighting and state masking all agree
+            mask = adversary.drop_mask(jnp.asarray(mask, jnp.float32),
+                                       state.round)
 
         if plan.mode == "stream":
             enc_sum, new_cstate, loss_sum = stream_cohort(
                 spec, state.params, batch, mask, state.comp_state, sub,
-                sigma, plan.shard, plan.unroll, plan.devices)
+                sigma, state.round, plan.shard, plan.unroll, plan.devices)
         else:
             # per-client keys by global index — identical to the streaming
             # derivation, so the two plans are interchangeable mid-training
             all_keys = znoise.client_keys(sub, 0, total).reshape(
                 cfg.client_groups, cfg.n_clients, -1)
+            g_indices = jnp.arange(total, dtype=jnp.int32).reshape(
+                cfg.client_groups, cfg.n_clients)
             if cfg.client_groups == 1:
                 g_batch = jax.tree.map(lambda x: x[0], batch)
                 g_cstate = (None if state.comp_state is None
@@ -619,7 +662,7 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                                               state.comp_state))
                 enc_sum, new_cstate_g, loss_sum = math.group_round(
                     spec, state.params, g_batch, all_keys[0], g_cstate,
-                    mask[0], sigma)
+                    mask[0], sigma, g_indices[0], state.round)
                 new_cstate = (None if new_cstate_g is None
                               else jax.tree.map(lambda x: x[None],
                                                 new_cstate_g))
@@ -637,15 +680,15 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 # and the server runs ONE aggregate over the (G*N, ...)
                 # stack — no per-group dense f32 partials ever exist.
                 def body(loss_acc, xs):
-                    g_batch, keys_g, cstate_g, mask_g = xs
+                    g_batch, keys_g, cstate_g, mask_g, idx_g = xs
                     enc, new_cstate_g, loss_sum = math.group_encode(
                         spec, state.params, g_batch, keys_g, cstate_g,
-                        mask_g, sigma)
+                        mask_g, sigma, idx_g, state.round)
                     return loss_acc + loss_sum, (enc, new_cstate_g)
 
                 loss_sum, (enc_stack, new_cstate) = jax.lax.scan(
                     body, jnp.zeros(()),
-                    (batch, all_keys, state.comp_state, mask))
+                    (batch, all_keys, state.comp_state, mask, g_indices))
                 gn = cfg.client_groups * cfg.n_clients
                 enc_all = jax.tree.map(
                     lambda e: e.reshape((gn,) + e.shape[2:]), enc_stack)
@@ -658,10 +701,10 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 # f32)
                 def body(carry, xs):
                     enc_acc, loss_acc = carry
-                    g_batch, keys_g, cstate_g, mask_g = xs
+                    g_batch, keys_g, cstate_g, mask_g, idx_g = xs
                     enc_sum, new_cstate_g, loss_sum = math.group_round(
                         spec, state.params, g_batch, keys_g, cstate_g,
-                        mask_g, sigma)
+                        mask_g, sigma, idx_g, state.round)
                     return ((enc_acc + enc_sum, loss_acc + loss_sum),
                             new_cstate_g)
 
@@ -675,7 +718,7 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 zero_enc = jnp.zeros(agg_shape.shape, agg_shape.dtype)
                 (enc_sum, loss_sum), new_cstate = jax.lax.scan(
                     body, (zero_enc, jnp.zeros(())),
-                    (batch, all_keys, state.comp_state, mask))
+                    (batch, all_keys, state.comp_state, mask, g_indices))
 
         return _finish(state, spec, rng, sigma, enc_sum, new_cstate,
                        loss_sum, mask, plan.shard)
@@ -683,8 +726,16 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
     def _finish(state, spec, rng, sigma, enc_sum, new_cstate, loss_sum,
                 mask, shard_used):
         n_live = jnp.maximum(jnp.sum(mask), 1.0)
-        g_flat = constrain_wire(compressor.decode_mean(
-            enc_sum / n_live, sigma=sigma if dynamic_sigma else None))
+        sig = sigma if dynamic_sigma else None
+        if hasattr(compressor, "decode_sum"):
+            # the codec owns the full sum -> estimate mapping (robust agg=
+            # modes decode the int32 vote pair; mean laws divide by n_live)
+            g_flat = constrain_wire(
+                compressor.decode_sum(enc_sum, n_live, sigma=sig))
+        else:
+            # duck-typed legacy compressors: the mean law, spelled out
+            g_flat = constrain_wire(
+                compressor.decode_mean(enc_sum / n_live, sigma=sig))
         # the ONE unflatten: decoded flat estimate -> params-shaped pytree
         g_hat = constrain(spec.unflatten(g_flat))
         # Algorithm 1 line 15: x_t = x_{t-1} - eta * gamma * mean(Delta)
@@ -711,12 +762,15 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         # as a traced uint32 scalar so every shard reuses the same trace
         key = (shard, spec.n_coords)
         if key not in shard_fns:
-            def fn(params, sub, sigma, s_idx, batch_s, cstate_s, mask_s,
-                   acc, loss_acc):
+            def fn(params, sub, sigma, round_idx, s_idx, batch_s, cstate_s,
+                   mask_s, acc, loss_acc):
                 keys_s = znoise.client_keys(sub, s_idx * jnp.uint32(shard),
                                             shard)
+                idx_s = (s_idx.astype(jnp.int32) * shard
+                         + jnp.arange(shard, dtype=jnp.int32))
                 enc, new_cstate_s, loss_s = math.group_encode(
-                    spec, params, batch_s, keys_s, cstate_s, mask_s, sigma)
+                    spec, params, batch_s, keys_s, cstate_s, mask_s, sigma,
+                    idx_s, round_idx)
                 acc = constrain_wire(compressor.aggregate(
                     enc, mask_s, spec.n_coords, acc=acc))
                 return acc, loss_acc + loss_s, new_cstate_s
@@ -736,6 +790,10 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         rng, sub = jax.random.split(state.rng)
         sigma = state.sigma
         stateful = state.comp_state is not None
+        if adversary is not None:
+            # eager host step: materialize the dropped mask before slicing
+            mask = np.asarray(adversary.drop_mask(
+                jnp.asarray(mask, jnp.float32), state.round))
 
         gen = iter_shards(batch, mask, state.comp_state, shard=shard,
                           total=total)
@@ -753,8 +811,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
             # double buffer: upload shard s+1 (async dispatch) before
             # launching shard s's compute ...
             nxt = jax.device_put(next(gen)) if s + 1 < n_shards else None
-            acc, loss_sum, rows = fn(state.params, sub, sigma, *cur, acc,
-                                     loss_sum)
+            acc, loss_sum, rows = fn(state.params, sub, sigma, state.round,
+                                     *cur, acc, loss_sum)
             # ... and drain shard s-1's finished state rows to host while
             # shard s computes, so only one shard's tensors stay on device
             if stateful and prev_rows is not None:

@@ -44,6 +44,7 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import checkify
 
 
 @dataclasses.dataclass(frozen=True)
@@ -258,8 +259,33 @@ def unpack_sum(packed: jax.Array, weights: jax.Array,
     return jnp.swapaxes(a, 0, 1).reshape(-1)
 
 
+def check_mask_membership(mask: jax.Array) -> None:
+    """Runtime assertion of the 0/1 membership contract (debug-wire mode).
+
+    The popcount/vote paths are only correct for masks that are EXACTLY 0.0
+    or 1.0 per entry — the static ``weights_are_mask`` guarantee. This is the
+    dynamic counterpart, inserted when ``RoundContext(debug_wire=True)`` (or
+    ``REPRO_DEBUG_WIRE=1``) is set: a ``checkify.check`` over the traced mask
+    values. Called eagerly it raises immediately on violation; under ``jit``
+    the caller must functionalize the check, i.e. wrap the jitted step as
+    ``err, out = checkify.checkify(jax.jit(step))(...); err.throw()`` — the
+    train/dryrun launchers and the CI attacks job do exactly that. A bare
+    ``jax.jit`` around a debug-wire step fails at trace time with checkify's
+    "not functionalized" error, which is intentional: debug mode refuses to
+    run unchecked.
+    """
+    m = jnp.asarray(mask)
+    ok = jnp.all((m == 0.0) | (m == 1.0))
+    checkify.check(ok, "debug_wire: mask violates the 0/1 membership "
+                       "contract required by the popcount/vote paths "
+                       "(weights_are_mask) — found fractional or negative "
+                       "weights. Use weights_are_mask=False (LUT path) for "
+                       "weighted aggregation.")
+
+
 def unpack_sum_mask(packed: jax.Array, mask: jax.Array,
-                    acc: jax.Array | None = None) -> jax.Array:
+                    acc: jax.Array | None = None, *,
+                    debug: bool = False) -> jax.Array:
     """(n_clients, n_bytes) u8, (n_clients,) 0/1 mask -> (8*n_bytes,) f32
     masked sum of the +/-1 signs — the popcount fast path.
 
@@ -290,7 +316,31 @@ def unpack_sum_mask(packed: jax.Array, mask: jax.Array,
     launchers, whose participation sampler emits exact 0/1) flips the
     sign-family compressors' flag and ``compression.sign_reduce`` then
     routes its jnp backend through this popcount path. Weighted calls (EF
-    mask * scale, data-size weights) keep the LUT path.
+    mask * scale, data-size weights) keep the LUT path. ``debug=True`` adds
+    the dynamic membership assertion (:func:`check_mask_membership`) on top
+    of the static gate.
+    """
+    if debug:
+        check_mask_membership(mask)
+    bitsum = _mask_bit_count(packed, mask).astype(jnp.float32)
+    out = 2.0 * bitsum - jnp.sum(mask)
+    return out if acc is None else acc + out
+
+
+def _mask_bit_count(packed: jax.Array, mask: jax.Array) -> jax.Array:
+    """(n_clients, n_bytes) u8 + (n_clients,) 0/1 mask -> (8*n_bytes,)
+    per-coordinate count of set bits across live clients (integer dtype).
+
+    The shared popcount core of :func:`unpack_sum_mask` and
+    :func:`vote_accumulator`. The cross-block accumulator stays uint8 only
+    while EVERY physically settable bit fits: after zero-padding clients to
+    the 8-row block boundary there are ``n + (-n) % 8`` block rows, and
+    although the pad rows are zeroed today, the safe bound is the padded row
+    count — u8 accumulation is used only when ``n + (-n) % 8 <= 255``
+    (i.e. n <= 248), int32 otherwise. (The previous ``n <= 255`` bound
+    leaned on the pad rows staying zero; this one is safe for any bit the
+    buffer can hold. Regression-pinned at the boundary in
+    tests/test_sign_reduce.py.)
     """
     n, n_bytes = packed.shape
     pm = packed * (mask > 0).astype(jnp.uint8)[:, None]
@@ -300,12 +350,91 @@ def unpack_sum_mask(packed: jax.Array, mask: jax.Array,
     n_blocks = (n + cpad) // 8
     planes = _bit_transpose_blocks(pm, n_blocks, n_bytes)
     cnt = jax.lax.population_count(planes)          # (blocks, 8, n_bytes) u8
-    acc_dtype = jnp.uint8 if n <= 255 else jnp.int32
+    acc_dtype = jnp.uint8 if n + cpad <= 255 else jnp.int32
     c = jnp.sum(cnt, axis=0, dtype=acc_dtype) if n_blocks > 1 else cnt[0]
     # c[k, byte] counts set bit-k across live clients; coord = byte*8 + k
-    bitsum = jnp.swapaxes(c, 0, 1).reshape(-1).astype(jnp.float32)
-    out = 2.0 * bitsum - jnp.sum(mask)
-    return out if acc is None else acc + out
+    return jnp.swapaxes(c, 0, 1).reshape(-1)
+
+
+#: Robust sign-aggregation modes decodable from the (signed_count, n_live)
+#: vote pair — see :func:`vote_accumulator` / :func:`vote_decode`.
+VOTE_AGG_MODES = ("mean", "vote", "trimmed", "median")
+
+
+def vote_accumulator(packed: jax.Array, mask: jax.Array,
+                     acc: jax.Array | None = None, *,
+                     debug: bool = False) -> jax.Array:
+    """(n_clients, n_bytes) u8 + (n_clients,) 0/1 mask -> (2, 8*n_bytes)
+    int32 VOTE PAIR: row 0 the per-coordinate signed vote count
+    ``s = sum_live sign_i`` (= 2*count - n_live), row 1 the live count
+    ``n_live`` (broadcast per coordinate).
+
+    The integer sufficient statistic for EVERY robust sign aggregate: for
+    +/-1 votes, mean, majority vote, coordinate-wise trimmed(f) mean, and
+    coordinate-wise median are all closed-form post-processings of
+    ``(s, n_live)`` — see :func:`vote_decode`. Because both rows are plain
+    integer SUMS over clients, the pair
+
+      * folds additively across streamed client shards (``acc`` carries the
+        running pair; bit-exact for any shard size — integer arithmetic),
+      * crosses devices in the SAME single ``lax.psum`` as the mean path
+        (:func:`psum_accumulator` on the int32 pair, O(2d) on the wire),
+      * never inflates to an (n_clients, d) matrix — same ~24 u8 passes as
+        :func:`unpack_sum_mask` plus one subtract.
+
+    Requires the 0/1 membership contract (weights_are_mask); fractional
+    weights have no integer vote-count semantics. ``debug=True`` adds the
+    dynamic assertion of that contract.
+    """
+    if debug:
+        check_mask_membership(mask)
+    bitsum = _mask_bit_count(packed, mask).astype(jnp.int32)
+    n_live = jnp.sum(mask).astype(jnp.int32)
+    pair = jnp.stack([2 * bitsum - n_live,
+                      jnp.broadcast_to(n_live, bitsum.shape)])
+    return pair if acc is None else acc + pair
+
+
+def vote_decode(pair: jax.Array, agg: str, trim_f: int = 0) -> jax.Array:
+    """(2, d) int32 vote pair -> (d,) f32 robust aggregate in [-1, 1].
+
+    Closed forms from ``s = pair[0]`` (signed count) and ``n = pair[1]``
+    (live count), with ``c = (s + n) / 2`` the number of +1 votes (always
+    integral: s and n have equal parity, preserved by additive folds):
+
+      mean        s / n                      (the plain masked sign mean)
+      vote        sign(s)                    (coordinate majority; 0 at tie)
+      trimmed(f)  drop the f largest and f smallest votes, average the
+                  m = n - 2f survivors. Sorting +/-1 votes puts the -1s
+                  first, so the survivors keep plus' = clip(c - f, 0, m)
+                  of the +1 votes: (2*plus' - m) / m. When a round is
+                  over-trimmed (n <= 2f) the trim level degrades to the
+                  deepest possible, f_eff = (n - 1) // 2 — i.e. the median.
+      median      trimmed with runtime f = (n - 1) // 2 — for +/-1 votes
+                  this equals sign(s) for odd n and the 0-at-tie midpoint
+                  rule for even n (identical to vote in value; kept as a
+                  separate mode for the standard robust-aggregation name).
+
+    trimmed(0) is EXACTLY the mean. All-dead coordinates (n_live = 0)
+    decode to 0 in every mode. Everything here is integer-derived, so the
+    result is bit-identical to the dense-matrix oracle
+    (tests/test_robust_agg.py).
+    """
+    if agg not in VOTE_AGG_MODES:
+        raise ValueError(f"unknown vote agg mode {agg!r}; expected one of "
+                         f"{VOTE_AGG_MODES}")
+    s = pair[0].astype(jnp.float32)
+    n = pair[1].astype(jnp.float32)
+    if agg == "mean":
+        return s / jnp.maximum(n, 1.0)
+    if agg == "vote":
+        return jnp.sign(s)
+    f_max = jnp.floor((jnp.maximum(n, 1.0) - 1.0) / 2.0)
+    f = f_max if agg == "median" else jnp.minimum(jnp.float32(trim_f), f_max)
+    c = (s + n) * 0.5
+    m = jnp.maximum(n - 2.0 * f, 1.0)
+    plus = jnp.clip(c - f, 0.0, m)
+    return jnp.where(n > 0, (2.0 * plus - m) / m, 0.0)
 
 
 def dense_masked_sum(payload: jax.Array, weights: jax.Array,
@@ -361,9 +490,11 @@ def unpack_sum_dense(packed: jax.Array, weights: jax.Array,
 def psum_accumulator(acc: jax.Array, axis_name: str) -> jax.Array:
     """Cross-device reduce of a wire ACCUMULATOR over a named mesh axis.
 
-    Every codec's ``aggregate`` is a linear fp32 SUM over its client axis,
+    Every codec's ``aggregate`` is a linear SUM over its client axis,
     so per-device partial accumulators combine by plain addition — one
-    ``lax.psum`` of the (d,)-sized (or (d_pad,)-sized) f32 buffer is the
+    ``lax.psum`` of the (d,)-sized (or (d_pad,)-sized) f32 buffer — or, for
+    the robust ``agg=vote|trimmed|median`` modes, of the (2, d_pad) int32
+    vote pair (:func:`vote_accumulator`) — is the
     entire cross-device protocol of a streamed multi-device round. Per
     device that is O(d) fp32 on the interconnect, independent of cohort
     size: the compressed-domain analogue of the server all-reduce, and the

@@ -1,0 +1,239 @@
+"""Wire-level Byzantine fault injection for federated round drivers.
+
+An :class:`Adversary` is a deterministic, jit-traceable corruption policy
+applied at the two places a real attacker acts:
+
+  * the PARTICIPATION mask (``drop_mask``) — mid-round dropout: scheduled
+    clients that would have participated go dark, so their votes, loss
+    contribution and state updates all vanish consistently;
+  * the uint8 PAYLOAD stack (``corrupt``) — what a Byzantine client puts on
+    the wire AFTER honest-looking local training: sign-flips, random byte
+    corruption, or a colluding cohort that replaces its payloads with one
+    shared adversarial pattern.
+
+Corruption happens on the ENCODED wire bytes, after the client encode and
+before aggregation/state masking — transit-level semantics. An EF client's
+residual is therefore computed against what it MEANT to send (the honest
+payload), exactly as a real man-in-the-middle or a malicious client lying
+on the wire would leave it.
+
+Determinism and plan-invariance: which clients are corrupt in a round
+depends only on (global client index, round index, seed) — never on the
+cohort plan — so the same attack hits the same clients bit-for-bit under
+vmap, ``stream(shard=K)`` and ``stream(devices=D)``. The byte-corruption
+randomness is counter-style (``fold_in(fold_in(key, round), client)``),
+so it is shard- and device-placement-invariant too. Stream-padding slots
+(index >= total clients) are never selected.
+
+Spec grammar (the ``--adversary`` CLI flag / ``RoundContext.adversary``)::
+
+    none
+    sign_flip(f=4)                      # clients 0..3 send -sign(x)
+    byte_corrupt(f=2,p=0.1)             # 2 clients, each byte hit w.p. 0.1
+    collude(f=4)                        # 4 clients send ONE shared pattern
+    dropout(f=8)                        # 8 would-be participants go dark
+    sign_flip(f=4,every=2,start=10)     # rounds 10, 12, 14, ...
+    sign_flip(f=4,rotate=true,seed=7)   # membership rotates each round
+
+``f`` is the corrupt-cohort size; ``every``/``start`` schedule the attack
+(active when ``round >= start`` and ``(round - start) % every == 0``);
+``rotate`` slides the corrupt set by ``f`` slots per round (needs the
+total-client bound the round engine supplies via :meth:`Adversary.bind`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Adversary", "parse_adversary", "ADVERSARY_KINDS"]
+
+#: recognized attack kinds. "dropout" acts on the mask; the others on the
+#: encoded payload stack.
+ADVERSARY_KINDS = ("sign_flip", "byte_corrupt", "collude", "dropout")
+
+
+@dataclasses.dataclass(frozen=True)
+class Adversary:
+    """One deterministic fault-injection policy (see module docstring)."""
+    kind: str
+    #: corrupt-cohort size (clients per active round)
+    f: int = 1
+    #: per-byte corruption probability (byte_corrupt only)
+    p: float = 0.05
+    #: attack fires every this many rounds ...
+    every: int = 1
+    #: ... starting at this round
+    start: int = 0
+    #: slide the corrupt set by f slots per round (else clients 0..f-1)
+    rotate: bool = False
+    #: PRNG seed for byte/collude payload randomness
+    seed: int = 0
+    #: total client slots — bound by the round engine (:meth:`bind`); the
+    #: modulus for rotation and the guard against corrupting pad slots
+    total: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ADVERSARY_KINDS:
+            raise ValueError(f"unknown adversary kind {self.kind!r}; "
+                             f"expected one of {ADVERSARY_KINDS} or 'none'")
+        if self.f < 1:
+            raise ValueError(f"adversary needs f >= 1 corrupt clients, got "
+                             f"f={self.f} (use 'none' for no attack)")
+        if self.every < 1 or self.start < 0:
+            raise ValueError(f"bad schedule: every={self.every} (>= 1), "
+                             f"start={self.start} (>= 0)")
+        if self.kind == "byte_corrupt" and not 0.0 < self.p <= 1.0:
+            raise ValueError(f"byte_corrupt needs 0 < p <= 1, got {self.p}")
+
+    # -- engine binding ------------------------------------------------------
+
+    def bind(self, total: int) -> "Adversary":
+        """Bind the deployment's total client-slot count (rotation modulus
+        + pad-slot guard). Called once by ``fedavg.build_round_step``."""
+        if total < 1:
+            raise ValueError(f"total client slots must be >= 1, got {total}")
+        if self.f >= max(total, 1) and self.kind != "dropout":
+            # f >= n corrupts every client; allowed for dropout (the mask
+            # guard keeps one live client) but meaningless for payload
+            # attacks under any robust aggregator — refuse loudly
+            raise ValueError(f"adversary f={self.f} corrupts every one of "
+                             f"{total} client slots; robust aggregation "
+                             f"requires f < n/2")
+        return dataclasses.replace(self, total=total)
+
+    # -- round-indexed selection --------------------------------------------
+
+    def _selected(self, idx: jax.Array, round_idx: jax.Array) -> jax.Array:
+        """Boolean per slot: is this GLOBAL client index corrupt this round?
+        Deterministic in (idx, round_idx) only — plan/placement-invariant."""
+        if self.total < 1:
+            raise ValueError("adversary is unbound — the engine must call "
+                             "bind(total_clients) before tracing")
+        idx = idx.astype(jnp.int32)
+        r = jnp.asarray(round_idx, jnp.int32)
+        active = (r >= self.start) & ((r - self.start) % self.every == 0)
+        if self.rotate:
+            sel = (idx - r * self.f) % self.total < self.f
+        else:
+            sel = idx < self.f
+        return sel & (idx < self.total) & active
+
+    # -- the two injection hooks --------------------------------------------
+
+    def drop_mask(self, mask: jax.Array, round_idx: jax.Array) -> jax.Array:
+        """Mid-round dropout: zero scheduled slots out of the participation
+        mask. Identity for payload-attack kinds. ``mask`` is the engine's
+        full (groups, n_clients) slot mask; slot (g, i) has global index
+        g * n_clients + i."""
+        if self.kind != "dropout":
+            return mask
+        idx = jnp.arange(mask.size, dtype=jnp.int32).reshape(mask.shape)
+        return jnp.where(self._selected(idx, round_idx),
+                         jnp.zeros_like(mask), mask)
+
+    def corrupt(self, payload, idx: jax.Array, round_idx: jax.Array):
+        """Apply the payload attack to one group's encoded payload stack.
+
+        ``payload`` is whatever the codec put on the wire, with a leading
+        client axis matching ``idx`` (the GLOBAL indices of those clients):
+        a bitpacked (n, n_bytes) uint8 array, a {"packed", "scale"} dict, a
+        COO {"values", "indices"} dict, or a dense (n, d) f32 stack.
+        Identity for the dropout kind (that attack acts on the mask).
+        """
+        if self.kind == "dropout":
+            return payload
+        sel = self._selected(idx, round_idx)
+        if isinstance(payload, dict):
+            if "packed" in payload:
+                out = dict(payload)
+                out["packed"] = self._corrupt_packed(payload["packed"], sel,
+                                                     idx, round_idx)
+                return out
+            if "values" in payload:
+                if self.kind != "sign_flip":
+                    raise ValueError(
+                        f"adversary kind {self.kind!r} targets the bitpacked "
+                        f"uint8 wire; the sparse COO payload only supports "
+                        f"sign_flip (value negation)")
+                out = dict(payload)
+                out["values"] = jnp.where(sel[:, None], -payload["values"],
+                                          payload["values"])
+                return out
+            raise ValueError(f"unrecognized payload dict keys "
+                             f"{sorted(payload)} for adversary injection")
+        arr = jnp.asarray(payload)
+        if arr.dtype == jnp.uint8:
+            return self._corrupt_packed(arr, sel, idx, round_idx)
+        if self.kind != "sign_flip":
+            raise ValueError(
+                f"adversary kind {self.kind!r} targets the bitpacked uint8 "
+                f"wire; dense f32 payloads only support sign_flip")
+        return jnp.where(sel.reshape((-1,) + (1,) * (arr.ndim - 1)),
+                         -arr, arr)
+
+    def _corrupt_packed(self, packed: jax.Array, sel: jax.Array,
+                        idx: jax.Array, round_idx: jax.Array) -> jax.Array:
+        u8 = jnp.uint8
+        n_bytes = packed.shape[-1]
+        if self.kind == "sign_flip":
+            # every sign inverted: XOR the whole bitfield
+            return jnp.where(sel[:, None], packed ^ u8(0xFF), packed)
+        rkey = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                  jnp.asarray(round_idx, jnp.int32))
+        if self.kind == "collude":
+            # the coordinated attack: every colluder transmits the SAME
+            # adversarially chosen direction, drawn fresh each round
+            patt = jax.random.randint(rkey, (n_bytes,), 0, 256, dtype=u8)
+            return jnp.where(sel[:, None], patt[None, :], packed)
+        # byte_corrupt: per-client counter-derived randomness, so the hit
+        # pattern is identical under any shard/device partition
+        def row(i):
+            kb, kv = jax.random.split(
+                jax.random.fold_in(rkey, i.astype(jnp.int32)))
+            hit = jax.random.bernoulli(kb, self.p, (n_bytes,))
+            rnd = jax.random.randint(kv, (n_bytes,), 0, 256, dtype=u8)
+            return hit, rnd
+        hit, rnd = jax.vmap(row)(idx)
+        return jnp.where(sel[:, None] & hit, rnd, packed)
+
+
+def parse_adversary(spec: str):
+    """Adversary spec string -> :class:`Adversary`, or None for "none".
+
+    Grammar: ``kind`` or ``kind(k=v,...)`` with kinds sign_flip |
+    byte_corrupt | collude | dropout and args f=, p=, every=, start=,
+    rotate=, seed= (see module docstring for semantics and examples).
+    """
+    s = spec.strip()
+    if s in ("", "none"):
+        return None
+    if "(" not in s:
+        return Adversary(kind=s)
+    if not s.endswith(")"):
+        raise ValueError(f"malformed adversary spec {spec!r}")
+    kind, args = s[:-1].split("(", 1)
+    kw = {}
+    for part in filter(None, (p.strip() for p in args.split(","))):
+        if "=" not in part:
+            raise ValueError(f"adversary argument {part!r} in {spec!r} must "
+                             f"be key=value")
+        k, v = (x.strip() for x in part.split("=", 1))
+        if k not in ("f", "p", "every", "start", "rotate", "seed"):
+            raise ValueError(f"unknown adversary argument {k!r} in {spec!r}; "
+                             f"expected f=, p=, every=, start=, rotate= or "
+                             f"seed=")
+        if k == "rotate":
+            if v.lower() not in ("true", "false", "1", "0"):
+                raise ValueError(f"rotate must be true/false, got {v!r}")
+            kw[k] = v.lower() in ("true", "1")
+        elif k == "p":
+            kw[k] = float(v)
+        else:
+            try:
+                kw[k] = int(v)
+            except ValueError:
+                raise ValueError(f"adversary argument {part!r} in {spec!r} "
+                                 f"must be an integer") from None
+    return Adversary(kind=kind.strip(), **kw)

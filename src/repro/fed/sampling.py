@@ -19,7 +19,10 @@ Two samplers:
     (independent Bernoulli(rate) arrivals, 1/rate weights — the buffered /
     asynchronous-arrival model). Only the uniform tier emits exact 0/1
     weights; the weighted tiers must run with
-    ``RoundContext(weights_are_mask=False)``.
+    ``RoundContext(weights_are_mask=False)`` — which also means the robust
+    ``agg=vote|trimmed|median`` codec policies (membership-count
+    aggregation, core/wire.py vote pair) are only available under uniform
+    sampling: fractional weights are refused at trace time.
 """
 from __future__ import annotations
 

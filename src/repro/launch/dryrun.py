@@ -57,7 +57,8 @@ def _dryrun_model(arch, shape):
 
 
 def build_train_cell(arch, shape, mesh, agg_backend="auto",
-                     encode_backend="auto", cohort="auto"):
+                     encode_backend="auto", cohort="auto",
+                     adversary="none"):
     """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
     arch = __import__("dataclasses").replace(arch, model=_dryrun_model(arch, shape))
     bundle = build_model(arch.model)
@@ -80,7 +81,8 @@ def build_train_cell(arch, shape, mesh, agg_backend="auto",
     rep = SH.replicated(mesh)
 
     ctx = SH.round_context(plan, agg_backend=agg_backend,
-                           encode_backend=encode_backend, cohort=cohort)
+                           encode_backend=encode_backend, cohort=cohort,
+                           adversary=adversary)
     step = fedavg.build_round_step(
         bundle.loss_fn, comp, fcfg, ctx,
         spmd_axes=(plan.client_axes if plan.client_axes else None),
@@ -341,7 +343,7 @@ def analyze(fn, arg_shapes, mesh, label: str) -> dict:
 
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
              agg_backend: str = "auto", encode_backend: str = "auto",
-             cohort: str = "auto") -> dict:
+             cohort: str = "auto", adversary: str = "none") -> dict:
     arch = get_arch(arch_id)
     shape = SHAPES[shape_name]
     bundle = build_model(arch.model)
@@ -353,7 +355,8 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     with mesh, sharding_hints(mesh, plan0.seq_axes, plan0.micro_axes):
         if shape.kind == "train":
             fn, args, plan = build_train_cell(arch, shape, mesh, agg_backend,
-                                              encode_backend, cohort)
+                                              encode_backend, cohort,
+                                              adversary)
         elif shape.kind == "prefill":
             fn, args, plan = build_prefill_cell(arch, shape, mesh)
         else:
@@ -395,6 +398,12 @@ def main():
                     help="cohort execution policy: auto | vmap | "
                          "stream(shard=K|auto[,unroll=U][,devices=D|auto]"
                          "[,feed=device|host])")
+    ap.add_argument("--adversary", default="none", metavar="SPEC",
+                    help="wire-level fault-injection policy compiled into "
+                         "the train cell (none | sign_flip(f=..) | "
+                         "byte_corrupt(f=..,p=..) | collude(f=..) | "
+                         "dropout(f=..)) — proves attacks lower/compile on "
+                         "the production mesh")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -410,7 +419,8 @@ def main():
                     res = run_cell(arch_id, shape_name, multi_pod=mp,
                                    agg_backend=args.agg_backend,
                                    encode_backend=args.encode_backend,
-                                   cohort=args.cohort)
+                                   cohort=args.cohort,
+                                   adversary=args.adversary)
                 except Exception as e:  # record the failure, keep sweeping
                     res = {"label": f"{arch_id}/{shape_name}/"
                            f"{'multi' if mp else 'single'}",

@@ -74,7 +74,8 @@ def cohort_plan(n_clients: int, *, client_groups: int = 1, micro: int = 1,
 def round_context(plan: ParallelPlan, *, agg_backend: str = "auto",
                   encode_backend: str = "auto",
                   dynamic_sigma: bool = False,
-                  cohort: str = "auto") -> RoundContext:
+                  cohort: str = "auto",
+                  adversary: str = "none") -> RoundContext:
     """The launcher-standard RoundContext for a parallel plan.
 
     One construction point for every mesh launcher (dryrun, and the shape
@@ -84,13 +85,17 @@ def round_context(plan: ParallelPlan, *, agg_backend: str = "auto",
     exact 0/1 membership masks, so the popcount sign-reduce specialization
     is safe for any plan. ``plan`` is accepted (and currently unused beyond
     documentation) so per-plan policy can key off client topology later
-    without touching call sites.
+    without touching call sites. ``adversary`` threads the wire-level
+    fault-injection policy (fed/adversary.py) into the round step; the
+    launchers' exact 0/1 masks mean every robust ``agg=`` mode is available
+    under it. ``debug_wire`` is left to its REPRO_DEBUG_WIRE env default.
     """
     del plan
     return RoundContext(agg_backend=agg_backend,
                         encode_backend=encode_backend,
                         weights_are_mask=True, dynamic_sigma=dynamic_sigma,
-                        donate_state=True, cohort=cohort)
+                        donate_state=True, cohort=cohort,
+                        adversary=adversary)
 
 
 # ---------------------------------------------------------------------------

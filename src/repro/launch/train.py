@@ -66,6 +66,18 @@ def main():
                          "shard sequence over a D-device 'clients' mesh "
                          "with one O(d) psum; feed=host double-buffers "
                          "shards from host memory (grammar: docs/API.md)")
+    ap.add_argument("--adversary", default="none", metavar="SPEC",
+                    help="wire-level fault-injection policy: 'none', "
+                         "'sign_flip(f=4)', 'byte_corrupt(f=2,p=0.1)', "
+                         "'collude(f=4,rotate=true)', 'dropout(f=8)', with "
+                         "optional every=/start= scheduling — applied to the "
+                         "encoded payload stack (or the participation mask) "
+                         "under every cohort plan (grammar: "
+                         "src/repro/fed/adversary.py, docs/API.md)")
+    ap.add_argument("--debug-wire", action="store_true",
+                    help="runtime-verify the 0/1 mask membership contract "
+                         "before every popcount reduce (checkify-wrapped "
+                         "round step; also via REPRO_DEBUG_WIRE=1)")
     ap.add_argument("--z", type=int, default=1, help="1=Gaussian, 0=uniform")
     ap.add_argument("--sigma", type=float, default=0.01,
                     help="z-sign noise scale / dpgauss noise stddev")
@@ -114,15 +126,31 @@ def main():
     # 0/1 membership masks, so the popcount aggregation specialization is
     # safe. donate_state: params + opt state + residual buffers update in
     # place on device instead of being copied every round.
-    ctx = fedavg.RoundContext(agg_backend=args.agg_backend,
-                              encode_backend=args.encode_backend,
-                              weights_are_mask=True,
-                              dynamic_sigma=args.plateau,
-                              cohort=args.cohort)
+    ctx_kw = dict(agg_backend=args.agg_backend,
+                  encode_backend=args.encode_backend,
+                  weights_are_mask=True,
+                  dynamic_sigma=args.plateau,
+                  cohort=args.cohort,
+                  adversary=args.adversary)
+    if args.debug_wire:  # else keep the REPRO_DEBUG_WIRE env default
+        ctx_kw["debug_wire"] = True
+    ctx = fedavg.RoundContext(**ctx_kw)
+    if ctx.debug_wire and fedavg.CohortPolicy.parse(args.cohort).feed == "host":
+        raise SystemExit("--debug-wire is not supported on stream(feed=host): "
+                         "the host driver jits per-shard kernels internally "
+                         "and cannot functionalize the membership check")
     step = fedavg.build_round_step(bundle.loss_fn, comp, cfg, ctx)
+    checked = None
     if fedavg.CohortPolicy.parse(args.cohort).feed != "host":
-        step = jax.jit(step,
-                       donate_argnums=(0,) if ctx.donate_state else ())
+        if ctx.debug_wire:
+            # debug mode refuses to run unchecked: the membership check is a
+            # checkify.check, so the jitted step must be functionalized and
+            # its error explicitly thrown each round
+            from jax.experimental import checkify
+            checked = checkify.checkify(jax.jit(step))
+        else:
+            step = jax.jit(step,
+                           donate_argnums=(0,) if ctx.donate_state else ())
     # else: stream(feed=host) returns a Python-loop driver that device_puts
     # one shard at a time — it must NOT be jitted (and state donation is
     # meaningless for it; the jitted PER-SHARD kernel is cached inside)
@@ -173,7 +201,11 @@ def main():
             batch["tokens"] = tokens[..., :s_txt]
         mask = jnp.asarray(sampler.mask((args.groups, args.clients)))
         t0 = time.time()
-        state, m = step(state, batch, mask)
+        if checked is not None:
+            err, (state, m) = checked(state, batch, mask)
+            err.throw()
+        else:
+            state, m = step(state, batch, mask)
         loss = float(m.loss)
         bits += float(m.uplink_bits)
         if plateau is not None:

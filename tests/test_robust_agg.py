@@ -1,0 +1,514 @@
+"""Byzantine-robust compressed-domain aggregation + adversary harness suite.
+
+The robust ``agg=`` modes never leave the compressed domain: for ±1 votes
+with a 0/1 participation mask, mean, majority vote, coordinate-wise
+trimmed(f) mean and coordinate-wise median are all closed-form
+post-processings of the carried int32 (signed_count, n_live) vote pair
+(wire.vote_accumulator / wire.vote_decode). This suite pins:
+
+  * the vote pair + every decode law bit-identical to a DENSE ±1 oracle
+    (numpy sort over the per-coordinate live votes) under arbitrary masks
+    and client counts — property-tested;
+  * the additive shard fold: folding the pair at shard sizes 1/7/64 equals
+    the one-shot pair bit-exactly, so every cohort plan agrees;
+  * D in {1, 2, 4, 8} forced host devices: stream(devices=D) rounds are
+    bit-identical to the vmap plan for every robust mode and every
+    adversary (skip when fewer devices are visible);
+  * jaxpr pins: no (n_total, d) f32 buffer on the streaming robust round,
+    and the ONLY cross-device collectives are psums — one int32 pair of
+    size <= 2 * d_pad plus the scalar f32 loss;
+  * fed/adversary.py: deterministic global-index selection (plan- and
+    placement-invariant), scheduling, rotation, payload dispatch, and the
+    convergence smoke — agg=vote survives f < n/2 sign-flippers that
+    demonstrably degrade agg=mean;
+  * the debug-wire membership contract: eager raise on fractional masks,
+    checkify-functionalized jit raise, REPRO_DEBUG_WIRE env pickup.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypo_compat import given, settings, st
+
+from repro.core import compression as C
+from repro.core import fedavg, wire
+from repro.core.context import RoundContext
+from repro.fed.adversary import Adversary, parse_adversary
+
+_DC = jax.device_count()
+
+
+def _devices(d):
+    return pytest.param(
+        d, marks=pytest.mark.skipif(
+            _DC < d, reason=f"needs {d} devices, have {_DC} "
+            "(XLA_FLAGS=--xla_force_host_platform_device_count=8)"))
+
+
+# ---------------------------------------------------------------------------
+# dense ±1 oracle
+# ---------------------------------------------------------------------------
+
+def _dense_signs(packed: np.ndarray) -> np.ndarray:
+    """(n, n_bytes) uint8 -> (n, 8*n_bytes) ±1 f64; coordinate b*8+k is
+    bit k of byte b (the wire's little-endian bit layout)."""
+    bits = np.unpackbits(packed, axis=1, bitorder="little")
+    return bits.astype(np.float64) * 2.0 - 1.0
+
+
+def _oracle_decode(packed, mask, agg, trim_f=0):
+    """Sorted-votes reference for every agg law, coordinate-wise over the
+    LIVE clients only."""
+    signs = _dense_signs(np.asarray(packed))
+    live = signs[np.asarray(mask) > 0]
+    n = live.shape[0]
+    d = signs.shape[1]
+    if n == 0:
+        return np.zeros(d, np.float32)
+    if agg == "mean":
+        return (live.sum(0) / n).astype(np.float32)
+    if agg == "vote":
+        return np.sign(live.sum(0)).astype(np.float32)
+    f_max = (n - 1) // 2
+    f = f_max if agg == "median" else min(trim_f, f_max)
+    srt = np.sort(live, axis=0)
+    kept = srt[f:n - f] if n - 2 * f > 0 else srt[f_max:f_max + 1]
+    return kept.mean(0).astype(np.float32)
+
+
+def _pair(packed, mask, shard=None):
+    if shard is None:
+        return wire.vote_accumulator(packed, mask)
+    acc = None
+    for lo in range(0, packed.shape[0], shard):
+        acc = wire.vote_accumulator(packed[lo:lo + shard],
+                                    mask[lo:lo + shard], acc=acc)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# wire layer: vote pair vs oracle, fold, decode laws
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=70),
+       st.integers(min_value=1, max_value=600),
+       st.integers(min_value=0, max_value=5))
+def test_property_vote_pair_matches_dense_oracle(n, n_bytes, trim_f):
+    rng = np.random.RandomState(n * 977 + n_bytes * 7 + trim_f)
+    packed = jnp.asarray(rng.randint(0, 256, (n, n_bytes)), jnp.uint8)
+    mask = jnp.asarray(rng.randint(0, 2, n).astype(np.float32))
+    pair = np.asarray(_pair(packed, mask))
+    d = 8 * n_bytes
+    signs = _dense_signs(np.asarray(packed))
+    live = signs[np.asarray(mask) > 0]
+    np.testing.assert_array_equal(pair[0][:d], live.sum(0).astype(np.int32))
+    assert (pair[1] == int(mask.sum())).all()
+    for agg in ("mean", "vote", "trimmed", "median"):
+        got = np.asarray(wire.vote_decode(jnp.asarray(pair), agg,
+                                          trim_f=max(trim_f, 1)))[:d]
+        want = _oracle_decode(packed, mask, agg, trim_f=max(trim_f, 1))
+        np.testing.assert_array_equal(got, want, err_msg=agg)
+
+
+@pytest.mark.parametrize("shard", [1, 7, 64])
+def test_vote_pair_shard_fold_bit_exact(shard):
+    """Folding the int32 pair at ANY shard size == the one-shot pair."""
+    rng = np.random.RandomState(shard)
+    packed = jnp.asarray(rng.randint(0, 256, (130, 48)), jnp.uint8)
+    mask = jnp.asarray(rng.randint(0, 2, 130).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(_pair(packed, mask, shard)),
+                                  np.asarray(_pair(packed, mask)))
+
+
+def test_vote_decode_edge_cases():
+    """All-dead coordinates decode to 0; over-trim (n <= 2f) degrades to the
+    median instead of emitting asymmetric junk; trimmed(0) == mean."""
+    pair = jnp.asarray([[0, 3, -3, 1], [0, 3, 3, 3]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(wire.vote_decode(pair, "vote")), [0.0, 1.0, -1.0, 1.0])
+    got = np.asarray(wire.vote_decode(pair, "trimmed", trim_f=50))
+    np.testing.assert_array_equal(
+        got, np.asarray(wire.vote_decode(pair, "median")))
+    assert got[0] == 0.0
+    rng = np.random.RandomState(0)
+    packed = jnp.asarray(rng.randint(0, 256, (9, 16)), jnp.uint8)
+    mask = jnp.ones(9, jnp.float32)
+    pr = _pair(packed, mask)
+    np.testing.assert_array_equal(
+        np.asarray(wire.vote_decode(pr, "trimmed", trim_f=0)),
+        np.asarray(wire.vote_decode(pr, "mean")))
+
+
+# ---------------------------------------------------------------------------
+# spec grammar + validation
+# ---------------------------------------------------------------------------
+
+def test_agg_spec_grammar_roundtrip():
+    for s in ["zsign_packed(agg=vote)", "zsign(agg=trimmed(f=2))",
+              "ef|zsign(agg=vote)", "zsign(agg=median)",
+              "zsign(agg=trimmed,trim_f=3)"]:
+        p = C.Pipeline(s)
+        assert C.Pipeline(p.spec).spec == p.spec, s
+    assert C.Pipeline("zsign(agg=trimmed(f=2))").codec.trim_f == 2
+    # ef's mean_abs convenience default is gated off for robust modes —
+    # mean_abs magnitudes are fractional weights, incompatible with the
+    # weights-are-mask vote pair
+    assert C.Pipeline("ef|zsign(agg=vote)").codec.scale == "none"
+    assert C.Pipeline("ef|zsign").codec.scale == "mean_abs"
+
+
+def test_agg_spec_validation():
+    with pytest.raises(ValueError, match="scale"):
+        C.Pipeline("zsign(agg=vote,scale=mean_abs)")
+    with pytest.raises(ValueError, match="agg"):
+        C.Pipeline("zsign(agg=bogus)")
+    with pytest.raises(ValueError, match="trim_f"):
+        C.Pipeline("zsign(agg=trimmed)")          # needs f >= 1
+    with pytest.raises(ValueError, match="trim_f"):
+        C.Pipeline("zsign(agg=vote,trim_f=2)")    # f only with trimmed
+    with pytest.raises(ValueError):
+        parse_adversary("sign_flip(f=0)")
+    with pytest.raises(ValueError):
+        parse_adversary("warp(f=1)")
+    with pytest.raises(ValueError):
+        parse_adversary("sign_flip(f=two)")
+    with pytest.raises(ValueError, match="f < n/2"):
+        parse_adversary("sign_flip(f=9)").bind(8)
+    with pytest.raises(ValueError, match="adversary"):
+        RoundContext(adversary="warp(f=1)")
+
+
+def test_robust_agg_refuses_fractional_weights():
+    """agg=vote under weights_are_mask=False is a TRACE-TIME error — the
+    vote pair counts memberships, fractional data-size weights cannot ride
+    it silently."""
+    comp = C.Pipeline("zsign(agg=vote)")
+    with pytest.raises(ValueError, match="weights_are_mask"):
+        comp.aggregate(jnp.zeros((4, 8), jnp.uint8), jnp.ones(4), 64)
+
+
+# ---------------------------------------------------------------------------
+# engine: every plan bit-identical, adversaries plan-invariant
+# ---------------------------------------------------------------------------
+
+def _run_rounds(spec, cohort, *, n=16, d=96, rounds=3, adversary="none",
+                mask=None, seed=5):
+    comp = C.Pipeline(spec)
+    cfg = fedavg.FedConfig(n_clients=n, client_lr=0.05, server_lr=0.1)
+    ctx = RoundContext(cohort=cohort, weights_are_mask=True,
+                       adversary=adversary)
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    step = fedavg.build_round_step(loss_fn, comp, cfg, ctx)
+    if "feed=host" not in cohort:
+        step = jax.jit(step)
+    y = jax.random.normal(jax.random.PRNGKey(seed), (1, n, 1, d))
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    mask = jnp.ones((1, n)) if mask is None else mask
+    out = []
+    for _ in range(rounds):
+        st, m = step(st, {"y": y}, mask)
+        out.append(np.asarray(st.params["x"]))
+    return out
+
+
+_MASK16 = jnp.ones((1, 16)).at[0, jnp.asarray([1, 4, 9, 13])].set(0.0)
+
+_ROBUST_SPECS = ["zsign_packed(agg=vote)", "zsign_packed(agg=trimmed(f=2))",
+                 "zsign_packed(agg=median)", "ef|zsign(agg=vote)"]
+
+_ADVERSARIES = ["sign_flip(f=4)", "byte_corrupt(f=2,p=0.2)",
+                "collude(f=4,rotate=true)", "dropout(f=3)",
+                "sign_flip(f=4,every=2,start=1)"]
+
+
+@pytest.mark.parametrize("spec", _ROBUST_SPECS)
+@pytest.mark.parametrize("shard", [1, 7, 64])
+def test_robust_stream_bit_identical_to_vmap(spec, shard):
+    ref = _run_rounds(spec, "vmap", mask=_MASK16)
+    got = _run_rounds(spec, f"stream(shard={shard})", mask=_MASK16)
+    for wr, wg in zip(ref, got):
+        np.testing.assert_array_equal(wr, wg)
+        assert np.isfinite(wr).all()
+
+
+@pytest.mark.parametrize("adv", _ADVERSARIES)
+@pytest.mark.parametrize("shard", [7, 64])
+def test_adversary_plan_invariant(adv, shard):
+    """Attack selection keys on GLOBAL client index + round + seed only, so
+    every cohort plan sees the identical attack bit-for-bit."""
+    ref = _run_rounds("zsign_packed(agg=vote)", "vmap", adversary=adv)
+    got = _run_rounds("zsign_packed(agg=vote)", f"stream(shard={shard})",
+                      adversary=adv)
+    for wr, wg in zip(ref, got):
+        np.testing.assert_array_equal(wr, wg)
+    # and the attack genuinely perturbs the trajectory
+    clean = _run_rounds("zsign_packed(agg=vote)", "vmap")
+    assert any(not np.array_equal(a, b) for a, b in zip(ref, clean)), adv
+
+
+def test_adversary_host_feed_matches_vmap():
+    ref = _run_rounds("zsign_packed(agg=vote)", "vmap",
+                      adversary="sign_flip(f=4)")
+    got = _run_rounds("zsign_packed(agg=vote)", "stream(shard=4,feed=host)",
+                      adversary="sign_flip(f=4)")
+    for wr, wg in zip(ref, got):
+        np.testing.assert_array_equal(wr, wg)
+
+
+@pytest.mark.parametrize("devices", [_devices(1), _devices(2), _devices(4),
+                                     _devices(8)])
+@pytest.mark.parametrize("spec", _ROBUST_SPECS[:1] + _ROBUST_SPECS[2:3])
+def test_robust_multi_device_bit_identical(devices, spec):
+    ref = _run_rounds(spec, "vmap", mask=_MASK16)
+    got = _run_rounds(spec, f"stream(shard=2,devices={devices})",
+                      mask=_MASK16)
+    for wr, wg in zip(ref, got):
+        np.testing.assert_array_equal(wr, wg)
+
+
+@pytest.mark.parametrize("devices", [_devices(2), _devices(4)])
+@pytest.mark.parametrize("adv", _ADVERSARIES)
+def test_adversary_multi_device_invariant(devices, adv):
+    ref = _run_rounds("zsign_packed(agg=vote)", "vmap", adversary=adv)
+    got = _run_rounds("zsign_packed(agg=vote)",
+                      f"stream(shard=2,devices={devices})", adversary=adv)
+    for wr, wg in zip(ref, got):
+        np.testing.assert_array_equal(wr, wg)
+
+
+def test_adversary_selection_deterministic():
+    adv = parse_adversary("collude(f=3,rotate=true,seed=9)").bind(16)
+    idx = jnp.arange(16, dtype=jnp.int32)
+    a = np.asarray(adv._selected(idx, jnp.int32(4)))
+    b = np.asarray(adv._selected(idx, jnp.int32(4)))
+    np.testing.assert_array_equal(a, b)
+    assert a.sum() == 3
+    # rotation slides by f per round (mod total)
+    c = np.asarray(adv._selected(idx, jnp.int32(5)))
+    np.testing.assert_array_equal(np.roll(a, 3), c)
+    # schedule gating
+    sched = parse_adversary("sign_flip(f=4,every=3,start=6)").bind(16)
+    for r, want in [(0, 0), (5, 0), (6, 4), (7, 0), (9, 4)]:
+        assert int(np.asarray(
+            sched._selected(idx, jnp.int32(r))).sum()) == want, r
+
+
+def test_adversary_unbound_refuses():
+    adv = parse_adversary("sign_flip(f=2)")
+    with pytest.raises(ValueError, match="bind"):
+        adv._selected(jnp.arange(4, dtype=jnp.int32), jnp.int32(0))
+
+
+def test_adversary_payload_dispatch():
+    adv = parse_adversary("sign_flip(f=2)").bind(4)
+    idx = jnp.arange(4, dtype=jnp.int32)
+    r = jnp.int32(0)
+    pk = jnp.zeros((4, 8), jnp.uint8)
+    out = np.asarray(adv.corrupt(pk, idx, r))
+    assert (out[:2] == 0xFF).all() and (out[2:] == 0).all()
+    coo = {"values": jnp.ones((4, 3)), "indices": jnp.zeros((4, 3), jnp.int32)}
+    out = adv.corrupt(coo, idx, r)
+    np.testing.assert_array_equal(np.asarray(out["values"])[:2], -1.0)
+    dense = jnp.ones((4, 5))
+    np.testing.assert_array_equal(np.asarray(adv.corrupt(dense, idx, r))[:2],
+                                  -1.0)
+    bc = parse_adversary("byte_corrupt(f=2,p=0.5)").bind(4)
+    with pytest.raises(ValueError, match="COO"):
+        bc.corrupt(coo, idx, r)
+    with pytest.raises(ValueError, match="dense"):
+        bc.corrupt(dense, idx, r)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr pins: compressed-domain all the way
+# ---------------------------------------------------------------------------
+
+def _robust_round_jaxpr(cohort, n_total=32, d=2 * C.ENCODE_TILE):
+    comp = C.Pipeline("zsign_packed(agg=vote)")
+    cfg = fedavg.FedConfig(n_clients=n_total, client_lr=0.01, server_lr=0.3)
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    step = fedavg.build_round_step(
+        loss_fn, comp, cfg,
+        RoundContext(cohort=cohort, weights_are_mask=True))
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    # scalar per-client targets: any (n_total, d) array in the jaxpr is a
+    # genuine full-cohort gradient/payload stack, never input data
+    return jax.make_jaxpr(step)(st, {"y": jnp.zeros((1, n_total, 1, 1))},
+                                jnp.ones((1, n_total)))
+
+
+def _walk_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for vv in (v if isinstance(v, (list, tuple)) else (v,)):
+                inner = getattr(vv, "jaxpr", vv)
+                if hasattr(inner, "eqns"):
+                    yield from _walk_eqns(inner)
+
+
+_COLLECTIVES = frozenset({
+    "psum", "all_gather", "all_to_all", "ppermute", "pmin", "pmax",
+    "reduce_scatter", "pgather", "pbroadcast", "all_gather_invariant"})
+
+
+def test_robust_stream_jaxpr_no_full_cohort_buffers():
+    n_total, d = 64, 2 * C.ENCODE_TILE
+    jaxpr = _robust_round_jaxpr("stream(shard=8)", n_total, d)
+    for eqn in _walk_eqns(jaxpr.jaxpr):
+        for var in list(eqn.outvars) + list(eqn.invars):
+            aval = getattr(var, "aval", None)
+            if aval is None or not hasattr(aval, "shape"):
+                continue
+            shape = tuple(aval.shape)
+            if aval.dtype == jnp.float32 and shape[-2:] == (n_total, d):
+                raise AssertionError(
+                    f"full-cohort (n_total, d) f32 buffer in robust "
+                    f"streaming jaxpr: {eqn}")
+            if aval.dtype == jnp.uint8 and len(shape) >= 2 and \
+                    shape[-2] == n_total and shape[-1] >= d // 8:
+                raise AssertionError(
+                    f"full-cohort uint8 payload stack in robust "
+                    f"streaming jaxpr: {eqn}")
+
+
+@pytest.mark.parametrize("devices", [_devices(2), _devices(4)])
+def test_robust_shard_map_single_int32_pair_psum(devices):
+    """Under stream(devices=D) the ONLY cross-device collectives on the
+    robust round are psums: the int32 (signed_count, n_live) pair of size
+    <= 2 * d_pad and the scalar f32 loss — the vote fold crosses devices in
+    the same single reduce as the mean path, never a payload stack."""
+    d = 2 * C.ENCODE_TILE
+    jaxpr = _robust_round_jaxpr(f"stream(shard=4,devices={devices})",
+                                n_total=32, d=d)
+    eqns = list(_walk_eqns(jaxpr.jaxpr))
+    assert any(e.primitive.name == "shard_map" for e in eqns)
+    colls = [e for e in eqns if e.primitive.name in _COLLECTIVES]
+    assert colls, "the device fold must end in a psum"
+    pair_psums = 0
+    for eqn in colls:
+        assert eqn.primitive.name == "psum", eqn
+        for var in list(eqn.invars) + list(eqn.outvars):
+            aval = var.aval
+            if aval.ndim == 0:
+                assert aval.dtype == jnp.float32, eqn   # the loss scalar
+                continue
+            assert aval.dtype == jnp.int32, eqn
+            assert int(np.prod(aval.shape)) <= 2 * d, eqn
+            pair_psums += 1
+    assert pair_psums, "the int32 vote pair must cross in a psum"
+
+
+# ---------------------------------------------------------------------------
+# convergence smoke: vote survives what breaks mean
+# ---------------------------------------------------------------------------
+
+def test_vote_survives_sign_flippers_mean_degrades():
+    """n=16 consensus with f=5 < n/2 sign-flippers. In the ±1 vote domain
+    every agg law shares its fixed points (they agree in sign), so the
+    attack's damage is to the RATE: the mean estimate's magnitude collapses
+    to (h - f)/n = 4/16 of a vote while majority vote still moves a full
+    unit step — at a fixed round budget vote has arrived and mean is still
+    most of the way out."""
+    n, d, rounds, f = 16, 64, 60, 6
+    y = 5.0 + jax.random.normal(jax.random.PRNGKey(0), (1, n, 1, d))
+    opt = np.asarray(y[0, f:, 0]).mean(0)   # honest clients' consensus
+    d0 = float(np.linalg.norm(opt))         # distance from the zero init
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+
+    def dist(agg):
+        comp = C.Pipeline(f"zsign_packed(agg={agg})")
+        # effective sign step = server_lr * client_lr = 0.1 per coordinate
+        cfg = fedavg.FedConfig(n_clients=n, client_lr=0.05, server_lr=2.0)
+        ctx = RoundContext(cohort="vmap", weights_are_mask=True,
+                           adversary=f"sign_flip(f={f})")
+        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg, ctx))
+        st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                      jax.random.PRNGKey(1))
+        mask = jnp.ones((1, n))
+        for _ in range(rounds):
+            st, _ = step(st, {"y": y}, mask)
+        return float(np.linalg.norm(np.asarray(st.params["x"]) - opt))
+
+    d_vote, d_mean = dist("vote"), dist("mean")
+    assert d_vote < 0.2 * d0, (d_vote, d0)          # vote arrived
+    assert d_mean > 0.5 * d0, (d_mean, d0)          # mean still far out
+    assert d_vote < 0.5 * d_mean, (d_vote, d_mean)
+
+
+# ---------------------------------------------------------------------------
+# debug-wire membership contract
+# ---------------------------------------------------------------------------
+
+def test_debug_wire_eager_raise_on_fractional_mask():
+    packed = jnp.zeros((4, 8), jnp.uint8)
+    ok = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    wire.unpack_sum_mask(packed, ok, debug=True)          # clean: no raise
+    wire.vote_accumulator(packed, ok, debug=True)
+    bad = jnp.asarray([1.0, 0.5, 1.0, 1.0])
+    with pytest.raises(Exception, match="membership"):
+        wire.unpack_sum_mask(packed, bad, debug=True)
+    with pytest.raises(Exception, match="membership"):
+        wire.vote_accumulator(packed, bad, debug=True)
+
+
+def test_debug_wire_checkified_round():
+    """debug_wire under jit: the step must be checkify-functionalized; the
+    thrown error carries the membership message. A bare jit refuses to
+    trace (the check is not silently dropped)."""
+    from jax.experimental import checkify
+    comp = C.Pipeline("zsign_packed(agg=vote)")
+    cfg = fedavg.FedConfig(n_clients=8, client_lr=0.05, server_lr=0.1)
+    ctx = RoundContext(cohort="vmap", weights_are_mask=True, debug_wire=True)
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    step = fedavg.build_round_step(loss_fn, comp, cfg, ctx)
+    st = fedavg.init_server_state({"x": jnp.zeros(32)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    y = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 1, 32))
+    cstep = checkify.checkify(jax.jit(step))
+    err, _ = cstep(st, {"y": y}, jnp.ones((1, 8)))
+    err.throw()                                           # clean round
+    err, _ = cstep(st, {"y": y}, jnp.full((1, 8), 0.5))
+    with pytest.raises(Exception, match="membership"):
+        err.throw()
+
+
+def test_debug_wire_env_var_pickup(monkeypatch):
+    monkeypatch.setenv("REPRO_DEBUG_WIRE", "1")
+    assert RoundContext().debug_wire
+    monkeypatch.setenv("REPRO_DEBUG_WIRE", "0")
+    assert not RoundContext().debug_wire
+    monkeypatch.delenv("REPRO_DEBUG_WIRE")
+    assert not RoundContext().debug_wire
+    # the context threads the flag onto every sign codec
+    ctx = RoundContext(weights_are_mask=True, debug_wire=True)
+    assert C.Pipeline("zsign(agg=vote)").with_context(ctx).codec.debug_wire
+
+
+# ---------------------------------------------------------------------------
+# topk coordinate-participation weight
+# ---------------------------------------------------------------------------
+
+def test_topk_coord_participation_mean():
+    """agg=coord divides each coordinate by ITS OWN reporter count — a
+    coordinate reported by 1 of 4 live clients decodes to that client's
+    value, not 1/4 of it."""
+    comp = C.Pipeline("topk(frac=0.5,agg=coord)")
+    codec = comp.codec
+    vals = jnp.asarray([[2.0], [4.0], [6.0], [8.0]])
+    idx = jnp.asarray([[0], [0], [1], [2]])
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    enc = {"values": vals, "indices": idx}
+    acc = codec.aggregate(enc, mask, 4)
+    out = np.asarray(codec.decode_sum(acc, jnp.float32(3.0)))
+    np.testing.assert_allclose(out, [3.0, 6.0, 0.0, 0.0])
+    # additive fold across shards
+    a0 = codec.aggregate({"values": vals[:2], "indices": idx[:2]}, mask[:2], 4)
+    a1 = codec.aggregate({"values": vals[2:], "indices": idx[2:]}, mask[2:], 4,
+                         acc=a0)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(acc))

@@ -238,3 +238,25 @@ def test_property_mask_exact_any_shape(n, n_bytes):
         np.asarray(wire.unpack_sum_mask(packed, mask)), want)
     np.testing.assert_array_equal(
         np.asarray(wire.unpack_sum(packed, mask)), want)
+
+
+@pytest.mark.parametrize("n", [247, 248, 249, 255, 256, 257])
+def test_mask_popcount_acc_dtype_boundary(n):
+    """The popcount path's uint8 block accumulator is only safe while the
+    PADDED client count (n + (-n) % 8 pad rows) fits in 255 — the all-ones
+    payload at full participation drives every per-coordinate count to its
+    maximum, so any accumulator overflow shows up as a wrapped sum here.
+    Regression for the old ``n <= 255`` bound, which ignored pad rows."""
+    n_bytes = 64
+    packed = jnp.ones((n, n_bytes), jnp.uint8) * jnp.uint8(0xFF)
+    mask = jnp.ones((n,), jnp.float32)
+    want = np.full(n_bytes * 8, float(n), np.float32)  # all +1 votes
+    np.testing.assert_array_equal(
+        np.asarray(wire.unpack_sum_mask(packed, mask)), want)
+    # partial masks near the boundary stay exact too
+    rng = np.random.RandomState(n)
+    mask = jnp.asarray(rng.randint(0, 2, n).astype(np.float32))
+    pk = _payload(rng, n, n_bytes)
+    np.testing.assert_array_equal(
+        np.asarray(wire.unpack_sum_mask(pk, mask)),
+        np.asarray(wire.unpack_sum_dense(pk, mask)))
