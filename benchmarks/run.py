@@ -31,6 +31,11 @@ perf-trajectory files every later perf PR is compared against:
                          vs the mean popcount round at n=32, ~1.3M coords,
                          plus one adversarial round (--robust-agg shorthand;
                          rows in BENCH_round.json)
+  async_round            async deadline rounds vs the sync straggler
+                         barrier: simulated p50/p90 round close times under
+                         heavy-tail latency + measured zero-latency driver
+                         overhead (--async shorthand; rows in
+                         BENCH_round.json)
 
 ``--devices D`` forces D host devices (threads) so the ``stream(devices=D)``
 rows run without real hardware. It must take effect before jax initializes
@@ -587,6 +592,88 @@ def robust_agg(fast=False):
          round(t_adv / times["vote"], 3))
 
 
+def async_round(fast=False):
+    """Async deadline rounds (``round_mode=async``) vs the sync straggler
+    barrier. Two row families: (1) simulated round close time under
+    heavy-tail latency models — the async round closes at the p90
+    deadline while the sync barrier pays the slowest live straggler, so
+    the p90 close-time ratio is the wall-clock claim of async mode; (2)
+    measured driver overhead — the async host loop at zero latency runs
+    the same per-shard computation as the sync ``stream(feed=host)``
+    driver (they are pinned bit-identical), so the round-time ratio
+    isolates the event-loop bookkeeping cost."""
+    from repro.core.context import RoundModePolicy
+    from repro.fed.async_server import parse_latency, simulate_close_times
+    rounds = 10 if fast else 50
+    n_sim = 64 if fast else 256
+    for label, spec in [("lognormal",
+                         "lognormal(median=1.0,sigma=1.0,seed=7)"),
+                        ("pareto", "pareto(xm=1.0,alpha=1.5,seed=7)")]:
+        model = parse_latency(spec)
+        draws = np.concatenate([model.sample(r, n_sim)
+                                for r in range(rounds)])
+        deadline = float(np.percentile(draws[np.isfinite(draws)], 90))
+        pol = RoundModePolicy.parse(
+            f"async(deadline={deadline},staleness=poly(0.5))")
+        ct = simulate_close_times(pol, model, rounds, n_sim)
+        p50a, p90a = np.percentile(ct[:, 0], [50, 90])
+        p50s, p90s = np.percentile(ct[:, 1], [50, 90])
+        emit("async_round", f"async_deadline_p90_{label}_n{n_sim}",
+             round(deadline, 3))
+        emit("async_round", f"async_close_p50_{label}_n{n_sim}",
+             round(float(p50a), 3))
+        emit("async_round", f"async_close_p90_{label}_n{n_sim}",
+             round(float(p90a), 3))
+        emit("async_round", f"async_sync_barrier_p50_{label}_n{n_sim}",
+             round(float(p50s), 3))
+        emit("async_round", f"async_sync_barrier_p90_{label}_n{n_sim}",
+             round(float(p90s), 3))
+        emit("async_round", f"async_close_speedup_p90_{label}_n{n_sim}",
+             round(float(p90s / p90a), 2))
+
+    # measured driver overhead at zero latency (identical computation)
+    dim, classes, width = 256, 10, (128 if fast else 512)
+    micro, n, shard = 8, 32, 8
+    iters, warmup = (2, 1) if fast else (5, 2)
+    init, loss_fn, _ = mlp_loss_builder(dim, classes, width=width)
+    params = init(jax.random.PRNGKey(0))
+
+    def time_host_round(round_mode):
+        cfg = fedavg.FedConfig(n_clients=n, client_lr=0.05,
+                               server_lr=sign_slr(0.01, 1, 0.05, 0.05))
+        kx, ky = jax.random.split(jax.random.PRNGKey(2))
+        batch = {"x": jax.random.normal(kx, (1, n, 1, micro, dim)),
+                 "y": jax.random.randint(ky, (1, n, 1, micro), 0, classes)}
+        mask = jnp.ones((1, n))
+        comp = compression.Pipeline("zsign(z=1,sigma=0.05)")
+        ctx = fedavg.RoundContext(weights_are_mask=True,
+                                  cohort=f"stream(shard={shard},feed=host)",
+                                  round_mode=round_mode)
+        # host-loop drivers: not jitted, not donated (the per-shard kernel
+        # is jitted and cached inside)
+        step = fedavg.build_round_step(loss_fn, comp, cfg, ctx)
+        state = fedavg.init_server_state(
+            jax.tree.map(jnp.array, params), cfg, comp, jax.random.PRNGKey(1))
+        for _ in range(warmup):
+            state, m = step(state, batch, mask)
+        jax.block_until_ready((state.params, m))
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                state, m = step(state, batch, mask)
+            jax.block_until_ready((state.params, m))
+            best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+        return best
+
+    t_sync = time_host_round("sync")
+    t_async = time_host_round("async(deadline=1.0)")
+    emit("async_round", f"async_round_sync_host_us_n{n}", round(t_sync, 1))
+    emit("async_round", f"async_round_async_us_n{n}", round(t_async, 1))
+    emit("async_round", f"async_driver_overhead_x_n{n}",
+         round(t_async / t_sync, 3))
+
+
 def kernel_throughput(fast=False):
     """Pallas compression kernel vs pure-jnp reference (interpret mode on CPU
     measures correctness-path overhead; compiled-TPU numbers on hardware)."""
@@ -670,7 +757,7 @@ def client_encode(fast=False):
 BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
            fig5_local_steps, fig6_plateau, fig16_qsgd, fig17_dp, table2_bits,
            kernel_throughput, client_encode, fed_round_step, cohort_round,
-           robust_agg]
+           robust_agg, async_round]
 
 # several benches may merge into one JSON file (kernel + encode rows).
 # The key prefix ATTRIBUTES existing rows to their bench so a re-run bench
@@ -680,6 +767,7 @@ BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
 _JSON_FILES = {"fed_round_step": ("BENCH_round.json", ""),
                "cohort_round": ("BENCH_round.json", "cohort_"),
                "robust_agg": ("BENCH_round.json", "robust_agg_"),
+               "async_round": ("BENCH_round.json", "async_"),
                "kernel_throughput": ("BENCH_kernels.json", ""),
                "client_encode": ("BENCH_kernels.json", "encode_")}
 
@@ -696,12 +784,17 @@ def main() -> None:
     ap.add_argument("--robust-agg", action="store_true",
                     help="shorthand for --only robust_agg (robust agg-mode "
                          "round overhead rows in BENCH_round.json)")
+    ap.add_argument("--async", action="store_true", dest="async_rows",
+                    help="shorthand for --only async_round (async deadline "
+                         "vs sync-barrier round-latency rows in "
+                         "BENCH_round.json)")
     args = ap.parse_args()
-    if args.robust_agg:
-        if args.only and args.only != "robust_agg":
-            raise SystemExit("--robust-agg conflicts with --only "
-                             f"{args.only}")
-        args.only = "robust_agg"
+    for opt, flag, bench in [("--robust-agg", "robust_agg", "robust_agg"),
+                             ("--async", "async_rows", "async_round")]:
+        if getattr(args, flag):
+            if args.only and args.only != bench:
+                raise SystemExit(f"{opt} conflicts with --only {args.only}")
+            args.only = bench
     print("name,metric,value")
     for b in BENCHES:
         if args.only and b.__name__ != args.only:

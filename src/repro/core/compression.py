@@ -212,17 +212,26 @@ def sign_reduce(packed: jax.Array, weights: jax.Array,
     ``wire.unpack_sum_mask`` (bit-identical for any 0/1 mask — integer
     sums). Weighted/EF calls keep the LUT path.
 
-    ``acc`` folds a carried (8*n_bytes,) partial sum from previous client
-    shards into the result — the streaming cohort driver's reduce-as-you-go
-    hook (see wire.unpack_sum for the exactness contract). The Pallas
-    kernel has no in-kernel init accumulator, so that backend adds ``acc``
-    to the kernel's blocked sum — still integer-exact for 0/1 masks.
+    ``acc`` folds a carried partial sum from previous client shards into
+    the result — the streaming cohort driver's reduce-as-you-go hook (see
+    wire.unpack_sum for the exactness contract). A flat (8*n_bytes,) f32
+    ``acc`` continues the plain left fold; a ``wire.SignFoldAcc`` selects
+    the shard-partition-INVARIANT structured fold, which buffers sub-block
+    client remainders so the result is bit-identical to one concatenated
+    call at ANY shard size — that route always runs through
+    ``wire.unpack_sum`` (the pending rows are positional state the kernel
+    has no inlet for; streaming folds are host/CPU-driven paths). The
+    Pallas kernel has no in-kernel init accumulator, so that backend adds a
+    flat ``acc`` to the kernel's blocked sum — still integer-exact for 0/1
+    masks.
 
     ``debug`` turns on the dynamic membership assertion of the popcount
     path (``wire.check_mask_membership``; debug-wire mode) — it only fires
     on the ``weights_are_mask`` route, where the contract applies.
     """
     backend = resolve_backend("agg", backend)
+    if isinstance(acc, wire.SignFoldAcc):
+        return unpack_sum(packed, weights, acc)
     if backend == "pallas":
         from repro.kernels.zsign import ops as K
         out = K.sign_reduce(packed, weights)
@@ -583,6 +592,29 @@ class SignCodec:
         return sign_reduce(payload, mask, self.agg_backend,
                            weights_are_mask=self.weights_are_mask, acc=acc,
                            debug=self.debug_wire)
+
+    def fold_init(self, enc_shape):
+        """Structured streaming-fold accumulator, or None when the flat
+        zero accumulator is already partition-exact.
+
+        The fp32-WEIGHTED aggregation routes (``scale="mean_abs"`` EF
+        wires, and plain mean without the static 0/1-mask guarantee) are
+        order-sensitive: a flat fold closes an 8-client LUT block at every
+        shard boundary, so off-block shard sizes re-associate the fp32
+        sums. For those routes this returns a ``wire.SignFoldAcc`` sized
+        from the payload's wire width — the pending-row carry that makes
+        the shard fold bit-identical to one concatenated reduce at ANY
+        shard partition. Mask-guaranteed and vote routes are integer-exact
+        under any association already and keep the flat accumulator
+        (None). ``enc_shape`` is the eval_shape of one shard's encoded
+        payload stack (dict for the bitpacked+scale wire)."""
+        weighted = (self.scale == "mean_abs"
+                    or (self.agg == "mean" and not self.weights_are_mask))
+        if not weighted:
+            return None
+        packed = enc_shape["packed"] if isinstance(enc_shape, dict) \
+            else enc_shape
+        return wire.sign_fold_init(int(packed.shape[-1]))
 
     def decode_mean(self, flat_mean, sigma=None):
         if self.scale == "mean_abs" or self.sigma_mode == "norm":
@@ -1105,6 +1137,29 @@ class Pipeline:
         families carry O(d/8) of state per fold; dense codecs carry one
         (d,) f32 buffer)."""
         return self.codec.aggregate(payload, mask, n_coords, acc)
+
+    def fold_init(self, enc_shape):
+        """Streaming-fold accumulator INITIALIZER for the round driver.
+
+        Returns the codec's structured carry when shard-partition-exact
+        folding needs one (SignCodec's fp32-weighted routes return a
+        ``wire.SignFoldAcc``), or None when a flat zero accumulator shaped
+        by ``aggregate``'s own output is already exact — the driver falls
+        back to its eval_shape zeros there. ``enc_shape`` is the
+        ``jax.eval_shape`` of one shard's encoded payload stack."""
+        init = getattr(self.codec, "fold_init", None)
+        return None if init is None else init(enc_shape)
+
+    def fold_finalize(self, acc):
+        """Close a streaming-fold accumulator into the plain ``aggregate``
+        output the decode path consumes. Structured carries flush their
+        pending state (``wire.sign_fold_finalize``); flat accumulators pass
+        through unchanged. Multi-device rounds MUST finalize per device
+        BEFORE the cross-device psum — pending rows are positional, not
+        additive."""
+        if isinstance(acc, wire.SignFoldAcc):
+            return wire.sign_fold_finalize(acc)
+        return acc
 
     def decode_mean(self, flat_mean: jax.Array, sigma=None) -> jax.Array:
         return self.codec.decode_mean(

@@ -72,11 +72,12 @@ COHORT_FEEDS = ("device", "host")
 #:     (n=256, d=1024: vmap 14.6 ms vs stream(shard=8) 15.4 ms; ef|zsign
 #:     0.64 vs 0.65 ms) — vmap is kept there for its scan-free jaxpr, not
 #:     for a large win.
-#:   * zsign_packed: streaming wins at EVERY size because the vmapped fused
-#:     packed encode scales superlinearly in the vmapped width (d=1024:
-#:     1.15 ms at n=16 -> 357 ms at n=256; ROADMAP carry-over), e.g. at the
-#:     gate (total*d = 2**24: n=512, d=32768) vmap 23.8 s vs stream(16)
-#:     0.95 s.
+#:   * zsign_packed: historically streaming won at EVERY size because the
+#:     default pallas batching rule made the vmapped fused packed encode
+#:     superlinear in the vmapped width (d=1024: 1.15 ms at n=16 -> 357 ms
+#:     at n=256). PR 9 fixed that lowering (custom_vmap dual rule in
+#:     kernels/zsign/ops.py, ~60 us/client flat at n=16..256), so the vmap
+#:     plan is usable for packed wires below the gate too.
 #:
 #: At or above 2**24 elements (~64 MB of dense f32 client gradients) the
 #: streaming plan's O(shard * d) working set is required regardless of
@@ -108,7 +109,36 @@ STREAM_SHARD_BUDGET_BYTES = 256 << 20
 STREAM_SHARD_MIN = 8
 STREAM_SHARD_MAX = 512
 
+#: round execution modes: the synchronous barrier (every live client's
+#: payload lands before decode) or the async deadline round (see
+#: RoundModePolicy)
+ROUND_MODES = ("sync", "async")
+
+#: buffered-staleness laws for async rounds: "none" drops late payloads,
+#: "poly" down-weights a payload arriving s rounds late by (1+s)^-a,
+#: "cutoff" keeps full weight up to s_max rounds late then drops
+STALENESS_LAWS = ("none", "poly", "cutoff")
+
 _VALID = {"agg": AGG_BACKENDS, "encode": ENCODE_BACKENDS}
+
+
+def _split_top(args: str) -> list:
+    """Split a spec argument list on TOP-LEVEL commas only, so nested
+    parenthesized values — ``staleness=poly(0.5)`` — survive intact."""
+    parts, cur, depth = [], [], 0
+    for ch in args:
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+            continue
+        depth += (ch == "(") - (ch == ")")
+        if depth < 0:
+            raise ValueError(f"unbalanced parentheses in {args!r}")
+        cur.append(ch)
+    if depth != 0:
+        raise ValueError(f"unbalanced parentheses in {args!r}")
+    parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
 
 
 def resolve_backend(kind: str, backend: str) -> str:
@@ -244,6 +274,111 @@ class CohortPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class RoundModePolicy:
+    """Parsed form of ``RoundContext.round_mode`` — WHEN a round closes.
+
+      mode="sync"    the classic barrier: the round folds every live
+                     client's payload, however long the slowest takes.
+      mode="async"   deadline-based close (fed/async_server.py): payloads
+                     fold into the wire accumulator as they arrive; the
+                     round closes at ``deadline`` simulated time units.
+                     Clients that miss the deadline are governed by the
+                     buffered-staleness law; clients that never report
+                     (failures) take the dead-client mask semantics.
+
+    ``deadline`` is required for async and is measured in the latency
+    model's time units (one round's compute window). ``min_clients``
+    extends the close past the deadline until at least that many live
+    payloads have arrived (0 = never extend). ``staleness`` picks the law
+    applied to a payload that computes in round r but arrives s > 0 rounds
+    later (it folds into round r + s against the server's CURRENT params,
+    carrying weight :meth:`stale_weight`):
+
+      none        drop it (pure deadline cutoff)
+      poly(a)     fold with weight (1 + s)^-a  (a >= 0)
+      cutoff(s)   fold with full weight while s <= s_max, drop beyond
+
+    Invariant (pinned in tests/test_async_server.py): zero latency and a
+    deadline covering every client make the async round BIT-IDENTICAL —
+    params, residuals, metrics — to the sync streaming round.
+    """
+    mode: str = "sync"
+    deadline: float = 0.0
+    min_clients: int = 0
+    staleness: str = "none"
+    staleness_arg: float = 0.0
+
+    def __post_init__(self):
+        if self.mode not in ROUND_MODES:
+            raise ValueError(f"unknown round mode {self.mode!r}; expected "
+                             f"one of {ROUND_MODES}")
+        if self.staleness not in STALENESS_LAWS:
+            raise ValueError(f"unknown staleness law {self.staleness!r}; "
+                             f"expected one of {STALENESS_LAWS}")
+        if self.mode == "sync":
+            if (self.deadline, self.min_clients, self.staleness) != \
+                    (0.0, 0, "none"):
+                raise ValueError("deadline=/min_clients=/staleness= only "
+                                 "apply to round mode 'async'")
+        else:
+            if not self.deadline > 0.0:
+                raise ValueError("async round mode needs deadline > 0, got "
+                                 f"deadline={self.deadline!r}")
+        if self.min_clients < 0 or self.staleness_arg < 0.0:
+            raise ValueError("min_clients and the staleness argument must "
+                             "be non-negative")
+
+    def stale_weight(self, s: int) -> float:
+        """The closed-form buffered-staleness law: fold weight of a payload
+        arriving ``s`` rounds after it was computed (s == 0 is on time)."""
+        if s <= 0:
+            return 1.0
+        if self.staleness == "poly":
+            return float((1.0 + s) ** (-self.staleness_arg))
+        if self.staleness == "cutoff":
+            return 1.0 if s <= self.staleness_arg else 0.0
+        return 0.0
+
+    @classmethod
+    def parse(cls, spec: "str | RoundModePolicy") -> "RoundModePolicy":
+        """``sync | async(deadline=T[,min_clients=M]
+        [,staleness=none|poly(a)|cutoff(s)])`` -> policy."""
+        if isinstance(spec, cls):
+            return spec
+        s = spec.strip()
+        if "(" not in s:
+            return cls(mode=s)
+        if not s.endswith(")"):
+            raise ValueError(f"malformed round_mode spec {spec!r}")
+        mode, args = s[:-1].split("(", 1)
+        kw = {}
+        for part in _split_top(args):
+            if "=" not in part:
+                raise ValueError(f"round_mode argument {part!r} in {spec!r} "
+                                 f"must be key=value")
+            k, v = (t.strip() for t in part.split("=", 1))
+            if k == "deadline":
+                kw["deadline"] = float(v)
+            elif k == "min_clients":
+                kw["min_clients"] = int(v)
+            elif k == "staleness":
+                if "(" in v:
+                    if not v.endswith(")"):
+                        raise ValueError(f"malformed staleness law {v!r} in "
+                                         f"{spec!r}")
+                    law, arg = v[:-1].split("(", 1)
+                    kw["staleness"] = law.strip()
+                    kw["staleness_arg"] = float(arg)
+                else:
+                    kw["staleness"] = v
+            else:
+                raise ValueError(f"unknown round_mode argument {k!r} in "
+                                 f"{spec!r}; expected deadline=, "
+                                 f"min_clients= or staleness=")
+        return cls(mode=mode.strip(), **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class RoundContext:
     """Frozen per-deployment policy for one federated round step.
 
@@ -278,6 +413,19 @@ class RoundContext:
     #: "byte_corrupt(f=2,p=0.1)" | "collude(f=4)" | "dropout(f=8)"
     #: (+ schedule args every=/start=/rotate=/seed=)
     adversary: str = "none"
+    #: round execution mode — a RoundModePolicy spec string: "sync" |
+    #: "async(deadline=T[,min_clients=M][,staleness=none|poly(a)|
+    #: cutoff(s)])". Async rounds are driven by fed/async_server.py: a
+    #: host-side event loop that folds payloads into the wire accumulator
+    #: as they arrive and closes at the deadline. An async round step is a
+    #: Python loop — it must NOT be wrapped in jax.jit.
+    round_mode: str = "sync"
+    #: simulated client latency/failure model for async rounds — an
+    #: fed/async_server.py spec string: "zero" | "const(t=T)" |
+    #: "linear(base=B,step=S)" | "lognormal(median=M,sigma=S)" |
+    #: "pareto(xm=X,alpha=A)" (+ fail=P failure rate, seed=N). Only
+    #: meaningful with round_mode="async".
+    latency: str = "zero"
 
     def __post_init__(self):
         # fail at construction, not at trace time inside the round step —
@@ -287,6 +435,16 @@ class RoundContext:
             if backend is not None:
                 resolve_backend(kind, backend)
         CohortPolicy.parse(self.cohort)
+        mode = RoundModePolicy.parse(self.round_mode)
+        if self.latency != "zero":
+            if mode.mode != "async":
+                raise ValueError("latency= is a simulation knob of async "
+                                 "rounds; set round_mode='async(...)' or "
+                                 "leave latency='zero'")
+            # validate eagerly; imported lazily to keep core free of a
+            # module-load dependency on the fed layer
+            from repro.fed.async_server import parse_latency
+            parse_latency(self.latency)
         if self.adversary != "none":
             # validate eagerly; imported lazily to keep core free of a
             # module-load dependency on the fed layer

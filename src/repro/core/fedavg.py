@@ -55,10 +55,11 @@ picks the walk:
               full-cohort payload stack never exists). Peak memory is O(d)
               model + O(shard * E * batch) data + O(shard * d/8) wire for
               sign families (one (d,) f32 carry for dense codecs), for ANY
-              cohort size. Bit-identical to the vmap path for 0/1 masks
-              (integer sign sums — any shard size) and for fp32-weighted
-              (EF) aggregation at shard sizes that are multiples of
-              wire.SIGN_REDUCE_CLIENT_BLK; see wire.unpack_sum.
+              cohort size. Bit-identical to the vmap path at ANY shard
+              size: 0/1-mask sign sums are integer-exact, and fp32-weighted
+              (EF) aggregation streams through a ``wire.SignFoldAcc``
+              carry (``Pipeline.fold_init``) that preserves the full
+              call's 8-client block order; see wire.unpack_sum.
 
               ``stream(devices=D)`` adds the cross-DEVICE axis: the shard
               sequence is partitioned into contiguous per-device slices
@@ -114,7 +115,8 @@ from repro.core import wire
 from repro.core.context import (COHORT_DEVICES_AUTO, STREAM_AUTO_MIN_ELEMS,
                                 STREAM_DEFAULT_SHARD, STREAM_SHARD_AUTO,
                                 STREAM_SHARD_BUDGET_BYTES, STREAM_SHARD_MAX,
-                                STREAM_SHARD_MIN, CohortPolicy, RoundContext)
+                                STREAM_SHARD_MIN, CohortPolicy, RoundContext,
+                                RoundModePolicy)
 from repro.core.dp import clip_flat
 from repro.optim.optimizers import Optimizer, make_optimizer
 
@@ -146,8 +148,12 @@ class RoundMetrics(NamedTuple):
     participation: jax.Array
     uplink_bits: jax.Array
     #: clients per stream shard this round (0 on the vmap plan) — recorded so
-    #: benchmark rows stay self-describing when the shard size is auto-tuned
-    shard_clients: jax.Array = np.int32(0)
+    #: benchmark rows stay self-describing when the shard size is auto-tuned.
+    #: Always a device int32 scalar: a host np.int32 default would silently
+    #: type-promote when metrics from eager (host-fed) and jitted rounds are
+    #: stacked across a buffered window (jnp.stack over mixed host/device
+    #: scalars re-derives the dtype instead of keeping int32).
+    shard_clients: jax.Array = jnp.asarray(0, jnp.int32)
 
 
 class RoundMath(NamedTuple):
@@ -209,8 +215,10 @@ def auto_shard_size(n_coords: int) -> int:
     per in-flight client plus its packed wire row (4*d + d/8 bytes each), so
     K = budget // (4*d + d/8), clamped to [STREAM_SHARD_MIN,
     STREAM_SHARD_MAX] and rounded down to a multiple of
-    wire.SIGN_REDUCE_CLIENT_BLK — keeping every shard block-aligned so the
-    fp32-weighted fold stays bit-reproducible across shard boundaries.
+    wire.SIGN_REDUCE_CLIENT_BLK. Block alignment is a throughput choice
+    now, not a correctness one: the SignFoldAcc carry keeps fp32-weighted
+    folds bit-reproducible at ANY shard size, but blk-aligned shards keep
+    its pending-row buffer permanently empty.
     """
     if n_coords <= 0:
         return STREAM_DEFAULT_SHARD
@@ -552,17 +560,30 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         shard0 = lambda t: (None if t is None
                             else jax.tree.map(lambda x: x[0], t))
 
-        # zero-init wire accumulator, shaped by the codec's own aggregate
-        agg_shape = jax.eval_shape(
-            lambda b, k, c, m: compressor.aggregate(
-                math.group_encode(spec, params, b, k, c, m, sigma)[0],
-                m, spec.n_coords),
+        # wire accumulator init: fp32-weighted sign codecs hand back a
+        # structured wire.SignFoldAcc (pending-row carry that makes the
+        # shard fold bit-identical to one concatenated reduce at ANY shard
+        # size); other routes fall back to a zero buffer shaped by the
+        # codec's own aggregate output
+        enc_shape = jax.eval_shape(
+            lambda b, k, c, m: math.group_encode(
+                spec, params, b, k, c, m, sigma)[0],
             shard0(s_batch), znoise.client_keys(sub, 0, shard),
             shard0(s_cstate), s_mask[0])
+        fold0 = (compressor.fold_init(enc_shape)
+                 if hasattr(compressor, "fold_init") else None)
+        if fold0 is None:
+            agg_shape = jax.eval_shape(
+                lambda e, m: compressor.aggregate(e, m, spec.n_coords),
+                enc_shape, s_mask[0])
+        finalize = (compressor.fold_finalize
+                    if hasattr(compressor, "fold_finalize")
+                    else (lambda a: a))
 
         def scan_shards(params_d, sub_d, sigma_d, round_d, idx_d, batch_d,
                         cstate_d, mask_d, constrain_acc):
-            acc0 = jnp.zeros(agg_shape.shape, agg_shape.dtype)
+            acc0 = (fold0 if fold0 is not None
+                    else jnp.zeros(agg_shape.shape, agg_shape.dtype))
 
             def body(carry, xs):
                 acc, loss_acc = carry
@@ -579,8 +600,12 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 enc, new_cstate_s, loss_s = math.group_encode(
                     spec, params_d, batch_s, keys_s, cstate_s, mask_s,
                     sigma_d, idx_s, round_d)
-                acc = constrain_acc(compressor.aggregate(
-                    enc, mask_s, spec.n_coords, acc=acc))
+                acc = compressor.aggregate(enc, mask_s, spec.n_coords,
+                                           acc=acc)
+                if fold0 is None:
+                    # launcher wire constraints expect the flat buffer;
+                    # the structured carry is constrained post-finalize
+                    acc = constrain_acc(acc)
                 return (acc, loss_acc + loss_s), new_cstate_s
 
             return jax.lax.scan(body, (acc0, jnp.zeros(())),
@@ -591,6 +616,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
             (enc_sum, loss_sum), cstate_sh = scan_shards(
                 params, sub, sigma, round_idx, s_idx, s_batch, s_cstate,
                 s_mask, constrain_wire)
+            if fold0 is not None:
+                enc_sum = constrain_wire(finalize(enc_sum))
         else:
             mesh = Mesh(np.asarray(jax.devices()[:devices]), ("clients",))
             rep, shd = P(), P("clients")
@@ -603,6 +630,10 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 (acc, loss), cstate_out = scan_shards(
                     params_d, sub_d, sigma_d, round_d, idx_d, batch_d,
                     cstate_d, mask_d, lambda a: a)
+                # structured fold carries finalize BEFORE the psum: pending
+                # rows are positional, not additive, and the flat fp32
+                # buffer keeps the collective at one O(d) psum
+                acc = finalize(acc)
                 # THE cross-device reduce: one O(<= 2d) psum of the local
                 # wire accumulators (f32 sum, or the int32 vote pair for
                 # robust agg=) — compressed-domain all the way; the
@@ -748,7 +779,7 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
             participation=n_live,
             uplink_bits=n_live * float(spec.n_coords
                                        * compressor.wire_bits_per_coord),
-            shard_clients=np.int32(shard_used))
+            shard_clients=jnp.asarray(shard_used, jnp.int32))
         new_state = ServerState(params=new_params, opt_state=new_opt,
                                 comp_state=new_cstate, rng=rng,
                                 round=state.round + 1, sigma=sigma)
@@ -771,8 +802,12 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 enc, new_cstate_s, loss_s = math.group_encode(
                     spec, params, batch_s, keys_s, cstate_s, mask_s, sigma,
                     idx_s, round_idx)
-                acc = constrain_wire(compressor.aggregate(
-                    enc, mask_s, spec.n_coords, acc=acc))
+                acc = compressor.aggregate(enc, mask_s, spec.n_coords,
+                                           acc=acc)
+                if not isinstance(acc, wire.SignFoldAcc):
+                    # structured carries are constrained post-finalize;
+                    # launcher wire constraints expect the flat buffer
+                    acc = constrain_wire(acc)
                 return acc, loss_acc + loss_s, new_cstate_s
             shard_fns[key] = jax.jit(fn)
         return shard_fns[key]
@@ -798,12 +833,17 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         gen = iter_shards(batch, mask, state.comp_state, shard=shard,
                           total=total)
         cur = jax.device_put(next(gen))
-        agg_shape = jax.eval_shape(
-            lambda b, k, c, m: compressor.aggregate(
-                math.group_encode(spec, state.params, b, k, c, m,
-                                  sigma)[0], m, spec.n_coords),
+        enc_shape = jax.eval_shape(
+            lambda b, k, c, m: math.group_encode(
+                spec, state.params, b, k, c, m, sigma)[0],
             cur[1], znoise.client_keys(sub, 0, shard), cur[2], cur[3])
-        acc = jnp.zeros(agg_shape.shape, agg_shape.dtype)
+        acc = (compressor.fold_init(enc_shape)
+               if hasattr(compressor, "fold_init") else None)
+        if acc is None:
+            agg_shape = jax.eval_shape(
+                lambda e, m: compressor.aggregate(e, m, spec.n_coords),
+                enc_shape, cur[3])
+            acc = jnp.zeros(agg_shape.shape, agg_shape.dtype)
         loss_sum = jnp.zeros(())
         fn = _host_shard_fn(spec, shard)
         rows_host, prev_rows = [], None
@@ -819,6 +859,9 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 rows_host.append(jax.tree.map(np.asarray, prev_rows))
             prev_rows = rows
             cur = nxt
+        if hasattr(compressor, "fold_finalize"):
+            acc = constrain_wire(compressor.fold_finalize(acc)) \
+                if isinstance(acc, wire.SignFoldAcc) else acc
         new_cstate = None
         if stateful:
             rows_host.append(jax.tree.map(np.asarray, prev_rows))
@@ -830,6 +873,20 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 stacked)
         return _finish(state, spec, rng, sigma, acc, new_cstate, loss_sum,
                        jnp.asarray(mask), plan.shard)
+
+    # ---- round_mode=async(...): the deadline-fold driver ----------------
+    mode_policy = RoundModePolicy.parse(getattr(ctx, "round_mode", "sync"))
+    if mode_policy.mode == "async":
+        # the async driver reuses this builder's internals wholesale — the
+        # round math, the _finish decode closure, the bound adversary —
+        # so its shard pass is the sync host driver's computation exactly
+        # (the zero-latency bit-identity pin of tests/test_async_server.py)
+        from repro.fed.async_server import build_async_round_step
+        return build_async_round_step(
+            policy=mode_policy, latency_spec=getattr(ctx, "latency", "zero"),
+            compressor=compressor, cfg=cfg, round_math=math, finish=_finish,
+            constrain_wire=constrain_wire, cohort_policy=cohort_policy,
+            adversary=adversary, total=total)
 
     return host_round_step if cohort_policy.feed == "host" else round_step
 

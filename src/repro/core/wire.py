@@ -40,7 +40,7 @@ buffers unsliced.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -194,8 +194,20 @@ def _bit_transpose_blocks(pm: jax.Array, n_blocks: int,
     return x.reshape(n_blocks, 8, n_bytes)
 
 
+def _block_luts(wb: jax.Array) -> jax.Array:
+    """(n_blocks, blk) f32 weight blocks -> (n_blocks, 256) weighted-sign
+    tables ``LUT[v] = sum_i (bit i of v ? +w_i : -w_i)`` — the in-block
+    8-client reduce, performed once per block at table-build time in client
+    order (the order the Pallas kernel and the dense oracle share)."""
+    v = jnp.arange(256, dtype=jnp.uint8)
+    vbits = ((v[:, None] >> jnp.arange(8, dtype=jnp.uint8))
+             & jnp.uint8(1)) > 0                            # (256, 8)
+    return jnp.sum(jnp.where(vbits[None], wb[:, None, :], -wb[:, None, :]),
+                   axis=-1)                                 # (n_blocks, 256)
+
+
 def unpack_sum(packed: jax.Array, weights: jax.Array,
-               acc: jax.Array | None = None) -> jax.Array:
+               acc: "jax.Array | SignFoldAcc | None" = None) -> jax.Array:
     """(n_clients, n_bytes) u8, (n_clients,) f32 -> (8*n_bytes,) weighted sum
     of the +/-1 signs — the server side of the 1-bit all-gather.
 
@@ -211,15 +223,26 @@ def unpack_sum(packed: jax.Array, weights: jax.Array,
     (weight 0) contribute exactly 0.
 
     ``acc`` is the partial-accumulator FOLD hook for the streaming cohort
-    driver: an (8*n_bytes,) f32 running sum from previous client shards,
-    continued as the left fold ``((acc + b_0) + b_1) + ...`` over this
-    call's client blocks. Folding shard-by-shard is bit-identical to one
-    call over the concatenated clients whenever (a) the weights are a 0/1
-    mask (integer sums — exact under any association) or (b) every shard
-    is a multiple of SIGN_REDUCE_CLIENT_BLK clients (identical block
-    boundaries AND identical left-fold order, any fp32 weights), up to the
-    sign of f32 zeros (the zero-initialized fold turns a -0.0 partial into
-    +0.0).
+    driver, in one of two forms:
+
+      * an (8*n_bytes,) f32 running sum from previous client shards,
+        continued as the flat left fold ``((acc + b_0) + b_1) + ...`` over
+        this call's client blocks. Bit-identical to one call over the
+        concatenated clients whenever (a) the weights are a 0/1 mask
+        (integer sums — exact under any association) or (b) every shard is
+        a multiple of SIGN_REDUCE_CLIENT_BLK clients (identical block
+        boundaries AND identical left-fold order, any fp32 weights), up to
+        the sign of f32 zeros. Off-block shard sizes shift the 8-client
+        block boundaries and therefore re-associate the fp32 sums.
+      * a :class:`SignFoldAcc` (from :func:`sign_fold_init`): the
+        shard-partition-INVARIANT fold. Sub-block client remainders are
+        buffered as pending wire rows instead of closing a misaligned
+        block, so the global 8-client block boundaries — and the exact
+        fp32 addition order — match the single concatenated call for ANY
+        shard partition and any fp32 weights. The return value is the
+        updated SignFoldAcc; :func:`sign_fold_finalize` flushes the last
+        partial block and yields the (8*n_bytes,) sum, bit-identical to
+        the one-shot call (zero signs included).
 
     Accumulation order mirrors the Pallas ``sign_reduce`` kernel: clients
     are padded to SIGN_REDUCE_CLIENT_BLK with zero weight, the in-block
@@ -229,6 +252,8 @@ def unpack_sum(packed: jax.Array, weights: jax.Array,
     0/1 masks (integer sums), and within 1 ulp/client of the legacy dense
     path (``unpack_sum_dense``).
     """
+    if isinstance(acc, SignFoldAcc):
+        return _sign_fold_step(packed, weights, acc)
     n, n_bytes = packed.shape
     blk = SIGN_REDUCE_CLIENT_BLK
     cpad = (-n) % blk
@@ -239,12 +264,7 @@ def unpack_sum(packed: jax.Array, weights: jax.Array,
         w = jnp.pad(w, (0, cpad))
     n_blocks = (n + cpad) // blk
     planes = _bit_transpose_blocks(packed, n_blocks, n_bytes)
-    v = jnp.arange(256, dtype=jnp.uint8)
-    vbits = ((v[:, None] >> jnp.arange(8, dtype=jnp.uint8))
-             & jnp.uint8(1)) > 0                            # (256, 8)
-    wb = w.reshape(n_blocks, blk)
-    lut = jnp.sum(jnp.where(vbits[None], wb[:, None, :], -wb[:, None, :]),
-                  axis=-1)                                  # (n_blocks, 256)
+    lut = _block_luts(w.reshape(n_blocks, blk))             # (n_blocks, 256)
     if acc is None:
         a = jnp.take(lut[0], planes[0].astype(jnp.int32), axis=0)  # (8, nb)
         start = 1
@@ -256,6 +276,109 @@ def unpack_sum(packed: jax.Array, weights: jax.Array,
     for b in range(start, n_blocks):
         a = a + jnp.take(lut[b], planes[b].astype(jnp.int32), axis=0)
     # a[k, byte] is the weighted sum for coordinate byte*8 + k
+    return jnp.swapaxes(a, 0, 1).reshape(-1)
+
+
+class SignFoldAcc(NamedTuple):
+    """Shard-partition-invariant carry for the fp32-weighted sign fold.
+
+    The flat ``acc`` fold of :func:`unpack_sum` closes an 8-client LUT block
+    at every shard boundary, so a shard size that is not a multiple of
+    SIGN_REDUCE_CLIENT_BLK shifts the block boundaries and re-associates the
+    fp32 additions — the historical "bit-identical only at shard % 8 == 0"
+    caveat. This carry removes the caveat structurally: clients that do not
+    fill a block are PARKED as pending wire rows (bytes + weights) and the
+    block is only closed — in global client order — once 8 rows exist, so
+    the fold replays the exact addition sequence of the single concatenated
+    call no matter how the client stream is partitioned.
+
+    Bit-exactness bookkeeping: ``sums`` starts at -0.0 (the IEEE-754
+    additive identity that preserves the bit pattern of every float,
+    including +/-0.0), and deferred / absent blocks contribute a -0.0 term
+    instead of being skipped, so every closed block enters the sum exactly
+    once and in the same order as the one-shot call — the finalized result
+    is bit-identical, zero signs included.
+
+    Fields:
+      sums        (8, n_bytes) f32 — closed-block partial sums in the
+                  bit-transposed layout (coordinate byte*8 + k at [k, byte])
+      pend_bytes  (SIGN_REDUCE_CLIENT_BLK, n_bytes) u8 — buffered wire rows
+                  of the open block; rows >= pend_n are zero
+      pend_w      (SIGN_REDUCE_CLIENT_BLK,) f32 — their weights (same rule)
+      pend_n      () int32 — number of valid pending rows, 0..7
+
+    A NamedTuple, hence a pytree: it rides through ``lax.scan`` carries,
+    ``jax.jit`` boundaries and ``shard_map`` bodies unchanged. It must be
+    finalized (:func:`sign_fold_finalize`) BEFORE any cross-device psum —
+    pending rows are positional, not additive.
+    """
+    sums: jax.Array
+    pend_bytes: jax.Array
+    pend_w: jax.Array
+    pend_n: jax.Array
+
+
+def sign_fold_init(n_bytes: int) -> SignFoldAcc:
+    """Fresh partition-invariant fold carry for an (.., n_bytes) wire row."""
+    blk = SIGN_REDUCE_CLIENT_BLK
+    return SignFoldAcc(
+        sums=jnp.full((8, n_bytes), -0.0, jnp.float32),
+        pend_bytes=jnp.zeros((blk, n_bytes), jnp.uint8),
+        pend_w=jnp.zeros((blk,), jnp.float32),
+        pend_n=jnp.zeros((), jnp.int32))
+
+
+def _sign_fold_step(packed: jax.Array, weights: jax.Array,
+                    acc: SignFoldAcc) -> SignFoldAcc:
+    """Fold one shard of (k, n_bytes) wire rows into the carry.
+
+    The pending rows (0..7 of them) are placed at the head of a zero
+    buffer, the shard's rows behind them at the traced offset ``pend_n``;
+    every COMPLETE 8-row block of the buffer is closed in order (incomplete
+    trailing rows add a bit-preserving -0.0 instead), and the remainder is
+    sliced back out as the new pending block. The buffer is sized so
+    neither the dynamic_update_slice nor the trailing dynamic_slice can
+    clamp: B = ((7 + k) // 8 + 1) * 8 >= pend_n + k + 1 and >= s + 8 for
+    the remainder start s = ((pend_n + k) // 8) * 8.
+    """
+    k, n_bytes = packed.shape
+    blk = SIGN_REDUCE_CLIENT_BLK
+    n_blocks = (blk - 1 + k) // blk + 1
+    buf_rows = n_blocks * blk
+    buf = jnp.zeros((buf_rows, n_bytes), jnp.uint8).at[:blk].set(
+        acc.pend_bytes)
+    wbuf = jnp.zeros((buf_rows,), jnp.float32).at[:blk].set(acc.pend_w)
+    buf = jax.lax.dynamic_update_slice(buf, packed, (acc.pend_n, 0))
+    wbuf = jax.lax.dynamic_update_slice(
+        wbuf, weights.astype(jnp.float32), (acc.pend_n,))
+    total = acc.pend_n + k
+    planes = _bit_transpose_blocks(buf, n_blocks, n_bytes)
+    lut = _block_luts(wbuf.reshape(n_blocks, blk))
+    neg0 = jnp.full((8, n_bytes), -0.0, jnp.float32)
+    a = acc.sums
+    for b in range(n_blocks):
+        contrib = jnp.take(lut[b], planes[b].astype(jnp.int32), axis=0)
+        a = a + jnp.where((b + 1) * blk <= total, contrib, neg0)
+    start = (total // blk) * blk
+    return SignFoldAcc(
+        sums=a,
+        pend_bytes=jax.lax.dynamic_slice(buf, (start, 0), (blk, n_bytes)),
+        pend_w=jax.lax.dynamic_slice(wbuf, (start,), (blk,)),
+        pend_n=total % blk)
+
+
+def sign_fold_finalize(acc: SignFoldAcc) -> jax.Array:
+    """Close the open block and return the (8*n_bytes,) weighted sign sum —
+    bit-identical to one :func:`unpack_sum` call over the concatenated
+    clients (whose trailing partial block is zero-padded exactly like the
+    pending buffer). A carry with no pending rows adds -0.0, a bitwise
+    no-op."""
+    n_bytes = acc.pend_bytes.shape[1]
+    planes = _bit_transpose_blocks(acc.pend_bytes, 1, n_bytes)
+    lut = _block_luts(acc.pend_w.reshape(1, -1))
+    contrib = jnp.take(lut[0], planes[0].astype(jnp.int32), axis=0)
+    neg0 = jnp.full((8, n_bytes), -0.0, jnp.float32)
+    a = acc.sums + jnp.where(acc.pend_n > 0, contrib, neg0)
     return jnp.swapaxes(a, 0, 1).reshape(-1)
 
 

@@ -142,6 +142,45 @@ def compress_rng_pallas(x2d: jax.Array, key2: jax.Array, sigma: jax.Array,
     )(x2d, key2, sigma.reshape(1, 1).astype(jnp.float32), tiles)
 
 
+def compress_rng_pallas_batched(x2d: jax.Array, key2: jax.Array,
+                                sigma: jax.Array, *, z,
+                                interpret: bool) -> jax.Array:
+    """Client-batched fused encode: the vmap lowering of
+    :func:`compress_rng_pallas`, with the client axis folded into the GRID.
+
+    x2d: (n * rows, 1024) f32 — n clients' padded rows stacked contiguously
+    (rows % ROWS_BLK == 0); key2: (n, 2) uint32; sigma: (n,) f32 ->
+    (n * rows, 128) u8.
+
+    Same kernel body as the unbatched call: the tile-id operand carries the
+    client-LOCAL tile index and the key/sigma BlockSpecs select client c's
+    row, so every client sees exactly the counter stream of its own
+    unbatched call — bit-identical bytes. Folding the batch into the grid
+    (instead of letting vmap batch the pallas_call) keeps each grid step's
+    output write loop-indexed: JAX's pallas batching rule would instead
+    add the client axis to every dynamic-update-slice, which XLA lowers to
+    a per-tile copy of the WHOLE (n, rows, 128) buffer — the measured
+    superlinear per-client encode cost at vmap widths >= 64.
+    """
+    n = key2.shape[0]
+    rows_all = x2d.shape[0]
+    n_tiles = rows_all // n // ROWS_BLK
+    tiles = jnp.arange(n_tiles, dtype=jnp.int32).reshape(-1, 1)
+    return pl.pallas_call(
+        functools.partial(_compress_rng_kernel, z=z),
+        grid=(n, n_tiles),
+        in_specs=[
+            pl.BlockSpec((ROWS_BLK, COLS), lambda c, i: (c * n_tiles + i, 0)),
+            pl.BlockSpec((1, 2), lambda c, i: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, i: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_BLK, LANE), lambda c, i: (c * n_tiles + i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_all, LANE), jnp.uint8),
+        interpret=interpret,
+    )(x2d, key2, sigma.reshape(-1, 1).astype(jnp.float32), tiles)
+
+
 def _unpack_sum_kernel(p_ref, o_ref):
     p = p_ref[...]                                   # (n, R, 128) u8
     weights = (jnp.uint8(1) << jnp.arange(PACK, dtype=jnp.uint8))

@@ -74,6 +74,20 @@ def main():
                          "encoded payload stack (or the participation mask) "
                          "under every cohort plan (grammar: "
                          "src/repro/fed/adversary.py, docs/API.md)")
+    ap.add_argument("--round-mode", default="sync", metavar="SPEC",
+                    help="round execution mode: 'sync' (barrier round) or "
+                         "'async(deadline=T[,min_clients=M][,staleness="
+                         "none|poly(a)|cutoff(s)])' — deadline-fold round: "
+                         "on-time payloads fold now, late ones buffer and "
+                         "fold s rounds later at the staleness weight, "
+                         "failures get dead-client mask semantics "
+                         "(grammar: docs/API.md)")
+    ap.add_argument("--latency", default="zero", metavar="SPEC",
+                    help="simulated client latency for async rounds: 'zero',"
+                         " 'const(t=T)', 'linear(base=B,step=S)', "
+                         "'lognormal(median=M,sigma=S)', "
+                         "'pareto(xm=X,alpha=A)', each with optional "
+                         "fail=P / seed=N (src/repro/fed/async_server.py)")
     ap.add_argument("--debug-wire", action="store_true",
                     help="runtime-verify the 0/1 mask membership contract "
                          "before every popcount reduce (checkify-wrapped "
@@ -131,17 +145,23 @@ def main():
                   weights_are_mask=True,
                   dynamic_sigma=args.plateau,
                   cohort=args.cohort,
-                  adversary=args.adversary)
+                  adversary=args.adversary,
+                  round_mode=args.round_mode,
+                  latency=args.latency)
     if args.debug_wire:  # else keep the REPRO_DEBUG_WIRE env default
         ctx_kw["debug_wire"] = True
     ctx = fedavg.RoundContext(**ctx_kw)
-    if ctx.debug_wire and fedavg.CohortPolicy.parse(args.cohort).feed == "host":
-        raise SystemExit("--debug-wire is not supported on stream(feed=host): "
-                         "the host driver jits per-shard kernels internally "
-                         "and cannot functionalize the membership check")
+    host_loop = (fedavg.CohortPolicy.parse(args.cohort).feed == "host"
+                 or fedavg.RoundModePolicy.parse(args.round_mode).mode
+                 == "async")
+    if ctx.debug_wire and host_loop:
+        raise SystemExit("--debug-wire is not supported on stream(feed=host) "
+                         "or async rounds: these host-loop drivers jit "
+                         "per-shard kernels internally and cannot "
+                         "functionalize the membership check")
     step = fedavg.build_round_step(bundle.loss_fn, comp, cfg, ctx)
     checked = None
-    if fedavg.CohortPolicy.parse(args.cohort).feed != "host":
+    if not host_loop:
         if ctx.debug_wire:
             # debug mode refuses to run unchecked: the membership check is a
             # checkify.check, so the jitted step must be functionalized and

@@ -1,0 +1,294 @@
+"""Async deadline-round driver: exactness + straggler-law suite.
+
+The async driver (fed/async_server.py, ``RoundContext.round_mode =
+"async(deadline=T,...)"``) replaces the sync round barrier with a
+deadline fold: on-time payloads fold into the current round, late ones
+buffer and fold into round r+s at the staleness weight, failures get
+dead-client mask semantics. Contract pinned here:
+
+  * ZERO simulated latency + a deadline covering everyone -> the async
+    round is BIT-identical (params, residuals, metrics) to the sync
+    ``stream(feed=host)`` round — the async shard pass IS the sync host
+    driver's computation;
+  * a deadline drops EXACTLY the clients the latency model puts past it
+    (closed-form with the linear model), and under ``staleness=none``
+    the result equals a sync round with those clients masked out —
+    residuals frozen, bit-identical;
+  * stale folds carry the closed-form law weight ((1+s)^-a poly, 0/1
+    cutoff) and show up in the participation metric as fractional
+    weight, round by round;
+  * ``min_clients=M`` extends the effective deadline to the M-th
+    fastest live client;
+  * the latency model and the whole driver are deterministic — same
+    spec, same bytes — and compose with fed/adversary.py attacks.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core import fedavg
+from repro.core.context import RoundContext, RoundModePolicy
+from repro.fed.async_server import (LatencyModel, build_async_round_step,
+                                    parse_latency, partition_round,
+                                    simulate_close_times, staleness_rounds)
+
+
+# ---------------------------------------------------------------------------
+# policy + latency spec parsing
+# ---------------------------------------------------------------------------
+
+def test_round_mode_policy_parse():
+    assert RoundModePolicy.parse("sync").mode == "sync"
+    pol = RoundModePolicy.parse("async(deadline=2.5)")
+    assert (pol.mode, pol.deadline, pol.min_clients, pol.staleness) == \
+        ("async", 2.5, 0, "none")
+    pol = RoundModePolicy.parse(
+        "async(deadline=1.0,min_clients=4,staleness=poly(0.5))")
+    assert (pol.min_clients, pol.staleness, pol.staleness_arg) == \
+        (4, "poly", 0.5)
+    pol = RoundModePolicy.parse("async(deadline=1,staleness=cutoff(3))")
+    assert (pol.staleness, pol.staleness_arg) == ("cutoff", 3.0)
+    # idempotent on an already-parsed policy
+    assert RoundModePolicy.parse(pol) is pol
+    for bad in ["nope", "async", "async()", "async(deadline=0)",
+                "async(deadline=-1)", "sync(deadline=1)",
+                "async(deadline=1,staleness=exp(2))",
+                "async(deadline=1,frac=2)"]:
+        with pytest.raises(ValueError):
+            RoundModePolicy.parse(bad)
+    with pytest.raises(ValueError):
+        RoundContext(round_mode="async(deadline=0)")
+    # latency= is an async-only knob
+    with pytest.raises(ValueError):
+        RoundContext(latency="const(t=1)")
+    RoundContext(round_mode="async(deadline=1)", latency="const(t=1)")
+
+
+def test_stale_weight_closed_form():
+    poly = RoundModePolicy.parse("async(deadline=1,staleness=poly(0.7))")
+    for s in [1, 2, 5]:
+        assert poly.stale_weight(s) == pytest.approx((1.0 + s) ** -0.7)
+    assert poly.stale_weight(0) == 1.0
+    cut = RoundModePolicy.parse("async(deadline=1,staleness=cutoff(2))")
+    assert [cut.stale_weight(s) for s in [0, 1, 2, 3]] == [1.0, 1.0, 1.0, 0.0]
+    none = RoundModePolicy.parse("async(deadline=1)")
+    assert none.stale_weight(1) == 0.0 and none.stale_weight(0) == 1.0
+
+
+def test_parse_latency():
+    assert parse_latency("zero").kind == "zero"
+    m = parse_latency("linear(base=0.5,step=0.25,seed=3)")
+    assert (m.kind, m.base, m.step, m.seed) == ("linear", 0.5, 0.25, 3)
+    m = parse_latency("lognormal(median=2,sigma=1.5,fail=0.1)")
+    assert (m.kind, m.median, m.sigma, m.fail) == ("lognormal", 2.0, 1.5, 0.1)
+    assert parse_latency("pareto(xm=1,alpha=2)").alpha == 2.0
+    assert parse_latency(m) is m          # idempotent
+    for bad in ["warp", "const(q=1)", "const(t=1", "linear(base)",
+                "lognormal(fail=1.5)", "pareto(alpha=0)"]:
+        with pytest.raises(ValueError):
+            parse_latency(bad)
+
+
+def test_latency_model_deterministic():
+    m = parse_latency("lognormal(median=1,sigma=1,fail=0.2,seed=9)")
+    a, b = m.sample(3, 64), m.sample(3, 64)
+    np.testing.assert_array_equal(a, b)           # same (seed, round)
+    assert not np.array_equal(a, m.sample(4, 64))  # new round, new draw
+    assert np.any(np.isinf(a))                     # failures draw +inf
+    lin = parse_latency("linear(base=1,step=2)")
+    np.testing.assert_array_equal(lin.sample(0, 4), [1., 3., 5., 7.])
+
+
+# ---------------------------------------------------------------------------
+# the deadline partition (host-side closed forms)
+# ---------------------------------------------------------------------------
+
+def test_staleness_rounds_closed_form():
+    # s = ceil(lat / deadline) - 1, clamped to >= 1 for anything late
+    np.testing.assert_array_equal(
+        staleness_rounds(np.array([1.1, 2.0, 2.1, 5.0, np.inf]), 1.0),
+        [1., 1., 2., 4., np.inf])
+
+
+def test_partition_round_min_clients_extends_deadline():
+    pol = RoundModePolicy.parse("async(deadline=0.5,min_clients=4)")
+    on_time, s, w, close = partition_round(
+        pol, np.arange(8.0), np.ones(8, bool))
+    # deadline 0.5 alone admits only client 0; min_clients=4 waits for the
+    # 4th fastest live latency (client 3 at t=3)
+    np.testing.assert_array_equal(on_time, [1, 1, 1, 1, 0, 0, 0, 0])
+    assert close == 3.0
+    # dead clients can't satisfy the quorum
+    on_time, _, _, _ = partition_round(
+        pol, np.arange(8.0), np.arange(8) >= 2)
+    np.testing.assert_array_equal(on_time[:2], [0, 0])
+    assert int(np.sum(on_time)) == 4
+
+
+def test_partition_round_drops_failed_clients():
+    pol = RoundModePolicy.parse("async(deadline=2,staleness=poly(1))")
+    lat = np.array([0.5, np.inf, 3.0, 1.0])
+    on_time, s, w, _ = partition_round(pol, lat, np.ones(4, bool))
+    np.testing.assert_array_equal(on_time, [1, 0, 0, 1])
+    assert w[1] == 0.0 and s[1] == 0        # failure: dead, never folds
+    assert s[2] == 1 and w[2] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the async driver vs the sync round
+# ---------------------------------------------------------------------------
+
+def _run_rounds(spec, ctx_kw, *, n=8, d=64, rounds=3, seed=5, mask=None):
+    comp = C.Pipeline(spec)
+    cfg = fedavg.FedConfig(n_clients=n, client_lr=0.01, server_lr=0.3)
+    ctx = RoundContext(**ctx_kw)
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2)
+    step = fedavg.build_round_step(loss_fn, comp, cfg, ctx)
+    y = jax.random.normal(jax.random.PRNGKey(seed), (1, n, 1, d))
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    mask = jnp.ones((1, n)) if mask is None else mask
+    metrics = []
+    for _ in range(rounds):
+        st, m = step(st, {"y": y}, mask)
+        metrics.append(m)
+    return st, metrics
+
+
+def _assert_state_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.params["x"]),
+                                  np.asarray(b.params["x"]))
+    if a.comp_state is not None or b.comp_state is not None:
+        np.testing.assert_array_equal(np.asarray(a.comp_state),
+                                      np.asarray(b.comp_state))
+
+
+_MASK8 = jnp.ones((1, 8)).at[0, jnp.asarray([1, 4, 6])].set(0.0)
+
+
+@pytest.mark.parametrize("spec", ["zsign_packed(z=1,sigma=0.7)", "ef|zsign"])
+@pytest.mark.parametrize("shard", [3, 8])
+def test_async_zero_latency_bit_identical_to_sync(spec, shard):
+    """THE invariant: zero latency + a deadline covering every client ->
+    the async round is bit-identical to the sync stream round — params,
+    EF residuals, and every metric — dead clients included."""
+    sync_kw = dict(cohort=f"stream(shard={shard},feed=host)")
+    ref, mref = _run_rounds(spec, sync_kw, mask=_MASK8)
+    got, mgot = _run_rounds(spec, {**sync_kw,
+                                   "round_mode": "async(deadline=1.0)"},
+                            mask=_MASK8)
+    _assert_state_equal(ref, got)
+    for a, b in zip(mref, mgot):
+        assert float(a.loss) == float(b.loss)
+        assert float(a.participation) == float(b.participation)
+        assert float(a.uplink_bits) == float(b.uplink_bits)
+        assert int(a.shard_clients) == int(b.shard_clients)
+
+
+def test_async_deadline_drops_exactly_the_late_clients():
+    """linear(base=0,step=1) latency + deadline=2.5 + staleness=none:
+    clients 0..2 are on time, 3..7 never compute — the async run must be
+    bit-identical (params AND frozen residuals) to a sync run that masks
+    clients 3..7 out."""
+    got, mg = _run_rounds("ef|zsign",
+                          dict(cohort="stream(shard=3,feed=host)",
+                               round_mode="async(deadline=2.5)",
+                               latency="linear(base=0,step=1)"))
+    mask = jnp.ones((1, 8)).at[0, jnp.asarray([3, 4, 5, 6, 7])].set(0.0)
+    ref, _ = _run_rounds("ef|zsign",
+                         dict(cohort="stream(shard=3,feed=host)"), mask=mask)
+    _assert_state_equal(ref, got)
+    assert [float(m.participation) for m in mg] == [3.0, 3.0, 3.0]
+
+
+def test_async_staleness_fold_matches_closed_form_law():
+    """poly(1.0) staleness under linear latency: clients 3..5 arrive one
+    round late at weight 1/2, clients 6..7 two rounds late at weight 1/3.
+    The participation metric is the total folded weight, so the law is
+    directly observable round by round:
+      round 0: 3 on-time                                  -> 3.0
+      round 1: 3 + 3*(1/2)                                -> 4.5
+      round 2: 3 + 3*(1/2) + 2*(1/3)                      -> 5.1667"""
+    pol = RoundModePolicy.parse("async(deadline=2.5,staleness=poly(1.0))")
+    for i, s_want in [(3, 1), (4, 1), (5, 1), (6, 2), (7, 2)]:
+        assert max(1, math.ceil(i / 2.5) - 1) == s_want
+        assert pol.stale_weight(s_want) == pytest.approx(1 / (1 + s_want))
+    _, ms = _run_rounds("ef|zsign",
+                        dict(cohort="stream(shard=3,feed=host)",
+                             round_mode="async(deadline=2.5,"
+                                        "staleness=poly(1.0))",
+                             latency="linear(base=0,step=1)"))
+    want = [3.0, 3.0 + 3 * 0.5, 3.0 + 3 * 0.5 + 2 / 3]
+    for m, w in zip(ms, want):
+        assert float(m.participation) == pytest.approx(w, rel=1e-6)
+
+
+def test_async_cutoff_staleness_keeps_late_payloads_whole():
+    """cutoff(s) staleness folds late payloads at weight 1 (within the
+    window): with every client live and a cutoff admitting them all, the
+    steady-state participation recovers the FULL cohort — nothing is
+    down-weighted, only delayed."""
+    _, ms = _run_rounds("zsign_packed(z=1,sigma=0.7)",
+                        dict(cohort="stream(shard=3,feed=host)",
+                             round_mode="async(deadline=2.5,"
+                                        "staleness=cutoff(2))",
+                             latency="linear(base=0,step=1)"), rounds=4)
+    # rounds 0..3: 3 on-time; +3 one-late from r>=1; +2 two-late from r>=2
+    want = [3.0, 6.0, 8.0, 8.0]
+    assert [float(m.participation) for m in ms] == want
+
+
+def test_async_composes_with_adversary():
+    """fed/adversary.py composes: dropout hits the mask BEFORE the latency
+    partition (dropped clients free their deadline slot), sign_flip
+    corrupts payload bytes identically under sync and async — and the
+    whole composition is deterministic (two runs, same bytes)."""
+    kw = dict(cohort="stream(shard=3,feed=host)",
+              round_mode="async(deadline=2.5,staleness=poly(1.0))",
+              latency="linear(base=0,step=1)")
+    for adv in ["sign_flip(f=2)", "dropout(f=3)"]:
+        a, ma = _run_rounds("ef|zsign", {**kw, "adversary": adv})
+        b, mb = _run_rounds("ef|zsign", {**kw, "adversary": adv})
+        _assert_state_equal(a, b)
+        assert [float(m.participation) for m in ma] == \
+            [float(m.participation) for m in mb]
+    # zero latency + adversary: async == sync, attack bytes included
+    ref, _ = _run_rounds("ef|zsign",
+                         dict(cohort="stream(shard=3,feed=host)",
+                              adversary="sign_flip(f=2)"))
+    got, _ = _run_rounds("ef|zsign",
+                         dict(cohort="stream(shard=3,feed=host)",
+                              round_mode="async(deadline=1.0)",
+                              adversary="sign_flip(f=2)"))
+    _assert_state_equal(ref, got)
+
+
+def test_async_poly_rejects_weights_are_mask_pipelines():
+    """Fractional stale weights break the static weights_are_mask 0/1
+    contract (vote/popcount laws) — the builder must refuse the combo."""
+    comp = C.Pipeline("zsign_packed(z=1,sigma=0.7)")
+    cfg = fedavg.FedConfig(n_clients=8, client_lr=0.01, server_lr=0.3)
+    ctx = RoundContext(round_mode="async(deadline=1,staleness=poly(0.5))",
+                       weights_are_mask=True)
+    with pytest.raises(ValueError, match="weights_are_mask"):
+        fedavg.build_round_step(lambda p, b: jnp.sum(p["x"]), comp, cfg, ctx)
+
+
+def test_simulate_close_times_beats_sync_barrier_on_heavy_tail():
+    """The benchmark's row source: under a heavy-tail latency model the
+    async close (the deadline) sits far below the sync barrier (the
+    slowest straggler) at the tail percentiles."""
+    pol = RoundModePolicy.parse("async(deadline=2.0,staleness=poly(0.5))")
+    ct = simulate_close_times(
+        pol, parse_latency("lognormal(median=1.0,sigma=1.0,seed=3)"),
+        rounds=50, total=64)
+    assert ct.shape == (50, 2)
+    assert np.percentile(ct[:, 0], 90) <= pol.deadline + 1e-12
+    assert np.percentile(ct[:, 0], 90) < 0.5 * np.percentile(ct[:, 1], 90)
+    # zero latency: both close instantly (no idle deadline wait)
+    ct0 = simulate_close_times(pol, parse_latency("zero"), 3, 8)
+    np.testing.assert_array_equal(ct0, 0.0)

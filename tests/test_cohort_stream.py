@@ -216,6 +216,26 @@ def test_wire_fold_fp32_weights_exact_at_client_blk_multiples():
     np.testing.assert_array_equal(np.asarray(acc), want)
 
 
+@pytest.mark.parametrize("split", [1, 3, 5, 7, 8, 11, 20])
+def test_wire_fold_fp32_weights_exact_at_any_split(split):
+    """The structured SignFoldAcc carry makes the fp32-weighted fold
+    bit-identical to one concatenated reduce at ANY partition — the
+    pending-row buffer preserves the full call's 8-client LUT blocking, so
+    off-blk splits no longer re-associate the sums. Bytes-level equality
+    (tobytes) also pins signed zeros."""
+    n, n_bytes = 20, 96
+    rng = np.random.RandomState(3)
+    packed = jnp.asarray(rng.randint(0, 256, (n, n_bytes)), jnp.uint8)
+    w = jnp.asarray(rng.rand(n).astype(np.float32))
+    want = np.asarray(wire.unpack_sum(packed, w))
+    acc = wire.sign_fold_init(n_bytes)
+    for lo in range(0, n, split):
+        acc = wire.unpack_sum(packed[lo:lo + split], w[lo:lo + split],
+                              acc=acc)
+    got = np.asarray(wire.sign_fold_finalize(acc))
+    assert got.tobytes() == want.tobytes()
+
+
 def test_scatter_and_dense_fold():
     rng = np.random.RandomState(2)
     vals = jnp.asarray(rng.randint(-8, 8, (6, 3)).astype(np.float32))
@@ -291,18 +311,18 @@ def test_stream_bit_identical_ef_zsign_at_blk_multiple():
                                   np.asarray(got.comp_state))
 
 
-@pytest.mark.parametrize("shard", [1, 7])
-def test_stream_close_ef_zsign_any_shard(shard):
-    """Off-blk shard sizes change the fp32 association order of the EF
-    scale-weighted reduce: rounding-close, never drifting."""
+@pytest.mark.parametrize("shard", [1, 7, 64])
+def test_stream_bit_identical_ef_zsign_any_shard(shard):
+    """EF per-client fp32 scale weights at OFF-blk shard sizes: the
+    SignFoldAcc carry keeps the streamed fold in the full call's 8-client
+    block order, so streaming is bit-identical to vmap — params AND
+    residuals — at every shard size, not just blk multiples."""
     ref, _ = _run_rounds("ef|zsign", "vmap", mask=_MASK16)
     got, _ = _run_rounds("ef|zsign", f"stream(shard={shard})", mask=_MASK16)
-    np.testing.assert_allclose(np.asarray(ref.params["x"]),
-                               np.asarray(got.params["x"]), rtol=5e-5,
-                               atol=1e-7)
-    np.testing.assert_allclose(np.asarray(ref.comp_state),
-                               np.asarray(got.comp_state), rtol=5e-5,
-                               atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                  np.asarray(got.params["x"]))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state),
+                                  np.asarray(got.comp_state))
 
 
 @pytest.mark.parametrize("shard", [1, 7, 64])
@@ -432,6 +452,25 @@ def test_round_metrics_record_shard():
     assert int(m.shard_clients) == 16
 
 
+def test_round_metrics_shard_clients_dtype_stable_when_buffered():
+    """shard_clients is a DEVICE int32 scalar on every driver path (the
+    field default, the jitted stream/vmap rounds, and the eager host-fed
+    round), so a buffered metrics window stacks to int32 — a host np.int32
+    leaking in would silently re-derive the stacked dtype."""
+    default = fedavg.RoundMetrics(*([jnp.zeros(())] * 4)).shard_clients
+    assert isinstance(default, jax.Array) and default.dtype == jnp.int32
+    buffered = []
+    for cohort, jit in [("stream(shard=7)", True), ("vmap", True),
+                        ("stream(shard=5,feed=host)", False)]:
+        _, m = _run_rounds("zsign(z=1,sigma=0.5)", cohort, rounds=1, jit=jit)
+        assert isinstance(m.shard_clients, jax.Array), cohort
+        assert m.shard_clients.dtype == jnp.int32, cohort
+        buffered.append(m.shard_clients)
+    stacked = jnp.stack(buffered + [default])
+    assert stacked.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(stacked), [7, 0, 5, 0])
+
+
 @pytest.mark.parametrize("devices", [_devices(2)])
 def test_shard_map_groups_flatten_to_cohort(devices):
     """client_groups > 1 under the device axis: the (G, N) cohort flattens
@@ -498,10 +537,10 @@ def test_stream_dead_clients_keep_residual_and_padding_is_inert():
             if i not in (2, 9):
                 assert np.any(after[0, i] != before[0, i]), i
         outs[cohort] = after
-    # shard 4 streams 10 clients as 3 shards (2 padded slots); blk-off fold
-    # of fp32 scale weights -> rounding-close residuals across plans
-    np.testing.assert_allclose(outs["vmap"], outs["stream(shard=4)"],
-                               rtol=5e-5, atol=1e-7)
+    # shard 4 streams 10 clients as 3 shards (2 padded slots); the
+    # SignFoldAcc carry keeps the off-blk fp32 scale-weighted fold in full
+    # call order -> bit-identical residuals across plans, padding included
+    np.testing.assert_array_equal(outs["vmap"], outs["stream(shard=4)"])
 
 
 def test_stream_groups_flatten_to_cohort():
