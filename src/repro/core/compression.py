@@ -63,7 +63,8 @@ A :class:`Pipeline` is transforms + one codec, buildable from a spec string:
 and exposes the engine-facing compressor interface (core/fedavg.py consumes
 it unchanged):
 
-    init_state(n_coords)              -> per-client residual buffer or None
+    init_state(n_coords)              -> keyed per-client state dict
+                                         ({slot_name: buffer}) or None
     encode(key, flat, state, sigma)   -> (payload, new_state)  # client
     aggregate(payload, mask, n_coords)-> masked SUM accumulator   # server
                                          ((d_pad,) f32, or the (2, d_pad)
@@ -78,13 +79,21 @@ consumes payloads stacked on a leading client axis with the (n_clients,)
 participation mask; all decoders are linear in the per-client encodings, so
 group-sum aggregation across sequential client groups is exact.
 
-Error-feedback composition contract: ``ef`` adds its residual to the buffer
-it receives; after the codec runs, the new residual is
-``codec_input - local_decode(payload)`` where ``local_decode`` is the exact
-per-client value the server will attribute to this client (scale * signs for
-the sign codec, the scattered values for top-k, the quantized levels for
-qsgd). That one rule reproduces EF-SignSGD and EF-top-k bit-exactly and
-makes EF work over every codec.
+State composition contract: every STATEFUL stage declares named slots
+through ``state_spec(n_coords)`` (``fed/client_state.StateSlot``); the
+pipeline's client state is the keyed dict ``{slot_name: buffer}`` and slot
+names must be unique across stages (collision -> build-time error). A
+stateful stage participates in ``encode`` through two hooks:
+``pre_encode(key, p, state, sigma)`` maps the buffer forward and
+``post_encode(state, codec_input, local_decode)`` returns its updated
+slots, where ``local_decode`` is the exact per-client value the server
+will attribute to this payload (scale * signs for the sign codec, the
+scattered values for top-k, the quantized levels for qsgd).
+
+Error-feedback is the canonical instance: ``ef`` adds its residual slot to
+the buffer it receives; after the codec runs, the new residual is
+``codec_input - local_decode(payload)``. That one rule reproduces
+EF-SignSGD and EF-top-k bit-exactly and makes EF work over every codec.
 
 Backend policy lives in core/context.py: ``RoundContext`` carries the
 deployment's ``agg_backend`` / ``encode_backend`` / mask guarantee, and
@@ -117,10 +126,13 @@ from repro.core.context import (AGG_BACKENDS, ENCODE_BACKENDS, RoundContext,
                                 resolve_backend)
 from repro.core.wire import (WireFormat, pack_flat, pack_signs,
                              unpack_signs, unpack_sum)
+# dependency-free substrate module (jax-only): no core <-> fed cycle
+from repro.fed import client_state as cstate_lib
+from repro.fed.client_state import StateSlot
 
 __all__ = [
     "Pipeline", "SignCodec", "QSGDCodec", "TopKCodec", "DenseCodec",
-    "ErrorFeedback", "DPTransform", "RoundContext",
+    "ErrorFeedback", "DPTransform", "RoundContext", "StateSlot",
     "Compressor", "ZSignCompressor", "StoSignCompressor", "EFSignCompressor",
     "QSGDCompressor", "TopKCompressor", "DPGaussianCompressor",
     "PackedZSignCompressor", "available", "global_norm",
@@ -271,20 +283,28 @@ def _norm_z(z) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class ErrorFeedback:
-    """Per-client error-feedback residual (the only stateful stage).
+    """Per-client error-feedback residual (slot ``"ef"``).
 
     Pre-codec: the buffer becomes ``p = flat + e``. Post-codec: the new
-    residual is ``p - local_decode(payload)`` — exactly what the server will
-    NOT see of this client's update. Dead clients keep their residual
-    bit-exactly (the engine masks the state update). Composes with every
-    codec; with the sign codec the spec parser defaults the codec to
+    residual is ``codec_input - local_decode(payload)`` — exactly what the
+    server will NOT see of this client's update. Dead clients keep their
+    residual bit-exactly (the engine masks the state update). Composes with
+    every codec; with the sign codec the spec parser defaults the codec to
     ``scale="mean_abs"`` so ``ef|zsign`` IS EF-SignSGD.
     """
     spec_name = "ef"
     stateful = True
 
-    def init_state(self, n_coords: int) -> jax.Array:
-        return jnp.zeros((n_coords,), jnp.float32)
+    def state_spec(self, n_coords: int):
+        return (StateSlot("ef", (n_coords,), jnp.float32, "client"),)
+
+    def pre_encode(self, key, p, state, sigma=None):
+        del key, sigma
+        return p + state["ef"]
+
+    def post_encode(self, state, codec_input, local):
+        del state
+        return {"ef": codec_input - local}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -921,9 +941,12 @@ class Pipeline:
 
     Construction-time rules (idempotent, applied in ``__post_init__``):
 
-      * at most one ``ef`` transform (the single stateful stage — its flat
-        residual buffer IS the pipeline state the engine replicates per
-        client);
+      * stateful stages declare named slots (``state_spec``); slot names
+        must be unique across stages — a collision is a build-time error.
+        The pipeline state the engine replicates per client is the keyed
+        dict ``{slot_name: buffer}`` over the client-scope slots;
+      * at most one ``ef`` transform (two residuals would double-count the
+        compression error);
       * a ``dp`` transform's noise is FUSED into a downstream
         :class:`SignCodec`'s sigma (see :class:`DPTransform`): the codec
         must not carry its own sigma at the same time.
@@ -979,7 +1002,12 @@ class Pipeline:
         if getattr(codec, "randomized", False):
             randomized.append(len(transforms))
         object.__setattr__(self, "_n_random", len(randomized))
-        object.__setattr__(self, "_ef_index", ef_idx[0] if ef_idx else None)
+        stateful = tuple(i for i, t in enumerate(transforms)
+                         if getattr(t, "stateful", False))
+        object.__setattr__(self, "_stateful_idx", stateful)
+        # slot-name collision check (shapes irrelevant at build time) —
+        # multi-state pipelines fail loudly here, not deep in the engine
+        cstate_lib.collect_slots([transforms[i] for i in stateful], 0)
         # dynamic (Plateau) sigma routes to the sign codec when present,
         # else to the last noise-bearing dp transform (legacy dpgauss law).
         # The noise-free EF-SignSGD wire (scale=mean_abs, sigma == 0) has NO
@@ -1080,10 +1108,16 @@ class Pipeline:
         when the wire layout is compressed — see core/fedavg.py."""
         return self.wire_format().layout != "dense"
 
+    def state_slots(self, n_coords: int):
+        """All :class:`StateSlot` declarations of this pipeline's stateful
+        stages, in stage order (both client- and server-scope)."""
+        return cstate_lib.collect_slots(
+            [self.transforms[i] for i in self._stateful_idx], n_coords)
+
     def init_state(self, n_coords: int):
-        if self._ef_index is None:
-            return None
-        return self.transforms[self._ef_index].init_state(n_coords)
+        """Zero-initialized per-client state: the keyed ``{slot: buffer}``
+        dict over client-scope slots, or None for stateless pipelines."""
+        return cstate_lib.init_tree(self.state_slots(n_coords), "client")
 
     def _stage_key(self, key, i: int):
         # a single random stage consumes the raw client key (bit-compat with
@@ -1094,7 +1128,8 @@ class Pipeline:
         return jax.random.fold_in(key, i)
 
     def _ef_kernel_path(self, sigma) -> bool:
-        return (self._ef_index is not None and len(self.transforms) == 1
+        return (len(self.transforms) == 1
+                and isinstance(self.transforms[0], ErrorFeedback)
                 and isinstance(self.codec, SignCodec)
                 and self.codec.use_kernel
                 and self.codec.scale == "mean_abs"
@@ -1108,21 +1143,27 @@ class Pipeline:
         if self._ef_kernel_path(sigma):
             # one fused VMEM pass: bitpacked payload + residual together
             from repro.kernels.efsign import ops as EK
-            scale = jnp.mean(jnp.abs(flat + state))
-            packed, res = EK.ef_sign_encode(flat, state, scale)
-            return {"packed": packed, "scale": scale}, res
+            res = state["ef"]
+            scale = jnp.mean(jnp.abs(flat + res))
+            packed, res = EK.ef_sign_encode(flat, res, scale)
+            return {"packed": packed, "scale": scale}, {"ef": res}
         p = flat
         for i, t in enumerate(self.transforms):
-            if isinstance(t, ErrorFeedback):
-                p = p + state
+            sig_i = sigma if self._sigma_stage == i else None
+            if getattr(t, "stateful", False):
+                p = t.pre_encode(self._stage_key(key, i), p, state,
+                                 sigma=sig_i)
             else:
-                p = t.apply(self._stage_key(key, i), p,
-                            sigma=(sigma if self._sigma_stage == i else None))
+                p = t.apply(self._stage_key(key, i), p, sigma=sig_i)
         payload, local = self.codec.encode_with_decode(
             self._stage_key(key, len(self.transforms)), p,
             sigma=(sigma if self._sigma_stage == "codec" else None),
-            need_decode=self._ef_index is not None)
-        new_state = state if self._ef_index is None else p - local
+            need_decode=bool(self._stateful_idx))
+        if not self._stateful_idx:
+            return payload, state
+        new_state = dict(state)
+        for i in self._stateful_idx:
+            new_state.update(self.transforms[i].post_encode(state, p, local))
         return payload, new_state
 
     def aggregate(self, payload, mask: jax.Array, n_coords: int,

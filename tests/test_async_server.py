@@ -163,8 +163,9 @@ def _assert_state_equal(a, b):
     np.testing.assert_array_equal(np.asarray(a.params["x"]),
                                   np.asarray(b.params["x"]))
     if a.comp_state is not None or b.comp_state is not None:
-        np.testing.assert_array_equal(np.asarray(a.comp_state),
-                                      np.asarray(b.comp_state))
+        for la, lb in zip(jax.tree_util.tree_leaves(a.comp_state),
+                          jax.tree_util.tree_leaves(b.comp_state)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
 _MASK8 = jnp.ones((1, 8)).at[0, jnp.asarray([1, 4, 6])].set(0.0)

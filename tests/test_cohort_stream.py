@@ -307,8 +307,8 @@ def test_stream_bit_identical_ef_zsign_at_blk_multiple():
     got, _ = _run_rounds("ef|zsign", f"stream(shard={blk})", mask=_MASK16)
     np.testing.assert_array_equal(np.asarray(ref.params["x"]),
                                   np.asarray(got.params["x"]))
-    np.testing.assert_array_equal(np.asarray(ref.comp_state),
-                                  np.asarray(got.comp_state))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state["ef"]),
+                                  np.asarray(got.comp_state["ef"]))
 
 
 @pytest.mark.parametrize("shard", [1, 7, 64])
@@ -321,8 +321,8 @@ def test_stream_bit_identical_ef_zsign_any_shard(shard):
     got, _ = _run_rounds("ef|zsign", f"stream(shard={shard})", mask=_MASK16)
     np.testing.assert_array_equal(np.asarray(ref.params["x"]),
                                   np.asarray(got.params["x"]))
-    np.testing.assert_array_equal(np.asarray(ref.comp_state),
-                                  np.asarray(got.comp_state))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state["ef"]),
+                                  np.asarray(got.comp_state["ef"]))
 
 
 @pytest.mark.parametrize("shard", [1, 7, 64])
@@ -336,8 +336,8 @@ def test_stream_bit_identical_topk_dyadic(shard):
     got, _ = _run_rounds("ef|topk(frac=0.25)", f"stream(shard={shard})", **kw)
     np.testing.assert_array_equal(np.asarray(ref.params["x"]),
                                   np.asarray(got.params["x"]))
-    np.testing.assert_array_equal(np.asarray(ref.comp_state),
-                                  np.asarray(got.comp_state))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state["ef"]),
+                                  np.asarray(got.comp_state["ef"]))
 
 
 # ---------------------------------------------------------------------------
@@ -377,8 +377,8 @@ def test_shard_map_ef_zsign_one_round(devices):
     ref, _ = _run_rounds("ef|zsign", "vmap", **kw)
     got, _ = _run_rounds("ef|zsign", f"stream(shard=8,devices={devices})",
                          **kw)
-    np.testing.assert_array_equal(np.asarray(ref.comp_state),
-                                  np.asarray(got.comp_state))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state["ef"]),
+                                  np.asarray(got.comp_state["ef"]))
     np.testing.assert_allclose(np.asarray(ref.params["x"]),
                                np.asarray(got.params["x"]), rtol=5e-5,
                                atol=1e-7)
@@ -397,8 +397,8 @@ def test_shard_map_ef_zsign_scale_none_exact_multiround(devices):
         np.testing.assert_array_equal(np.asarray(ref.params["x"]),
                                       np.asarray(got.params["x"]),
                                       err_msg=cohort)
-        np.testing.assert_array_equal(np.asarray(ref.comp_state),
-                                      np.asarray(got.comp_state),
+        np.testing.assert_array_equal(np.asarray(ref.comp_state["ef"]),
+                                      np.asarray(got.comp_state["ef"]),
                                       err_msg=cohort)
 
 
@@ -414,8 +414,8 @@ def test_shard_map_topk_dyadic_exact(devices):
                          f"stream(shard=3,devices={devices})", **kw)
     np.testing.assert_array_equal(np.asarray(ref.params["x"]),
                                   np.asarray(got.params["x"]))
-    np.testing.assert_array_equal(np.asarray(ref.comp_state),
-                                  np.asarray(got.comp_state))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state["ef"]),
+                                  np.asarray(got.comp_state["ef"]))
 
 
 def test_host_feed_bit_identical_to_device_stream():
@@ -433,8 +433,8 @@ def test_host_feed_bit_identical_to_device_stream():
                             rounds=3, jit=False)
     np.testing.assert_array_equal(np.asarray(ref.params["x"]),
                                   np.asarray(got.params["x"]))
-    np.testing.assert_array_equal(np.asarray(ref.comp_state),
-                                  np.asarray(got.comp_state))
+    np.testing.assert_array_equal(np.asarray(ref.comp_state["ef"]),
+                                  np.asarray(got.comp_state["ef"]))
     assert float(mref.loss) == float(mgot.loss)
     assert int(mgot.shard_clients) == 5
 
@@ -526,11 +526,11 @@ def test_stream_dead_clients_keep_residual_and_padding_is_inert():
         st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
                                       jax.random.PRNGKey(1))
         st, _ = step(st, {"y": y}, mask0)       # all-live: residuals nonzero
-        before = np.asarray(st.comp_state).copy()
+        before = np.asarray(st.comp_state["ef"]).copy()
         st, m = step(st, {"y": y}, mask)        # kill clients 2 and 9
-        assert st.comp_state.shape == (1, n, d)
+        assert st.comp_state["ef"].shape == (1, n, d)
         assert float(m.participation) == n - 2
-        after = np.asarray(st.comp_state)
+        after = np.asarray(st.comp_state["ef"])
         np.testing.assert_array_equal(after[0, 2], before[0, 2])
         np.testing.assert_array_equal(after[0, 9], before[0, 9])
         for i in range(n):

@@ -250,7 +250,7 @@ def test_topk_masked_aggregate_scatter():
     for f, e, s in zip(flats, encs, states):
         dense = np.zeros(d)
         dense[np.asarray(e["indices"])] = np.asarray(e["values"])
-        np.testing.assert_allclose(np.asarray(f), dense + np.asarray(s),
+        np.testing.assert_allclose(np.asarray(f), dense + np.asarray(s["ef"]),
                                    atol=1e-6)
 
 
@@ -263,8 +263,8 @@ def test_efsign_zero_coord_residual_matches_wire():
     scale = float(enc["scale"])
     decoded = scale * np.asarray(wire.unpack_signs(enc["packed"]))[:4]
     # EF invariant vs what the SERVER decodes: flat == decoded + residual
-    np.testing.assert_allclose(np.asarray(flat), decoded + np.asarray(res),
-                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(flat),
+                               decoded + np.asarray(res["ef"]), atol=1e-6)
 
 
 @pytest.mark.parametrize("d,frac,chunk", [
@@ -290,7 +290,7 @@ def test_topk_chunked_exact_equivalence_small_d(d, frac, chunk):
                                   np.asarray(e2["indices"]))
     np.testing.assert_array_equal(np.asarray(e1["values"]),
                                   np.asarray(e2["values"]))
-    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(s1["ef"]), np.asarray(s2["ef"]))
 
 
 def test_topk_chunked_distribution_large_d():

@@ -145,13 +145,13 @@ def test_dead_clients_keep_residual_exactly(spec, groups):
                                         seed=11)
     # one full-participation round so residuals become nonzero
     st, _ = step(st, b, m)
-    assert st.comp_state.shape == (groups, 4, 16)
-    assert float(jnp.sum(jnp.abs(st.comp_state))) > 0.0
-    before = np.asarray(st.comp_state).copy()
+    assert st.comp_state["ef"].shape == (groups, 4, 16)
+    assert float(jnp.sum(jnp.abs(st.comp_state["ef"]))) > 0.0
+    before = np.asarray(st.comp_state["ef"]).copy()
     # kill client 1 in every group, client 3 in the last group
     mask = m.at[:, 1].set(0.0).at[groups - 1, 3].set(0.0)
     st2, metrics = step(st, b, mask)
-    after = np.asarray(st2.comp_state)
+    after = np.asarray(st2.comp_state["ef"])
     assert float(metrics.participation) == float(jnp.sum(mask))
     for g in range(groups):
         np.testing.assert_array_equal(after[g, 1], before[g, 1])
@@ -191,8 +191,8 @@ def test_stateful_masked_groups_match_vmap_path():
     np.testing.assert_allclose(np.asarray(st1.params["x"]),
                                np.asarray(st2.params["x"]), rtol=5e-5)
     np.testing.assert_allclose(
-        np.asarray(st1.comp_state).reshape(8, -1),
-        np.asarray(st2.comp_state).reshape(8, -1), rtol=5e-5)
+        np.asarray(st1.comp_state["ef"]).reshape(8, -1),
+        np.asarray(st2.comp_state["ef"]).reshape(8, -1), rtol=5e-5)
 
 
 def test_uplink_bits_zsign_vs_identity():

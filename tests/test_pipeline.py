@@ -66,6 +66,28 @@ def test_spec_errors():
         C.Pipeline("dp(eps=2.0)|zsign")
 
 
+def test_state_slots_are_keyed_and_collisions_fail_loudly():
+    """The multi-slot state protocol: client state is a keyed dict over the
+    stateful stages' declared slots; two stages claiming the same slot name
+    is a BUILD-time error, not a silent shared buffer."""
+    p = C.Pipeline("ef|zsign")
+    st = p.init_state(16)
+    assert set(st) == {"ef"} and st["ef"].shape == (16,)
+    assert [s.name for s in p.state_slots(16)] == ["ef"]
+    assert C.Pipeline("zsign(sigma=0.5)").init_state(16) is None
+
+    class DupState:
+        spec_name = "dup"
+        stateful = True
+        randomized = False
+
+        def state_spec(self, n_coords):
+            return (C.StateSlot("ef", (n_coords,)),)
+
+    with pytest.raises(ValueError, match="collision"):
+        C.Pipeline((C.ErrorFeedback(), DupState()), C.SignCodec())
+
+
 def test_spec_roundtrips_through_canonical_string():
     for spec in ["ef|zsign", "dp(clip=1.0,noise=0.5)|zsign_packed",
                  "ef|topk(frac=0.05)", "qsgd(s=4)", "stosign", "identity"]:
@@ -101,7 +123,7 @@ def test_ef_wire_ignores_dynamic_sigma_like_legacy():
     e1, s1 = p.encode(key, flat, p.init_state(d), sigma=jnp.float32(0.7))
     np.testing.assert_array_equal(np.asarray(e0["packed"]),
                                   np.asarray(e1["packed"]))
-    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(s0["ef"]), np.asarray(s1["ef"]))
 
 
 def test_dp_fusion_requires_gaussian_sign_codec():
@@ -281,7 +303,8 @@ def test_efsign_factory_vs_ef_zsign_engine_bit_identical(groups):
                                       jax.random.PRNGKey(1))
         for _ in range(6):
             st, _ = step(st, {"y": y}, mask)
-        outs[label] = (np.asarray(st.params["x"]), np.asarray(st.comp_state))
+        outs[label] = (np.asarray(st.params["x"]),
+                       np.asarray(st.comp_state["ef"]))
     np.testing.assert_array_equal(outs["legacy"][0], outs["spec"][0])
     np.testing.assert_array_equal(outs["legacy"][1], outs["spec"][1])
     # dead clients' residuals froze after round 1 only if masked — sanity:
@@ -301,14 +324,14 @@ def test_ef_topk_residual_conservation_property(d, seed):
     is zero exactly on the selected coordinates."""
     rng = np.random.RandomState(seed)
     p = C.Pipeline("ef|topk(frac=0.2)")
-    state = p.init_state(d) + jnp.asarray(rng.randn(d), jnp.float32) * 0.1
+    state = {"ef": jnp.asarray(rng.randn(d), jnp.float32) * 0.1}
     flat = jnp.asarray(rng.randn(d), jnp.float32)
     enc, res = p.encode(None, flat, state)
     dense = np.zeros(d, np.float32)
     dense[np.asarray(enc["indices"])] = np.asarray(enc["values"])
-    np.testing.assert_array_equal(dense + np.asarray(res),
-                                  np.asarray(flat + state))
-    assert np.all(np.asarray(res)[np.asarray(enc["indices"])] == 0.0)
+    np.testing.assert_array_equal(dense + np.asarray(res["ef"]),
+                                  np.asarray(flat + state["ef"]))
+    assert np.all(np.asarray(res["ef"])[np.asarray(enc["indices"])] == 0.0)
 
 
 def test_ef_topk_error_feedback_contracts():
@@ -333,7 +356,7 @@ def test_ef_composes_over_qsgd():
     p = C.Pipeline("ef|qsgd(s=1)")
     flat = jnp.asarray(np.random.RandomState(0).randn(d), jnp.float32)
     enc, res = p.encode(jax.random.PRNGKey(3), flat, p.init_state(d))
-    np.testing.assert_allclose(np.asarray(enc) + np.asarray(res),
+    np.testing.assert_allclose(np.asarray(enc) + np.asarray(res["ef"]),
                                np.asarray(flat), atol=1e-6)
 
 
