@@ -1,0 +1,54 @@
+"""Compressed SCAFFOLD under Dirichlet label skew (the cv stage).
+
+    PYTHONPATH=src python examples/scaffold_heterogeneous.py
+
+20 clients, dirichlet_partition(alpha=0.1) — each client's label histogram
+is dominated by a couple of classes, so local pseudo-gradients point in
+systematically different directions and plain sign compression drifts
+(client drift, the SCAFFOLD problem). ``cv|zsign_packed`` keeps a per-client
+control variate c_i and a shared server variate c, corrects each update
+PRE-codec (q_i = p_i - eta * (c_i - c)), and updates both variates from the
+locally-decoded payload — the uplink stays EXACTLY 1 bit/coord, same as
+plain zsign_packed. At equal rounds the corrected run must reach a lower
+final loss.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.models.mlp import mlp_loss_builder
+from repro.core import compression, fedavg
+from repro.data import synthetic
+
+N, ROUNDS, ALPHA = 20, 150, 0.1
+x, y = synthetic.gaussian_mixture_task(n_classes=10, dim=64, n_per_class=200)
+parts = synthetic.dirichlet_partition(y, N, alpha=ALPHA, seed=0)
+init, loss_fn, acc_fn = mlp_loss_builder(64, 10)
+
+results = {}
+for name, spec in [
+        ("zsign_packed (plain)", "zsign_packed(z=1,sigma=0.05)"),
+        ("cv|zsign_packed (SCAFFOLD)",
+         "cv(eta=0.5,beta=0.5)|zsign_packed(z=1,sigma=0.05)"),
+]:
+    comp = compression.Pipeline(spec)
+    cfg = fedavg.FedConfig(n_clients=N, client_lr=0.05, server_lr=0.02,
+                           local_steps=2)
+    step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg))
+    state = fedavg.init_server_state(init(jax.random.PRNGKey(0)), cfg, comp,
+                                     jax.random.PRNGKey(1))
+    mask = jnp.ones((1, N))
+    loss = float("nan")
+    for t in range(ROUNDS):
+        batch = synthetic.client_batches(x, y, parts, (1, N, 2, 32),
+                                         seed=1, round_idx=t)
+        state, m = step(state, batch, mask)
+        loss = float(m.loss)
+    acc = acc_fn(state.params, x, y)
+    results[name] = loss
+    print(f"{name:28s} final loss={loss:.4f}  acc={acc:.3f}  "
+          f"(uplink {comp.wire_format().bits_per_coord:.0f} bit/coord)")
+
+assert results["cv|zsign_packed (SCAFFOLD)"] < results["zsign_packed (plain)"], \
+    "control variates must beat plain sign compression under label skew"
+print("OK: cv|zsign_packed beats plain zsign_packed at equal rounds "
+      f"(alpha={ALPHA} Dirichlet skew)")

@@ -15,8 +15,28 @@ buffer, applied client-side before anything touches the wire:
 
   ``ef``              error-feedback residual (Karimireddy et al. '19): adds
                       the per-client residual before the codec and records
-                      what the codec failed to transmit. The ONLY stateful
-                      stage; its state is one flat fp32 buffer per client.
+                      what the codec failed to transmit. Stateful: one flat
+                      fp32 slot ("ef") per client.
+  ``cv``              compressed SCAFFOLD control variates (SCALLION,
+                      arXiv:2308.08165): per-client variate c_i (slot "cv")
+                      plus a SHARED server variate c (server-scope slot
+                      "cv_server"); pre-codec drift correction
+                      p - eta*(c_i - c), variate updates from the locally
+                      decoded payload — the heterogeneity fix at ZERO extra
+                      wire cost. ``cv|zsign_packed`` is compressed SCAFFOLD
+                      at 1 bit/coord.
+  ``sigma_sched``     per-layer sigma schedule (paper §5 "layer-wise sigma"):
+                      a STATIC geometric ramp of per-leaf multipliers m_j
+                      from ``head`` to ``tail`` applied to the flat buffer
+                      before the codec. For sign codecs
+                      Sign(m_j*p + sigma*xi) == Sign(p + (sigma/m_j)*xi), so
+                      scaling the buffer IS running layer j at effective
+                      noise sigma/m_j — one scalar codec sigma, per-layer
+                      effect. Stateless; the server decode divides the
+                      estimate by m. Needs the round's TreeSpec
+                      (``needs_tree_spec``) to map leaves to coordinate
+                      ranges; must be the first stage and cannot compose
+                      with ``cv``.
   ``dp``              DP clip + Gaussian noise (paper Algorithm 2): clips the
                       buffer to norm ``clip`` and adds ``noise`` * N(0, I).
                       When the pipeline's codec is a sign codec the noise is
@@ -65,16 +85,25 @@ it unchanged):
 
     init_state(n_coords)              -> keyed per-client state dict
                                          ({slot_name: buffer}) or None
-    encode(key, flat, state, sigma)   -> (payload, new_state)  # client
+    init_server_state(n_coords)       -> keyed SHARED server state dict
+                                         (control variates) or None
+    encode(key, flat, state, sigma,
+           server, spec)             -> (payload, new_state)  # client
+    update_server(server, g_dec,
+                  n_live, n_total)    -> new server state       # round tail
     aggregate(payload, mask, n_coords)-> masked SUM accumulator   # server
                                          ((d_pad,) f32, or the (2, d_pad)
                                          int32 vote pair for robust agg=)
-    decode_sum(enc_sum, n_live, sigma)-> (d_pad,) f32 estimate    # server
-    decode_mean(flat_mean, sigma)     -> (d_pad,) f32 estimate (mean law)
+    decode_sum(enc_sum, n_live,
+               sigma, spec)          -> (d_pad,) f32 estimate    # server
+    decode_mean(flat_mean, sigma,
+                spec)                -> (d_pad,) f32 estimate (mean law)
     wire_format()                     -> WireFormat (dtype, bits/coord, ...)
 
 ``flat`` is the pseudo-gradient flattened ONCE by the engine
-(wire.TreeSpec); ``payload`` is what crosses the network. ``aggregate``
+(wire.TreeSpec); ``spec`` is that TreeSpec, passed exactly when the
+pipeline declares ``needs_tree_spec`` (sigma_sched); ``payload`` is what
+crosses the network. ``aggregate``
 consumes payloads stacked on a leading client axis with the (n_clients,)
 participation mask; all decoders are linear in the per-client encodings, so
 group-sum aggregation across sequential client groups is exact.
@@ -84,11 +113,15 @@ through ``state_spec(n_coords)`` (``fed/client_state.StateSlot``); the
 pipeline's client state is the keyed dict ``{slot_name: buffer}`` and slot
 names must be unique across stages (collision -> build-time error). A
 stateful stage participates in ``encode`` through two hooks:
-``pre_encode(key, p, state, sigma)`` maps the buffer forward and
-``post_encode(state, codec_input, local_decode)`` returns its updated
-slots, where ``local_decode`` is the exact per-client value the server
-will attribute to this payload (scale * signs for the sign codec, the
-scattered values for top-k, the quantized levels for qsgd).
+``pre_encode(key, p, state, sigma, server)`` maps the buffer forward and
+``post_encode(state, codec_input, local_decode, server)`` returns its
+updated slots, where ``local_decode`` is the exact per-client value the
+server will attribute to this payload (scale * signs for the sign codec,
+the scattered values for top-k, the quantized levels for qsgd) and
+``server`` is the shared server-scope tree (None unless a stage declares
+server slots). A stage owning server slots may add an
+``update_server(server, g_dec, n_live, n_total)`` hook, run once per round
+by the engine's finish step on the DECODED aggregate.
 
 Error-feedback is the canonical instance: ``ef`` adds its residual slot to
 the buffer it receives; after the codec runs, the new residual is
@@ -119,6 +152,7 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import noise as znoise
 from repro.core import wire
@@ -132,7 +166,8 @@ from repro.fed.client_state import StateSlot
 
 __all__ = [
     "Pipeline", "SignCodec", "QSGDCodec", "TopKCodec", "DenseCodec",
-    "ErrorFeedback", "DPTransform", "RoundContext", "StateSlot",
+    "ErrorFeedback", "DPTransform", "ControlVariate", "SigmaSchedule",
+    "RoundContext", "StateSlot",
     "Compressor", "ZSignCompressor", "StoSignCompressor", "EFSignCompressor",
     "QSGDCompressor", "TopKCompressor", "DPGaussianCompressor",
     "PackedZSignCompressor", "available", "global_norm",
@@ -298,13 +333,87 @@ class ErrorFeedback:
     def state_spec(self, n_coords: int):
         return (StateSlot("ef", (n_coords,), jnp.float32, "client"),)
 
-    def pre_encode(self, key, p, state, sigma=None):
-        del key, sigma
+    def pre_encode(self, key, p, state, sigma=None, server=None):
+        del key, sigma, server
         return p + state["ef"]
 
-    def post_encode(self, state, codec_input, local):
-        del state
+    def post_encode(self, state, codec_input, local, server=None):
+        del state, server
         return {"ef": codec_input - local}
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlVariate:
+    """Compressed SCAFFOLD control variates (SCALLION-style; arXiv:2308.08165).
+
+    Heterogeneous clients drift: client i's local pseudo-gradient estimates
+    its OWN data distribution, not the global one — the regime where plain
+    sign methods diverge (Stochastic-Sign SGD, arXiv:2002.10940). SCAFFOLD's
+    fix is a pair of control variates: a per-client ``c_i`` tracking what
+    client i habitually reports, and a shared server variate ``c`` tracking
+    the global mean. This stage carries both in the pipeline state substrate
+    (slots ``"cv"`` per client, ``"cv_server"`` shared) and keeps the wire
+    cost of the downstream codec UNCHANGED — the correction is pre-codec and
+    the variate updates are computed from the locally-decoded payload, so
+    nothing extra is ever transmitted:
+
+      pre-codec    q_i = p_i - eta * (c_i - c)          (drift correction)
+      client       c_i <- c_i + beta * m_i,   m_i = local_decode(payload_i)
+      server       c   <- c + beta * (n_live / N) * g_dec        (_finish)
+
+    The server law is EXACT, not approximate: participating clients move
+    their variates by beta * m_i, and for every linear-mean codec the
+    decoded aggregate is g_dec = (1/n_live) * sum_i m_i, so
+    c + (beta * n_live / N) * g_dec == c + (1/N) * sum_i (c_i' - c_i) —
+    SCAFFOLD's variate bookkeeping, recovered from the compressed-domain
+    accumulator with no dense (n_clients, d) state surface. That exactness
+    is WHY this stage refuses nonlinear decode laws (sign ``agg=vote |
+    trimmed | median``, top-k ``agg=coord``) at build time: a majority vote
+    is not a mean of local decodes, and silently drifting variates are
+    worse than a loud error.
+
+    Because the per-client corrections ``c_i - c`` are zero-mean across the
+    cohort at the variate fixed point, the server decode law is untouched —
+    ``cv|zsign_packed`` ships the same 1 bit/coord payload as
+    ``zsign_packed`` and decodes through the same Lemma-1 debias.
+    Composes with ``ef`` (the EF residual is ``codec_input - local``, where
+    codec_input already carries the cv correction — EF accounts for what
+    the codec lost of the CORRECTED buffer) and with ``dp`` upstream.
+
+    ``eta`` scales the correction (SCAFFOLD uses the client step size;
+    1.0 applies the raw variate gap), ``beta`` is the variate learning
+    rate (1.0 = SCALLION's full replacement-rate tracking).
+    """
+    eta: float = 1.0
+    beta: float = 1.0
+    spec_name = "cv"
+    stateful = True
+    randomized = False
+    #: the server-variate update law is exact only for codecs whose
+    #: decode_sum is linear in the per-client local decodes — checked at
+    #: pipeline build time
+    needs_linear_decode = True
+
+    def state_spec(self, n_coords: int):
+        return (StateSlot("cv", (n_coords,), jnp.float32, "client"),
+                StateSlot("cv_server", (n_coords,), jnp.float32, "server"))
+
+    def pre_encode(self, key, p, state, sigma=None, server=None):
+        del key, sigma
+        return p - self.eta * (state["cv"] - server["cv_server"])
+
+    def post_encode(self, state, codec_input, local, server=None):
+        del codec_input, server
+        return {"cv": state["cv"] + self.beta * local}
+
+    def update_server(self, server, g_dec, n_live, n_total):
+        """Round-tail server variate update (engine ``_finish``): ``g_dec``
+        is the decoded aggregate (possibly pack-padded past n_coords),
+        ``n_live`` the traced live weight sum, ``n_total`` the static cohort
+        size N."""
+        c = server["cv_server"]
+        g = g_dec[: c.shape[0]]
+        return {"cv_server": c + (self.beta * n_live / n_total) * g}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -373,6 +482,74 @@ class DPTransform:
     @property
     def randomized(self) -> bool:
         return self.noise > 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SigmaSchedule:
+    """Per-layer sigma schedule as a STATIC geometric leaf rescaling.
+
+    One global sigma treats every layer alike, but gradient magnitudes vary
+    orders of magnitude across depth — embeddings vs heads. The clean fix
+    inside the one-flat-buffer pipeline: scale leaf ``j`` of the ``L``-leaf
+    parameter tree by ``m_j = head * (tail / head)^(j / (L - 1))`` BEFORE
+    the codec. Because ``Sign(m_j * p + sigma * xi) == Sign(p + (sigma /
+    m_j) * xi)``, the wire carries exactly what a per-layer noise scale
+    ``sigma / m_j`` would produce — a geometric sigma schedule from the
+    first leaf (``sigma / head``) to the last (``sigma / tail``) at zero
+    wire cost and zero state. The server decode divides the estimate by the
+    same multipliers, restoring each leaf's scale.
+
+    STATELESS and STATIC by design: the multipliers depend only on the tree
+    structure (``wire.TreeSpec``), never on data — a data-dependent scale
+    could not be inverted server-side without shipping it. The stage
+    declares ``needs_tree_spec`` and the engine threads its TreeSpec into
+    ``encode(spec=...)`` / ``decode_sum(spec=...)``.
+
+    Composition rules (build-time): must be the FIRST stage (EF residuals
+    and dp clipping then live in the scaled domain consistently, round
+    over round); refuses ``cv`` outright — the server variate folds the
+    UNSCALED decode while client variates would track scaled local decodes,
+    so the SCAFFOLD bookkeeping identity breaks.
+    """
+    head: float = 1.0
+    tail: float = 1.0
+    spec_name = "sigma_sched"
+    stateful = False
+    randomized = False
+    needs_tree_spec = True
+
+    def __post_init__(self):
+        if self.head <= 0.0 or self.tail <= 0.0:
+            raise ValueError(f"sigma_sched multipliers must be positive, "
+                             f"got head={self.head}, tail={self.tail}")
+
+    def multipliers(self, spec) -> jax.Array:
+        """(n_coords,) f32 per-coordinate multiplier, constant per leaf,
+        geometric from head (leaf 0) to tail (last leaf)."""
+        L = len(spec.shapes)
+        if L == 1:
+            per_leaf = np.asarray([self.head], np.float32)
+        else:
+            j = np.arange(L, dtype=np.float64) / (L - 1)
+            per_leaf = (self.head * (self.tail / self.head) ** j
+                        ).astype(np.float32)
+        sizes = np.asarray([int(np.prod(s)) if s else 1
+                            for s in spec.shapes])
+        return jnp.asarray(np.repeat(per_leaf, sizes))
+
+    def scale(self, p: jax.Array, spec) -> jax.Array:
+        m = self.multipliers(spec)
+        pad = p.shape[0] - spec.n_coords
+        if pad:
+            m = jnp.concatenate([m, jnp.ones(pad, p.dtype)])
+        return p * m
+
+    def unscale(self, g: jax.Array, spec) -> jax.Array:
+        inv = 1.0 / self.multipliers(spec)
+        pad = g.shape[0] - spec.n_coords
+        if pad:
+            inv = jnp.concatenate([inv, jnp.ones(pad, g.dtype)])
+        return g * inv
 
 
 # ---------------------------------------------------------------------------
@@ -725,6 +902,15 @@ class TopKCodec:
     top-k; tie-breaking by lowest index is preserved because candidates are
     ordered by (chunk, rank) — verified exhaustively in tests).
 
+    ``chunk=0`` (the default) AUTO-TUNES the chunk size from the buffer at
+    trace time: the first stage touches d coordinates and the second
+    touches the candidate pool of (d / chunk) * k, so the pool matches the
+    chunk at chunk ~ sqrt(d * k) — ``_resolve_chunk`` rounds that up to a
+    power of two and clamps it to [4096, 2^20] (below 4096 the per-chunk
+    launch overhead dominates; above 2^20 the first stage stops fitting in
+    cache). A positive ``chunk`` pins the size explicitly; the selected
+    set is identical either way.
+
     ``agg="coord"`` is the FedDropoutAvg-style COORDINATE-PARTICIPATION
     normalization: because each client reports a different index set, the
     global-n_live mean ("mean") shrinks every coordinate by (reporters /
@@ -739,7 +925,7 @@ class TopKCodec:
     EF-top-k contraction bound applies to the "mean" law only.
     """
     frac: float = 0.01
-    chunk: int = 65536  # two-stage selection above this many coordinates
+    chunk: int = 0      # 0 = auto-tune from (d, k); >0 pins the chunk size
     agg: str = "mean"   # "mean" | "coord" (per-coordinate participation)
     spec_name = "topk"
     randomized = False
@@ -748,23 +934,36 @@ class TopKCodec:
         if self.agg not in ("mean", "coord"):
             raise ValueError(f"topk agg must be 'mean' or 'coord', "
                              f"got {self.agg!r}")
+        if self.chunk < 0:
+            raise ValueError(f"topk chunk must be 0 (auto) or positive, "
+                             f"got {self.chunk}")
 
     def wire_format(self) -> WireFormat:
         # fp32 value + int32 index per kept coordinate.
         return WireFormat("float32", 64.0 * self.frac, "sparse_coo")
 
+    @staticmethod
+    def _resolve_chunk(d: int, k: int) -> int:
+        """Auto-tuned chunk size: balance the two stages (first touches d,
+        second touches the (d / chunk) * k candidate pool) at
+        chunk ~ sqrt(d * k), rounded up to a power of two and clamped to
+        [4096, 2^20]. Static per (d, k) — no retrace churn."""
+        c = max(1, int(math.sqrt(d * max(1, k))))
+        return min(1 << 20, max(4096, 1 << (c - 1).bit_length()))
+
     def _select(self, score: jax.Array, k: int) -> jax.Array:
         """Indices of the k largest scores (ties -> lowest index first)."""
         d = score.shape[0]
-        if d <= self.chunk or k >= self.chunk:
+        chunk = self.chunk or self._resolve_chunk(d, k)
+        if d <= chunk or k >= chunk:
             _, idx = jax.lax.top_k(score, k)
             return idx
-        n_chunks = -(-d // self.chunk)
-        pad = n_chunks * self.chunk - d
+        n_chunks = -(-d // chunk)
+        pad = n_chunks * chunk - d
         s = jnp.pad(score, (0, pad), constant_values=-jnp.inf)
-        cand_val, cand_idx = jax.lax.top_k(s.reshape(n_chunks, self.chunk), k)
+        cand_val, cand_idx = jax.lax.top_k(s.reshape(n_chunks, chunk), k)
         base = (jnp.arange(n_chunks, dtype=cand_idx.dtype)[:, None]
-                * self.chunk)
+                * chunk)
         cand_idx = (cand_idx + base).reshape(-1)
         _, sel = jax.lax.top_k(cand_val.reshape(-1), k)
         return cand_idx[sel]
@@ -811,7 +1010,8 @@ class TopKCodec:
 # the pipeline combinator
 # ---------------------------------------------------------------------------
 
-_TRANSFORM_SPECS = {"ef": ErrorFeedback, "dp": DPTransform}
+_TRANSFORM_SPECS = {"ef": ErrorFeedback, "dp": DPTransform,
+                    "cv": ControlVariate, "sigma_sched": SigmaSchedule}
 
 
 def _sign_spec(**defaults):
@@ -891,9 +1091,11 @@ def parse_spec(spec: str):
         spec  := stage ("|" stage)*
         stage := name | name "(" k "=" v ("," k "=" v)* ")"
 
-    Every stage but the last must be a transform (``ef``, ``dp``); the last
-    must be a codec (``zsign``, ``zsign_packed``, ``stosign``, ``qsgd``,
-    ``topk``, ``dense``/``identity``). Values parse as int, float, bool or
+    Every stage but the last must be a transform (``ef``, ``dp``, ``cv``,
+    ``sigma_sched``);
+    the last must be a codec (``zsign``, ``zsign_packed``, ``stosign``,
+    ``qsgd``, ``topk``, ``dense``/``identity``). Values parse as int, float,
+    bool or
     bare string (e.g. ``scale=mean_abs``, ``z=inf``). Convenience defaults:
     an ``ef`` transform in front of a sign codec sets ``scale="mean_abs"``
     unless given explicitly — ``"ef|zsign"`` IS EF-SignSGD.
@@ -1005,9 +1207,54 @@ class Pipeline:
         stateful = tuple(i for i, t in enumerate(transforms)
                          if getattr(t, "stateful", False))
         object.__setattr__(self, "_stateful_idx", stateful)
+        # sigma_sched: at most one, FIRST in the pipeline (so every later
+        # stage — EF residuals, dp clip — lives consistently in the scaled
+        # domain), never with cv (the server variate folds the unscaled
+        # decode — domain mismatch)
+        scheds = [i for i, t in enumerate(transforms)
+                  if isinstance(t, SigmaSchedule)]
+        if len(scheds) > 1:
+            raise ValueError("at most one sigma_sched stage per pipeline")
+        if scheds:
+            if any(isinstance(t, ControlVariate) for t in transforms):
+                raise ValueError(
+                    "sigma_sched cannot compose with cv: the server "
+                    "variate update folds the UNSCALED decoded aggregate "
+                    "while client variates would track scaled local "
+                    "decodes — the SCAFFOLD bookkeeping identity breaks")
+            if scheds[0] != 0:
+                raise ValueError(
+                    "sigma_sched must be the first stage (e.g. "
+                    "'sigma_sched(...)|ef|zsign'): it rescales the raw "
+                    "pseudo-gradient, so residuals and clipping must "
+                    "happen in the scaled domain")
+        object.__setattr__(self, "_needs_spec", any(
+            getattr(t, "needs_tree_spec", False) for t in transforms))
         # slot-name collision check (shapes irrelevant at build time) —
         # multi-state pipelines fail loudly here, not deep in the engine
-        cstate_lib.collect_slots([transforms[i] for i in stateful], 0)
+        slots0 = cstate_lib.collect_slots(
+            [transforms[i] for i in stateful], 0)
+        object.__setattr__(self, "_has_server_state",
+                           any(s.scope == "server" for s in slots0))
+        # control variates need a decode law linear in the per-client local
+        # decodes: the server variate update c+ = c + beta*(n_live/N)*g_dec
+        # is exact only when g_dec is the mean of what clients attributed
+        # locally. Vote/count laws are not — refuse at build, not at drift.
+        linear_needers = [t for t in transforms
+                          if getattr(t, "needs_linear_decode", False)]
+        if linear_needers:
+            bad = None
+            if isinstance(codec, SignCodec) and codec.agg != "mean":
+                bad = f"the sign codec's agg={codec.agg!r} vote law"
+            elif isinstance(codec, TopKCodec) and codec.agg != "mean":
+                bad = "topk's agg='coord' per-coordinate count law"
+            if bad is not None:
+                raise ValueError(
+                    f"{linear_needers[0].spec_name} control variates "
+                    f"require a server decode LINEAR in the per-client "
+                    f"local decodes (the variate update is exact only for "
+                    f"mean-law codecs), but {bad} decodes through a "
+                    f"nonlinear count — use agg=mean or drop the cv stage")
         # dynamic (Plateau) sigma routes to the sign codec when present,
         # else to the last noise-bearing dp transform (legacy dpgauss law).
         # The noise-free EF-SignSGD wire (scale=mean_abs, sigma == 0) has NO
@@ -1101,6 +1348,13 @@ class Pipeline:
     def wire_format(self) -> WireFormat:
         return self.codec.wire_format()
 
+    @property
+    def needs_tree_spec(self) -> bool:
+        """True when a stage (sigma_sched) needs the engine's wire.TreeSpec
+        threaded into ``encode(spec=...)`` / ``decode_sum(spec=...)`` —
+        the engine gates the kwarg on this capability flag."""
+        return self._needs_spec
+
     def stacks_group_payloads(self) -> bool:
         """Whether the engine's sequential-group scan should emit the raw
         payload stack (aggregated ONCE over all groups x clients at the end)
@@ -1118,6 +1372,30 @@ class Pipeline:
         """Zero-initialized per-client state: the keyed ``{slot: buffer}``
         dict over client-scope slots, or None for stateless pipelines."""
         return cstate_lib.init_tree(self.state_slots(n_coords), "client")
+
+    def init_server_state(self, n_coords: int):
+        """Zero-initialized SHARED server-scope state (control variates):
+        the keyed ``{slot: buffer}`` dict over server-scope slots, or None.
+        One tree per deployment — the engine replicates it across devices
+        and threads it into every client encode (``encode(server=...)``)."""
+        return cstate_lib.init_tree(self.state_slots(n_coords), "server")
+
+    def update_server(self, server, g_dec, n_live, n_total):
+        """Round-tail update of the shared server-scope state from the
+        DECODED aggregate — called once per round by the engine's finish
+        step, after ``decode_sum``. Each stateful stage with an
+        ``update_server`` hook contributes its slots; stages without one
+        keep theirs unchanged. No per-client payloads are consumed here:
+        server slots update from the O(d) compressed-domain fold output
+        only, so no dense (n_clients, d) surface ever exists."""
+        if server is None:
+            return None
+        new = dict(server)
+        for i in self._stateful_idx:
+            hook = getattr(self.transforms[i], "update_server", None)
+            if hook is not None:
+                new.update(hook(server, g_dec, n_live, n_total))
+        return new
 
     def _stage_key(self, key, i: int):
         # a single random stage consumes the raw client key (bit-compat with
@@ -1137,9 +1415,27 @@ class Pipeline:
                 and self.codec.sigma == 0.0
                 and (sigma is None or self._sigma_stage is None))
 
-    def encode(self, key, flat: jax.Array, state, sigma=None):
+    def encode(self, key, flat: jax.Array, state, sigma=None, server=None,
+               spec=None):
         """(payload, new_state). ``sigma`` is the engine's dynamic (Plateau)
-        override, routed to the pipeline's one sigma consumer."""
+        override, routed to the pipeline's one sigma consumer. ``server`` is
+        the shared server-scope state tree (``init_server_state``) — REQUIRED
+        when a stage declares server slots (control variates), unused
+        otherwise; the engine passes ``ServerState.comp_server``. ``spec``
+        is the flat buffer's wire.TreeSpec — REQUIRED when
+        ``needs_tree_spec`` (sigma_sched), unused otherwise."""
+        if self._has_server_state and server is None:
+            raise ValueError(
+                "pipeline declares server-scope state slots (control "
+                "variates): encode needs the shared server tree — pass "
+                "server=init_server_state(n_coords) (the engine threads "
+                "ServerState.comp_server here)")
+        if self._needs_spec and spec is None:
+            raise ValueError(
+                "pipeline declares a tree-structured stage (sigma_sched): "
+                "encode needs the flat buffer's wire.TreeSpec — pass "
+                "spec=wire.tree_spec(params) (the engine threads its "
+                "round TreeSpec here)")
         if self._ef_kernel_path(sigma):
             # one fused VMEM pass: bitpacked payload + residual together
             from repro.kernels.efsign import ops as EK
@@ -1150,9 +1446,11 @@ class Pipeline:
         p = flat
         for i, t in enumerate(self.transforms):
             sig_i = sigma if self._sigma_stage == i else None
-            if getattr(t, "stateful", False):
+            if getattr(t, "needs_tree_spec", False):
+                p = t.scale(p, spec)
+            elif getattr(t, "stateful", False):
                 p = t.pre_encode(self._stage_key(key, i), p, state,
-                                 sigma=sig_i)
+                                 sigma=sig_i, server=server)
             else:
                 p = t.apply(self._stage_key(key, i), p, sigma=sig_i)
         payload, local = self.codec.encode_with_decode(
@@ -1163,7 +1461,8 @@ class Pipeline:
             return payload, state
         new_state = dict(state)
         for i in self._stateful_idx:
-            new_state.update(self.transforms[i].post_encode(state, p, local))
+            new_state.update(self.transforms[i].post_encode(state, p, local,
+                                                            server=server))
         return payload, new_state
 
     def aggregate(self, payload, mask: jax.Array, n_coords: int,
@@ -1202,23 +1501,41 @@ class Pipeline:
             return wire.sign_fold_finalize(acc)
         return acc
 
-    def decode_mean(self, flat_mean: jax.Array, sigma=None) -> jax.Array:
-        return self.codec.decode_mean(
-            flat_mean, sigma=(sigma if self._sigma_stage == "codec" else None))
+    def _unscale(self, g: jax.Array, spec) -> jax.Array:
+        # invert tree-structured stages (sigma_sched) in reverse stage order
+        if not self._needs_spec:
+            return g
+        if spec is None:
+            raise ValueError(
+                "pipeline declares a tree-structured stage (sigma_sched): "
+                "decode needs the round's wire.TreeSpec — pass spec=")
+        for t in reversed(self.transforms):
+            if getattr(t, "needs_tree_spec", False):
+                g = t.unscale(g, spec)
+        return g
+
+    def decode_mean(self, flat_mean: jax.Array, sigma=None,
+                    spec=None) -> jax.Array:
+        return self._unscale(self.codec.decode_mean(
+            flat_mean,
+            sigma=(sigma if self._sigma_stage == "codec" else None)), spec)
 
     def decode_sum(self, enc_sum: jax.Array, n_live: jax.Array,
-                   sigma=None) -> jax.Array:
+                   sigma=None, spec=None) -> jax.Array:
         """Server estimate from the ``aggregate`` output + live count — the
         engine's decode entry point. For codecs whose aggregate is the plain
         masked sum this is ``decode_mean(enc_sum / n_live)`` exactly; codecs
         with a non-mean law (SignCodec robust ``agg=`` modes, TopKCodec
         ``agg=coord``) own the full sum -> estimate mapping through their
-        ``decode_sum``."""
+        ``decode_sum``. ``spec`` (the round's TreeSpec) is required exactly
+        when ``needs_tree_spec`` — sigma_sched inverts its leaf scaling
+        here."""
         sig = sigma if self._sigma_stage == "codec" else None
         dec = getattr(self.codec, "decode_sum", None)
         if dec is not None:
-            return dec(enc_sum, n_live, sigma=sig)
-        return self.codec.decode_mean(enc_sum / n_live, sigma=sig)
+            return self._unscale(dec(enc_sum, n_live, sigma=sig), spec)
+        return self._unscale(self.codec.decode_mean(enc_sum / n_live,
+                                                    sigma=sig), spec)
 
     def reduce_across_devices(self, acc: jax.Array,
                               axis_name: str) -> jax.Array:

@@ -136,10 +136,15 @@ class FedConfig:
 class ServerState(NamedTuple):
     params: Any
     opt_state: Any
-    comp_state: Any       # flat per-client residuals, (G, N, n_coords) or None
+    #: stacked per-client state tree {slot: (G, N, ...)} or None
+    comp_state: Any
     rng: jax.Array
     round: jax.Array      # int32 scalar
     sigma: jax.Array      # dynamic noise scale (Plateau criterion)
+    #: SHARED server-scope pipeline state ({slot: (n_coords,)} control
+    #: variates) or None. Defaulted LAST field: existing keyword
+    #: constructions and old checkpoints stay valid.
+    comp_server: Any = None
 
 
 class RoundMetrics(NamedTuple):
@@ -159,13 +164,18 @@ class RoundMetrics(NamedTuple):
 class RoundMath(NamedTuple):
     """The round-MATH half of the engine: client compute for ONE shard.
 
-    ``client_update(spec, params0, client_batch, key, cstate, sigma)``
+    ``client_update(spec, params0, client_batch, key, cstate, sigma,
+    server)``
         one client: local SGD -> flatten -> encode.
-    ``group_encode(spec, params, batch, keys, cstate, mask, sigma)``
+    ``group_encode(spec, params, batch, keys, cstate, mask, sigma, ...,
+    server=None)``
         one shard of clients (leading axis = the mask length, vmapped):
         -> (stacked payloads, participation-masked new state, masked loss
         sum). The shard width is whatever the driver slices — a parallel
         group on the vmap path, ``shard_clients`` on the streaming path.
+        ``server`` is the SHARED server-scope pipeline state
+        (ServerState.comp_server, e.g. the cv server variate) — broadcast
+        to every client, never sliced, updated only in the server finish.
     ``group_round(...)``
         group_encode + masked aggregation to one flat f32 SUM buffer.
     """
@@ -180,14 +190,18 @@ def init_server_state(params, cfg: FedConfig, compressor,
     spec = wire.tree_spec(params)
     cstate = compressor.init_state(spec.n_coords)
     if cstate is not None:
-        # one flat residual buffer per client: (groups, n_clients, n_coords)
+        # one flat state row per client per slot: (groups, n_clients, ...)
         cstate = jax.tree.map(
             lambda x: jnp.broadcast_to(
                 x, (cfg.client_groups, cfg.n_clients) + x.shape), cstate)
+    # shared server-scope slots (control variates): ONE tree, no client axis
+    cserver = (compressor.init_server_state(spec.n_coords)
+               if hasattr(compressor, "init_server_state") else None)
     return ServerState(params=params, opt_state=opt.init(params),
                        comp_state=cstate, rng=rng,
                        round=jnp.zeros((), jnp.int32),
-                       sigma=jnp.asarray(sigma0, jnp.float32))
+                       sigma=jnp.asarray(sigma0, jnp.float32),
+                       comp_server=cserver)
 
 
 def _server_optimizer(cfg: FedConfig) -> Optimizer:
@@ -341,7 +355,8 @@ def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
         x_e, losses = jax.lax.scan(step, params, client_batch)
         return x_e, jnp.mean(losses)
 
-    def client_update(spec, params0, client_batch, key, cstate, sigma):
+    def client_update(spec, params0, client_batch, key, cstate, sigma,
+                      server=None):
         if cfg.local_steps == 1 and not legacy_client_path:
             # E == 1: the pseudo-gradient (x0 - x1)/gamma IS the batch
             # gradient, so neither the updated weights nor the subtraction
@@ -364,18 +379,28 @@ def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
             flat = spec.flatten(pseudo)
         if cfg.dp_clip > 0.0:
             flat = clip_flat(flat, cfg.dp_clip)
+        # the server/spec kwargs are capability-gated: only pipelines with
+        # server-scope slots receive ``server`` and only tree-structured
+        # pipelines (sigma_sched) receive ``spec`` (legacy duck-typed
+        # compressors keep their three-argument encode signature)
         enc, new_cstate = compressor.encode(
-            key, flat, cstate, sigma=sigma if dynamic_sigma else None)
+            key, flat, cstate, sigma=sigma if dynamic_sigma else None,
+            **({"server": server} if server is not None else {}),
+            **({"spec": spec}
+               if getattr(compressor, "needs_tree_spec", False) else {}))
         return enc, new_cstate, loss
 
     def group_encode(spec, params, group_batch, keys, group_cstate, mask_g,
-                     sigma, idx_g=None, round_idx=None):
+                     sigma, idx_g=None, round_idx=None, server=None):
         """One shard of mask_g.shape[0] clients: returns the client-stacked
         payloads (NOT yet aggregated), the participation-masked new state,
         and the masked loss sum. ``idx_g`` is the shard's GLOBAL client
         indices and ``round_idx`` the traced round counter — only consumed
         by the adversary's payload injection (both optional: shape-probing
-        eval_shape calls skip them; corruption never changes shapes)."""
+        eval_shape calls skip them; corruption never changes shapes).
+        ``server`` is the shared server-scope pipeline state
+        (ServerState.comp_server), broadcast — never sliced — across the
+        shard's clients."""
         cu = lambda *a: client_update(spec, *a)
         if mask_g.shape[0] == 1:
             # sequential-client (big-arch) mode: skip the vmap — a size-1
@@ -385,7 +410,8 @@ def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
             enc1, ncs1, loss1 = cu(
                 params, jax.tree.map(lambda x: x[0], group_batch), keys[0],
                 (None if group_cstate is None
-                 else jax.tree.map(lambda x: x[0], group_cstate)), sigma)
+                 else jax.tree.map(lambda x: x[0], group_cstate)), sigma,
+                server)
             enc = jax.tree.map(lambda e: e[None], enc1)
             new_cstate = (None if ncs1 is None
                           else jax.tree.map(lambda e: e[None], ncs1))
@@ -394,9 +420,10 @@ def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
             enc, new_cstate, losses = jax.vmap(
                 cu,
                 in_axes=(None, 0, 0,
-                         0 if group_cstate is not None else None, None),
+                         0 if group_cstate is not None else None, None,
+                         None),
                 spmd_axis_name=spmd_axes,
-            )(params, group_batch, keys, group_cstate, sigma)
+            )(params, group_batch, keys, group_cstate, sigma, server)
         if adversary is not None and idx_g is not None:
             # wire-transit corruption: the payload stack is attacked AFTER
             # the honest encode (EF residuals above stay honest) and BEFORE
@@ -416,11 +443,11 @@ def _build_round_math(loss_fn: Callable, compressor, cfg: FedConfig, *,
         return enc, new_cstate, loss_sum
 
     def group_round(spec, params, group_batch, keys, group_cstate, mask_g,
-                    sigma, idx_g=None, round_idx=None):
+                    sigma, idx_g=None, round_idx=None, server=None):
         """group_encode + masked aggregation to one flat SUM accumulator."""
         enc, new_cstate, loss_sum = group_encode(
             spec, params, group_batch, keys, group_cstate, mask_g, sigma,
-            idx_g, round_idx)
+            idx_g, round_idx, server)
         enc_sum = constrain_wire(
             compressor.aggregate(enc, mask_g, spec.n_coords))
         return enc_sum, new_cstate, loss_sum
@@ -519,7 +546,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
     dynamic_sigma = ctx.dynamic_sigma
 
     def stream_cohort(spec, params, batch, mask, cstate, sub, sigma,
-                      round_idx, shard: int, unroll: int, devices: int = 1):
+                      round_idx, shard: int, unroll: int, devices: int = 1,
+                      server=None):
         """The streaming massive-cohort executor: reshard the flat cohort
         into ``shard``-client slices, lax.scan them through the round math,
         and FOLD each shard's payload stack into one running wire
@@ -567,7 +595,7 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         # codec's own aggregate output
         enc_shape = jax.eval_shape(
             lambda b, k, c, m: math.group_encode(
-                spec, params, b, k, c, m, sigma)[0],
+                spec, params, b, k, c, m, sigma, server=server)[0],
             shard0(s_batch), znoise.client_keys(sub, 0, shard),
             shard0(s_cstate), s_mask[0])
         fold0 = (compressor.fold_init(enc_shape)
@@ -580,8 +608,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                     if hasattr(compressor, "fold_finalize")
                     else (lambda a: a))
 
-        def scan_shards(params_d, sub_d, sigma_d, round_d, idx_d, batch_d,
-                        cstate_d, mask_d, constrain_acc):
+        def scan_shards(params_d, sub_d, sigma_d, round_d, server_d, idx_d,
+                        batch_d, cstate_d, mask_d, constrain_acc):
             acc0 = (fold0 if fold0 is not None
                     else jnp.zeros(agg_shape.shape, agg_shape.dtype))
 
@@ -599,7 +627,7 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                          + jnp.arange(shard, dtype=jnp.int32))
                 enc, new_cstate_s, loss_s = math.group_encode(
                     spec, params_d, batch_s, keys_s, cstate_s, mask_s,
-                    sigma_d, idx_s, round_d)
+                    sigma_d, idx_s, round_d, server_d)
                 acc = compressor.aggregate(enc, mask_s, spec.n_coords,
                                            acc=acc)
                 if fold0 is None:
@@ -614,22 +642,22 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
 
         if devices <= 1:
             (enc_sum, loss_sum), cstate_sh = scan_shards(
-                params, sub, sigma, round_idx, s_idx, s_batch, s_cstate,
-                s_mask, constrain_wire)
+                params, sub, sigma, round_idx, server, s_idx, s_batch,
+                s_cstate, s_mask, constrain_wire)
             if fold0 is not None:
                 enc_sum = constrain_wire(finalize(enc_sum))
         else:
             mesh = Mesh(np.asarray(jax.devices()[:devices]), ("clients",))
             rep, shd = P(), P("clients")
 
-            def per_device(params_d, sub_d, sigma_d, round_d, idx_d,
-                           batch_d, cstate_d, mask_d):
+            def per_device(params_d, sub_d, sigma_d, round_d, server_d,
+                           idx_d, batch_d, cstate_d, mask_d):
                 # launcher wire constraints name OUTER mesh axes — they
                 # cannot apply inside the shard body; the post-psum result
                 # is constrained by the caller instead
                 (acc, loss), cstate_out = scan_shards(
-                    params_d, sub_d, sigma_d, round_d, idx_d, batch_d,
-                    cstate_d, mask_d, lambda a: a)
+                    params_d, sub_d, sigma_d, round_d, server_d, idx_d,
+                    batch_d, cstate_d, mask_d, lambda a: a)
                 # structured fold carries finalize BEFORE the psum: pending
                 # rows are positional, not additive, and the flat fp32
                 # buffer keeps the collective at one O(d) psum
@@ -647,11 +675,11 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
 
             enc_sum, loss_sum, cstate_sh = shard_map(
                 per_device, mesh=mesh,
-                in_specs=(rep, rep, rep, rep, shd, shd, shd, shd),
+                in_specs=(rep, rep, rep, rep, rep, shd, shd, shd, shd),
                 out_specs=(rep, rep, shd),
                 check_rep=False,
-            )(params, sub, sigma, jnp.asarray(round_idx, jnp.int32), s_idx,
-              s_batch, s_cstate, s_mask)
+            )(params, sub, sigma, jnp.asarray(round_idx, jnp.int32),
+              server, s_idx, s_batch, s_cstate, s_mask)
             enc_sum = constrain_wire(enc_sum)
         if cstate_sh is None:
             new_cstate = None
@@ -678,7 +706,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         if plan.mode == "stream":
             enc_sum, new_cstate, loss_sum = stream_cohort(
                 spec, state.params, batch, mask, state.comp_state, sub,
-                sigma, state.round, plan.shard, plan.unroll, plan.devices)
+                sigma, state.round, plan.shard, plan.unroll, plan.devices,
+                server=state.comp_server)
         else:
             # per-client keys by global index — identical to the streaming
             # derivation, so the two plans are interchangeable mid-training
@@ -693,7 +722,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                                               state.comp_state))
                 enc_sum, new_cstate_g, loss_sum = math.group_round(
                     spec, state.params, g_batch, all_keys[0], g_cstate,
-                    mask[0], sigma, g_indices[0], state.round)
+                    mask[0], sigma, g_indices[0], state.round,
+                    state.comp_server)
                 new_cstate = (None if new_cstate_g is None
                               else jax.tree.map(lambda x: x[None],
                                                 new_cstate_g))
@@ -714,7 +744,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                     g_batch, keys_g, cstate_g, mask_g, idx_g = xs
                     enc, new_cstate_g, loss_sum = math.group_encode(
                         spec, state.params, g_batch, keys_g, cstate_g,
-                        mask_g, sigma, idx_g, state.round)
+                        mask_g, sigma, idx_g, state.round,
+                        state.comp_server)
                     return loss_acc + loss_sum, (enc, new_cstate_g)
 
                 loss_sum, (enc_stack, new_cstate) = jax.lax.scan(
@@ -735,13 +766,15 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                     g_batch, keys_g, cstate_g, mask_g, idx_g = xs
                     enc_sum, new_cstate_g, loss_sum = math.group_round(
                         spec, state.params, g_batch, keys_g, cstate_g,
-                        mask_g, sigma, idx_g, state.round)
+                        mask_g, sigma, idx_g, state.round,
+                        state.comp_server)
                     return ((enc_acc + enc_sum, loss_acc + loss_sum),
                             new_cstate_g)
 
                 agg_shape = jax.eval_shape(
                     lambda b, k, c, m: math.group_round(
-                        spec, state.params, b, k, c, m, sigma)[0],
+                        spec, state.params, b, k, c, m, sigma,
+                        server=state.comp_server)[0],
                     jax.tree.map(lambda x: x[0], batch), all_keys[0],
                     (None if state.comp_state is None
                      else jax.tree.map(lambda x: x[0], state.comp_state)),
@@ -758,20 +791,32 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
                 mask, shard_used):
         n_live = jnp.maximum(jnp.sum(mask), 1.0)
         sig = sigma if dynamic_sigma else None
+        spec_kw = ({"spec": spec}
+                   if getattr(compressor, "needs_tree_spec", False) else {})
         if hasattr(compressor, "decode_sum"):
             # the codec owns the full sum -> estimate mapping (robust agg=
             # modes decode the int32 vote pair; mean laws divide by n_live)
             g_flat = constrain_wire(
-                compressor.decode_sum(enc_sum, n_live, sigma=sig))
+                compressor.decode_sum(enc_sum, n_live, sigma=sig, **spec_kw))
         else:
             # duck-typed legacy compressors: the mean law, spelled out
             g_flat = constrain_wire(
-                compressor.decode_mean(enc_sum / n_live, sigma=sig))
+                compressor.decode_mean(enc_sum / n_live, sigma=sig,
+                                       **spec_kw))
         # the ONE unflatten: decoded flat estimate -> params-shaped pytree
         g_hat = constrain(spec.unflatten(g_flat))
         # Algorithm 1 line 15: x_t = x_{t-1} - eta * gamma * mean(Delta)
         scaled = jax.tree.map(lambda g: gamma * g, g_hat)
         new_params, new_opt = opt.update(scaled, state.opt_state, state.params)
+
+        # server-scope pipeline state (control variates): fold the decoded
+        # mean into the shared variate — exact for mean-law codecs because
+        # g_flat is the mean of the per-client local decodes (the same
+        # quantity each client folded into its own row this round)
+        comp_server = state.comp_server
+        if comp_server is not None and hasattr(compressor, "update_server"):
+            comp_server = compressor.update_server(
+                comp_server, g_flat, n_live, float(total))
 
         metrics = RoundMetrics(
             loss=loss_sum / n_live,
@@ -782,7 +827,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
             shard_clients=jnp.asarray(shard_used, jnp.int32))
         new_state = ServerState(params=new_params, opt_state=new_opt,
                                 comp_state=new_cstate, rng=rng,
-                                round=state.round + 1, sigma=sigma)
+                                round=state.round + 1, sigma=sigma,
+                                comp_server=comp_server)
         return new_state, metrics
 
     # ---- stream(feed=host): the double-buffered host shard driver -------
@@ -793,15 +839,15 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         # as a traced uint32 scalar so every shard reuses the same trace
         key = (shard, spec.n_coords)
         if key not in shard_fns:
-            def fn(params, sub, sigma, round_idx, s_idx, batch_s, cstate_s,
-                   mask_s, acc, loss_acc):
+            def fn(params, sub, sigma, server, round_idx, s_idx, batch_s,
+                   cstate_s, mask_s, acc, loss_acc):
                 keys_s = znoise.client_keys(sub, s_idx * jnp.uint32(shard),
                                             shard)
                 idx_s = (s_idx.astype(jnp.int32) * shard
                          + jnp.arange(shard, dtype=jnp.int32))
                 enc, new_cstate_s, loss_s = math.group_encode(
                     spec, params, batch_s, keys_s, cstate_s, mask_s, sigma,
-                    idx_s, round_idx)
+                    idx_s, round_idx, server)
                 acc = compressor.aggregate(enc, mask_s, spec.n_coords,
                                            acc=acc)
                 if not isinstance(acc, wire.SignFoldAcc):
@@ -835,7 +881,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
         cur = jax.device_put(next(gen))
         enc_shape = jax.eval_shape(
             lambda b, k, c, m: math.group_encode(
-                spec, state.params, b, k, c, m, sigma)[0],
+                spec, state.params, b, k, c, m, sigma,
+                server=state.comp_server)[0],
             cur[1], znoise.client_keys(sub, 0, shard), cur[2], cur[3])
         acc = (compressor.fold_init(enc_shape)
                if hasattr(compressor, "fold_init") else None)
@@ -851,7 +898,8 @@ def build_round_step(loss_fn: Callable, compressor, cfg: FedConfig,
             # double buffer: upload shard s+1 (async dispatch) before
             # launching shard s's compute ...
             nxt = jax.device_put(next(gen)) if s + 1 < n_shards else None
-            acc, loss_sum, rows = fn(state.params, sub, sigma, state.round,
+            acc, loss_sum, rows = fn(state.params, sub, sigma,
+                                     state.comp_server, state.round,
                                      *cur, acc, loss_sum)
             # ... and drain shard s-1's finished state rows to host while
             # shard s computes, so only one shard's tensors stay on device

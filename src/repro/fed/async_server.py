@@ -259,15 +259,15 @@ def build_async_round_step(*, policy: RoundModePolicy, latency_spec,
         # sliced into the host-side queue
         key = (shard, spec.n_coords)
         if key not in shard_fns:
-            def fn(params, sub, sigma, round_idx, s_idx, batch_s, cstate_s,
-                   mask_s, fold_w_s, acc, loss_acc):
+            def fn(params, sub, sigma, server, round_idx, s_idx, batch_s,
+                   cstate_s, mask_s, fold_w_s, acc, loss_acc):
                 keys_s = znoise.client_keys(sub, s_idx * jnp.uint32(shard),
                                             shard)
                 idx_s = (s_idx.astype(jnp.int32) * shard
                          + jnp.arange(shard, dtype=jnp.int32))
                 enc, new_cstate_s, loss_s = round_math.group_encode(
                     spec, params, batch_s, keys_s, cstate_s, mask_s, sigma,
-                    idx_s, round_idx)
+                    idx_s, round_idx, server)
                 acc = compressor.aggregate(enc, fold_w_s, spec.n_coords,
                                            acc=acc)
                 if not isinstance(acc, wire.SignFoldAcc):
@@ -317,7 +317,8 @@ def build_async_round_step(*, policy: RoundModePolicy, latency_spec,
         cur = jax.device_put(next(gen))
         enc_shape = jax.eval_shape(
             lambda b, k, c, m: round_math.group_encode(
-                spec, state.params, b, k, c, m, sigma)[0],
+                spec, state.params, b, k, c, m, sigma,
+                server=state.comp_server)[0],
             cur[1], znoise.client_keys(sub, 0, shard), cur[2], cur[3])
         acc = (compressor.fold_init(enc_shape)
                if hasattr(compressor, "fold_init") else None)
@@ -336,8 +337,8 @@ def build_async_round_step(*, policy: RoundModePolicy, latency_spec,
             nxt = jax.device_put(next(gen)) if s_i + 1 < n_shards else None
             w_s = jnp.asarray(fold_w_pad[s_i * shard:(s_i + 1) * shard])
             acc, loss_sum, rows, enc = fn(state.params, sub, sigma,
-                                          state.round, *cur, w_s, acc,
-                                          loss_sum)
+                                          state.comp_server, state.round,
+                                          *cur, w_s, acc, loss_sum)
             if stateful and prev_rows is not None:
                 rows_host.append(jax.tree.map(np.asarray, prev_rows))
             prev_rows = rows

@@ -206,6 +206,31 @@ class CohortSampler:
             yield np.stack([self.shard_weights(idx, w, s, shard)
                             for s in range(d * per, (d + 1) * per)])
 
+    def partition_state_rows(self, cstate: dict, *, shard: int,
+                             devices: int) -> Iterator[dict]:
+        """Per-device blocks of the KEYED client-state tree (the stacked
+        ``{slot: (groups, n_clients, ...)}`` of Pipeline.init_state — EF
+        residuals, cv client variates), partitioned EXACTLY like
+        ``device_partitions`` partitions the weight rows: device d gets the
+        same contiguous shard slice, and padded slots wrap cyclically to
+        the cohort's first rows (``slot % total_clients``) — the engine's
+        own reshard rule, so a host can stage each device's state feed
+        next to its weight feed without ever materializing the wrapped
+        O(slots) copy for more than one device. Yields ``devices`` dicts of
+        leaves shaped (shards_per_device, shard, ...)."""
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        total = self.total_clients
+        n_shards = -(-total // shard)
+        n_shards = -(-n_shards // devices) * devices   # engine's device pad
+        per = n_shards // devices
+        flat = {k: np.asarray(v).reshape((total,) + np.shape(v)[2:])
+                for k, v in cstate.items()}
+        for d in range(devices):
+            sl = np.arange(d * per * shard, (d + 1) * per * shard) % total
+            yield {k: v[sl].reshape((per, shard) + v.shape[1:])
+                   for k, v in flat.items()}
+
     def dense(self, idx: np.ndarray, w: np.ndarray,
               layout: tuple) -> np.ndarray:
         """Full (groups, n_clients) weight mask for the engine's round-step

@@ -58,12 +58,18 @@ def _dryrun_model(arch, shape):
 
 def build_train_cell(arch, shape, mesh, agg_backend="auto",
                      encode_backend="auto", cohort="auto",
-                     adversary="none"):
-    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+                     adversary="none", pipeline=None):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs).
+
+    ``pipeline`` overrides the arch's default zsign codec with a full
+    pipeline spec string (e.g. ``cv|zsign_packed``) — proves stateful
+    pipelines lower/compile on the production mesh with their client-scope
+    slots cohort-sharded and server-scope slots replicated."""
     arch = __import__("dataclasses").replace(arch, model=_dryrun_model(arch, shape))
     bundle = build_model(arch.model)
     plan = SH.make_plan(arch, shape, mesh)
     comp = compression.Pipeline(
+        pipeline if pipeline else
         f"zsign(z={arch.zsign_z},sigma={arch.zsign_sigma})")
     fcfg = fedavg.FedConfig(n_clients=plan.n_clients,
                             client_groups=plan.client_groups,
@@ -96,9 +102,12 @@ def build_train_cell(arch, shape, mesh, agg_backend="auto",
     comp_state_sh = (None if state_shapes.comp_state is None else
                      SH.to_shardings(SH.wire_state_specs(
                          state_shapes.comp_state, plan), mesh))
+    comp_server_sh = (None if state_shapes.comp_server is None else
+                      SH.to_shardings(SH.server_state_specs(
+                          state_shapes.comp_server, plan), mesh))
     state_sh = fedavg.ServerState(
         params=psh, opt_state=(), comp_state=comp_state_sh, rng=rep,
-        round=rep, sigma=rep)
+        round=rep, sigma=rep, comp_server=comp_server_sh)
 
     per_step = bundle.train_batch_spec(plan.micro, shape.seq_len)
     batch_shapes = fedavg.make_batch_spec(fcfg, per_step)
@@ -343,7 +352,8 @@ def analyze(fn, arg_shapes, mesh, label: str) -> dict:
 
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
              agg_backend: str = "auto", encode_backend: str = "auto",
-             cohort: str = "auto", adversary: str = "none") -> dict:
+             cohort: str = "auto", adversary: str = "none",
+             pipeline: str = None) -> dict:
     arch = get_arch(arch_id)
     shape = SHAPES[shape_name]
     bundle = build_model(arch.model)
@@ -356,7 +366,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
         if shape.kind == "train":
             fn, args, plan = build_train_cell(arch, shape, mesh, agg_backend,
                                               encode_backend, cohort,
-                                              adversary)
+                                              adversary, pipeline)
         elif shape.kind == "prefill":
             fn, args, plan = build_prefill_cell(arch, shape, mesh)
         else:
@@ -404,6 +414,12 @@ def main():
                          "byte_corrupt(f=..,p=..) | collude(f=..) | "
                          "dropout(f=..)) — proves attacks lower/compile on "
                          "the production mesh")
+    ap.add_argument("--pipeline", default=None, metavar="SPEC",
+                    help="full compression pipeline spec overriding the "
+                         "arch default, e.g. 'cv|zsign_packed' or "
+                         "'ef|topk(frac=0.01)' (grammar: docs/API.md) — "
+                         "compiles stateful pipelines on the production "
+                         "mesh")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -420,7 +436,8 @@ def main():
                                    agg_backend=args.agg_backend,
                                    encode_backend=args.encode_backend,
                                    cohort=args.cohort,
-                                   adversary=args.adversary)
+                                   adversary=args.adversary,
+                                   pipeline=args.pipeline)
                 except Exception as e:  # record the failure, keep sweeping
                     res = {"label": f"{arch_id}/{shape_name}/"
                            f"{'multi' if mp else 'single'}",

@@ -61,10 +61,12 @@ def cohort_plan(n_clients: int, *, client_groups: int = 1, micro: int = 1,
     """ParallelPlan for the 1-D cohort mesh (launch.mesh.make_cohort_mesh):
     clients shard over the ``clients`` axis; params, activations and the
     aggregated wire buffer stay replicated (no model/tensor parallelism).
-    ``wire_state_specs`` under this plan lays the per-client EF residuals
+    ``wire_state_specs`` under this plan lays the per-client state slots
+    (EF residuals, cv client variates — every client-scope StateSlot)
     out SHARDED along the cohort axis — the layout the streaming engine's
-    ``stream(devices=D)`` shard_map produces, so residuals persist
-    device-local across rounds and never reshard."""
+    ``stream(devices=D)`` shard_map produces, so state rows persist
+    device-local across rounds and never reshard. Server-scope slots stay
+    replicated (``server_state_specs``)."""
     return ParallelPlan(client_axes=("clients",), micro_axes=(),
                         seq_axes=(), replica_axes=(),
                         n_clients=n_clients, client_groups=client_groups,
@@ -216,7 +218,13 @@ def wire_state_specs(cstate_shapes, plan: ParallelPlan):
     Under the 1-D cohort mesh (``cohort_plan`` + ``make_cohort_mesh``) the
     client axis is ``clients``, matching the sharded residual output of the
     streaming engine's ``stream(devices=D)`` shard_map: each device keeps
-    exactly its own clients' residual rows round over round."""
+    exactly its own clients' residual rows round over round.
+
+    The tree is the KEYED multi-slot client state of Pipeline.init_state
+    (one ``(G, N, ...)`` leaf per client-scope StateSlot — EF residuals,
+    cv client variates, ...); every slot follows the same client-axis
+    layout. Server-scope slots (ServerState.comp_server) are NOT in this
+    tree — they are shared, see ``server_state_specs``."""
     def spec(leaf):
         s = [None] * len(leaf.shape)
         if len(leaf.shape) >= 2:
@@ -224,6 +232,18 @@ def wire_state_specs(cstate_shapes, plan: ParallelPlan):
         return P(*s)
 
     return jax.tree.map(spec, cstate_shapes)
+
+
+def server_state_specs(server_shapes, plan: ParallelPlan):
+    """SHARED server-scope pipeline state (ServerState.comp_server: the cv
+    server variate and any future server-scope StateSlot). One flat
+    ``(n_coords,)`` row per slot, read by EVERY client's pre-encode and
+    written once in the server finish — fully replicated, exactly like the
+    params it corrects. The streaming engine broadcasts it into the
+    ``stream(devices=D)`` shard_map as a replicated operand, so this spec
+    keeps the round free of comp_server collectives."""
+    del plan
+    return jax.tree.map(lambda leaf: P(), server_shapes)
 
 
 def cache_specs(cache_shapes, plan: ParallelPlan, *, batch: int,

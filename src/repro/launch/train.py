@@ -44,7 +44,8 @@ def main():
                     help="compression pipeline spec string, overriding "
                          "--compressor and its kwargs — e.g. "
                          "'zsign(z=1,sigma=0.01)', 'ef|topk(frac=0.01)', "
-                         "'dp(clip=1.0,eps=2.0)|zsign_packed' "
+                         "'dp(clip=1.0,eps=2.0)|zsign_packed', or compressed "
+                         "SCAFFOLD control variates 'cv|zsign_packed' "
                          "(grammar: docs/API.md)")
     ap.add_argument("--agg-backend", default="auto",
                     choices=list(compression.AGG_BACKENDS),

@@ -293,12 +293,46 @@ def test_topk_chunked_exact_equivalence_small_d(d, frac, chunk):
     np.testing.assert_array_equal(np.asarray(s1["ef"]), np.asarray(s2["ef"]))
 
 
+def test_topk_resolve_chunk_law():
+    """chunk=0 auto-tune: ~sqrt(d*k) rounded up to a power of two, clamped
+    to [4096, 2^20]; explicit positive chunks are honored, negatives
+    refused."""
+    resolve = C.TopKCodec._resolve_chunk
+    # balance point: sqrt(300_000 * 300) ~ 9487 -> next pow2 16384
+    assert resolve(300_000, 300) == 16384
+    # small buffers clamp to the floor; huge ones to the ceiling
+    assert resolve(1_000, 10) == 4096
+    assert resolve(10**9, 10**7) == 1 << 20
+    for r in (resolve(d, max(1, d // 100)) for d in
+              (10**3, 10**5, 10**7, 10**9)):
+        assert 4096 <= r <= 1 << 20 and r & (r - 1) == 0  # pow2 in range
+    with pytest.raises(ValueError, match="chunk"):
+        C.TopKCodec(frac=0.01, chunk=-1)
+
+
+@pytest.mark.parametrize("d,frac", [(257, 0.05), (100_000, 0.001),
+                                    (70_000, 0.02)])
+def test_topk_auto_chunk_exact_equivalence(d, frac):
+    """chunk=0 (auto) selects the IDENTICAL index set as the single-stage
+    reference and as any explicit chunk — the auto-tune is a pure perf
+    knob."""
+    rng = np.random.RandomState(d)
+    p = jnp.asarray(np.round(rng.randn(d) * 2) / 2, jnp.float32)  # ties
+    k = max(1, int(d * frac))
+    auto = C.TopKCodec(frac=frac, chunk=0)._select(jnp.abs(p), k)
+    _, ref = jax.lax.top_k(jnp.abs(p), k)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(ref))
+    explicit = C.TopKCodec(frac=frac, chunk=8192)._select(jnp.abs(p), k)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))
+
+
 def test_topk_chunked_distribution_large_d():
-    """Large d (two-stage path active at the default chunk): the selected
-    set is exactly the true top-k value multiset."""
+    """Large d (two-stage path active at the auto-resolved chunk): the
+    selected set is exactly the true top-k value multiset."""
     d = 300_000
     comp = C.TopKCompressor(name="topk", frac=0.001)
-    assert d > comp.chunk  # the chunked path actually runs
+    k_ = max(1, int(d * comp.frac))
+    assert d > C.TopKCodec._resolve_chunk(d, k_)  # chunked path runs
     p = jnp.asarray(np.random.RandomState(0).randn(d), jnp.float32)
     e, _ = comp.encode(None, p, comp.init_state(d))
     k = max(1, int(d * comp.frac))

@@ -1,0 +1,359 @@
+"""Compressed control variates (the ``cv`` stage): SCALLION-style
+compressed SCAFFOLD on the client-state substrate.
+
+Contract under test (core/compression.py ControlVariate + the engine's
+server-scope state threading):
+
+  * state: one client-scope slot ``cv`` (per-client variate c_i, a
+    (G, N, d) row tree like the EF residuals) plus one SERVER-scope slot
+    ``cv_server`` (the shared variate c, ONE (d,) row in
+    ServerState.comp_server — never a client axis);
+  * client correction is PRE-codec: q_i = p_i - eta * (c_i - c), so the
+    uplink payload is the codec's own wire format — ``cv|zsign_packed``
+    ships exactly the 1 bit/coord of plain ``zsign_packed``;
+  * variate updates need NO second upload: c_i += beta * m_i where m_i is
+    the client's own LOCALLY-decoded payload, and the server folds
+    c += beta * (n_live / N) * g_dec in _finish — exact for mean-law
+    codecs because g_dec is the mean of the m_i, i.e.
+    c_{t+1} - c_t == (1/N) * sum_i (c_i,t+1 - c_i,t)  (the SCAFFOLD
+    bookkeeping identity, checked directly below);
+  * nonlinear server decodes (sign vote/trimmed/median, topk agg=coord)
+    are REFUSED at build time — the server fold would not match the sum
+    of client-side updates;
+  * dead clients keep BOTH their c_i rows (engine keep-state masking) and
+    contribute nothing to c;
+  * every cohort plan (vmap, stream at any shard size, stream devices=D,
+    feed=host, async at zero latency) is bit-identical — the server
+    variate is a replicated operand, the client rows shard like EF
+    residuals;
+  * the streamed jaxpr never computes a dense (n_total, d) f32 correction
+    surface — q_i only ever exists per shard.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core import fedavg
+from repro.core.context import RoundContext
+from repro.fed.sampling import CohortSampler
+
+_DC = jax.device_count()
+
+
+def _devices(d):
+    return pytest.param(d, marks=pytest.mark.skipif(
+        _DC < d, reason=f"needs {d} devices (have {_DC}); set "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count={d}"))
+
+
+# ---------------------------------------------------------------------------
+# build-time contract
+# ---------------------------------------------------------------------------
+
+def test_cv_declares_client_and_server_slots():
+    comp = C.Pipeline("cv|zsign_packed")
+    slots = {s.name: s for s in comp.state_slots(64)}
+    assert slots["cv"].scope == "client"
+    assert slots["cv_server"].scope == "server"
+    assert slots["cv"].shape == slots["cv_server"].shape == (64,)
+    assert comp.init_state(64)["cv"].shape == (64,)
+    server = comp.init_server_state(64)
+    assert list(server) == ["cv_server"]
+    assert server["cv_server"].shape == (64,)
+    assert bool(jnp.all(server["cv_server"] == 0))
+    # stateless pipelines have no server tree at all
+    assert C.Pipeline("zsign_packed").init_server_state(64) is None
+
+
+def test_cv_spec_kwargs():
+    comp = C.Pipeline("cv(eta=0.5,beta=0.25)|zsign")
+    cv = comp.transforms[0]
+    assert (cv.eta, cv.beta) == (0.5, 0.25)
+
+
+def test_cv_refuses_nonlinear_server_decodes():
+    # the variate fold is exact only when decode_sum is LINEAR in the
+    # per-client local decodes; count-law aggregations are refused loudly
+    for bad in ["cv|zsign(agg=vote)", "cv|zsign_packed(agg=median)",
+                "cv|zsign(agg=trimmed(f=1))", "cv|topk(frac=0.1,agg=coord)"]:
+        with pytest.raises(ValueError, match="control variates"):
+            C.Pipeline(bad)
+    # every mean-law codec composes
+    for ok in ["cv|zsign", "cv|zsign_packed", "cv|qsgd", "cv|dense",
+               "cv|topk(frac=0.1)", "ef|cv|zsign_packed",
+               "dp(clip=1.0,noise=0.0)|cv|zsign"]:
+        C.Pipeline(ok)
+
+
+def test_duplicate_cv_is_a_slot_collision():
+    with pytest.raises(ValueError, match="collision"):
+        C.Pipeline("cv|cv|zsign_packed")
+
+
+def test_encode_without_server_tree_raises():
+    comp = C.Pipeline("cv|zsign_packed")
+    state = comp.init_state(64)
+    with pytest.raises(ValueError, match="server"):
+        comp.encode(jax.random.PRNGKey(0), jnp.ones(64), state)
+
+
+# ---------------------------------------------------------------------------
+# the variate law, hand-checked through a lossless codec
+# ---------------------------------------------------------------------------
+
+def test_cv_dense_update_law():
+    """cv|dense makes every decode exact: q = p - eta*(c_i - c) is the
+    payload verbatim, c_i += beta*q, and the server fold adds
+    beta*(n_live/N)*g_dec."""
+    d, eta, beta = 32, 0.5, 0.25
+    comp = C.Pipeline(f"cv(eta={eta},beta={beta})|dense")
+    rng = np.random.RandomState(0)
+    p = jnp.asarray(rng.randn(d).astype(np.float32))
+    ci = jnp.asarray(rng.randn(d).astype(np.float32))
+    c = jnp.asarray(rng.randn(d).astype(np.float32))
+    enc, new_state = comp.encode(jax.random.PRNGKey(0), p, {"cv": ci},
+                                 server={"cv_server": c})
+    q = np.asarray(p - eta * (ci - c))
+    np.testing.assert_allclose(np.asarray(enc)[:d], q, rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(new_state["cv"]),
+                               np.asarray(ci) + beta * q, rtol=1e-6)
+    g_dec = jnp.asarray(rng.randn(d).astype(np.float32))
+    new_server = comp.update_server({"cv_server": c}, g_dec, 3.0, 8.0)
+    np.testing.assert_allclose(np.asarray(new_server["cv_server"]),
+                               np.asarray(c) + beta * (3.0 / 8.0)
+                               * np.asarray(g_dec), rtol=1e-6)
+
+
+def _quad_setup(spec, *, n=16, d=96, cohort="vmap", seed=5,
+                round_mode=None, latency=None):
+    comp = C.Pipeline(spec)
+    cfg = fedavg.FedConfig(n_clients=n, client_lr=0.01, server_lr=0.3)
+    kw = {"cohort": cohort}
+    if round_mode is not None:
+        kw.update(round_mode=round_mode, latency=latency or "zero")
+    step = fedavg.build_round_step(
+        lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2), comp, cfg,
+        RoundContext(**kw))
+    y = jax.random.normal(jax.random.PRNGKey(seed), (1, n, 1, d))
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    return step, st, {"y": y}
+
+
+_MASK16 = jnp.ones((1, 16)).at[0, jnp.asarray([1, 4, 5, 9, 11, 12, 13, 15])
+                               ].set(0.0)
+
+
+def test_cv_scaffold_bookkeeping_identity():
+    """Every round: c_{t+1} - c_t == (1/N) * sum_i (c_i,t+1 - c_i,t) —
+    the SCAFFOLD invariant the linear server fold was built to preserve,
+    under partial participation. Exact for the dense codec; f32-close for
+    the sign mean law (sum-then-scale vs scale-then-sum association)."""
+    for spec, exact in [("cv|dense", True),
+                        ("cv(eta=0.1,beta=0.5)|zsign_packed(z=1,sigma=0.4)",
+                         False)]:
+        step, st, batch = _quad_setup(spec)
+        n_total = 16.0
+        for _ in range(4):
+            prev_rows = np.asarray(st.comp_state["cv"])
+            prev_c = np.asarray(st.comp_server["cv_server"])
+            st, _ = step(st, batch, _MASK16)
+            lhs = np.asarray(st.comp_server["cv_server"]) - prev_c
+            rhs = (np.asarray(st.comp_state["cv"])
+                   - prev_rows).sum(axis=(0, 1)) / n_total
+            if exact:
+                np.testing.assert_allclose(lhs, rhs, rtol=0, atol=1e-7)
+            else:
+                np.testing.assert_allclose(lhs, rhs, rtol=2e-5, atol=1e-7)
+        # dead clients KEEP their rows at zero (never computed a round)
+        dead = np.asarray(st.comp_state["cv"])[0, [1, 4, 5, 9]]
+        assert not dead.any()
+        live = np.asarray(st.comp_state["cv"])[0, [0, 2, 3, 6]]
+        assert np.abs(live).sum() > 0
+
+
+def test_cv_round_one_matches_plain_codec():
+    """With zero variates the round-1 correction is identically zero, so
+    cv|zsign_packed's first round is BIT-identical to plain zsign_packed
+    (same keys, same payloads, same server step)."""
+    spec = "zsign_packed(z=1,sigma=0.7)"
+    step_p, st_p, batch = _quad_setup(spec)
+    step_c, st_c, _ = _quad_setup(f"cv|{spec}")
+    st_p, m_p = step_p(st_p, batch, _MASK16)
+    st_c, m_c = step_c(st_c, batch, _MASK16)
+    np.testing.assert_array_equal(np.asarray(st_p.params["x"]),
+                                  np.asarray(st_c.params["x"]))
+    assert float(m_p.loss) == float(m_c.loss)
+
+
+def test_ef_cv_composition_residual_law():
+    """ef|cv: the EF residual closes over the FULL pre-codec input —
+    including the cv correction — so EF compensates the codec error of q,
+    not of p (compensating p would cancel the variate). Checked through
+    the lossless dense codec: the residual is exactly zero while the
+    variate still moves."""
+    d = 32
+    comp = C.Pipeline("ef|cv(eta=0.5,beta=1.0)|dense")
+    rng = np.random.RandomState(1)
+    p = jnp.asarray(rng.randn(d).astype(np.float32))
+    r0 = jnp.asarray(rng.randn(d).astype(np.float32))
+    ci = jnp.asarray(rng.randn(d).astype(np.float32))
+    c = jnp.asarray(rng.randn(d).astype(np.float32))
+    enc, new = comp.encode(jax.random.PRNGKey(0), p, {"ef": r0, "cv": ci},
+                           server={"cv_server": c})
+    q = np.asarray((p + r0) - 0.5 * (ci - c))
+    np.testing.assert_allclose(np.asarray(enc)[:d], q, rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(new["ef"]), np.zeros(d), atol=0)
+    np.testing.assert_allclose(np.asarray(new["cv"]), np.asarray(ci) + q,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# plan equivalence: vmap == stream(any shard) == devices == host == async
+# ---------------------------------------------------------------------------
+
+def _run_plan(spec, *, rounds=3, **kw):
+    step, st, batch = _quad_setup(spec, **kw)
+    for _ in range(rounds):
+        st, m = step(st, batch, _MASK16)
+    return st
+
+
+def _assert_states_equal(ref, got):
+    np.testing.assert_array_equal(np.asarray(ref.params["x"]),
+                                  np.asarray(got.params["x"]))
+    for k in ref.comp_state:
+        np.testing.assert_array_equal(np.asarray(ref.comp_state[k]),
+                                      np.asarray(got.comp_state[k]),
+                                      err_msg=k)
+    for k in ref.comp_server:
+        np.testing.assert_array_equal(np.asarray(ref.comp_server[k]),
+                                      np.asarray(got.comp_server[k]),
+                                      err_msg=k)
+
+
+@pytest.mark.parametrize("shard", [1, 7, 64])
+def test_cv_stream_bit_identical(shard):
+    spec = "cv(eta=0.1,beta=0.5)|zsign_packed(z=1,sigma=0.7)"
+    ref = _run_plan(spec)
+    got = _run_plan(spec, cohort=f"stream(shard={shard})")
+    _assert_states_equal(ref, got)
+
+
+def test_cv_host_feed_bit_identical():
+    spec = "cv(eta=0.1,beta=0.5)|zsign_packed(z=1,sigma=0.7)"
+    ref = _run_plan(spec)
+    got = _run_plan(spec, cohort="stream(shard=7,feed=host)")
+    _assert_states_equal(ref, got)
+
+
+@pytest.mark.parametrize("devices", [_devices(2), _devices(4)])
+def test_cv_shard_map_bit_identical(devices):
+    """The server variate rides into the shard_map as a REPLICATED operand
+    (every device corrects with the same c); client rows shard. D devices
+    are bit-identical to the vmap plan."""
+    spec = "cv(eta=0.1,beta=0.5)|zsign_packed(z=1,sigma=0.7)"
+    ref = _run_plan(spec)
+    got = _run_plan(spec, cohort=f"stream(shard=4,devices={devices})")
+    _assert_states_equal(ref, got)
+
+
+def test_cv_async_zero_latency_bit_identical():
+    """Zero latency + a deadline covering everyone: the async driver's
+    shard pass is the sync host driver's computation exactly — cv state,
+    server variate and params included."""
+    spec = "cv(eta=0.1,beta=0.5)|zsign_packed(z=1,sigma=0.7)"
+    ref = _run_plan(spec)
+    got = _run_plan(spec, cohort="stream(shard=7)",
+                    round_mode="async(deadline=100)", latency="zero")
+    _assert_states_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# wire + memory pins
+# ---------------------------------------------------------------------------
+
+def test_cv_uplink_wire_unchanged():
+    """cv corrects BEFORE the codec: payload pytree (shapes, dtypes) and
+    the per-round uplink-bit metric are byte-for-byte those of the plain
+    codec."""
+    d = 4096
+    plain = C.Pipeline("zsign_packed(z=1,sigma=0.5)")
+    cv = C.Pipeline("cv|zsign_packed(z=1,sigma=0.5)")
+    enc_plain = jax.eval_shape(
+        lambda k, f: plain.encode(k, f, None)[0],
+        jax.random.PRNGKey(0), jnp.zeros(d))
+    enc_cv = jax.eval_shape(
+        lambda k, f, s, sv: cv.encode(k, f, s, server=sv)[0],
+        jax.random.PRNGKey(0), jnp.zeros(d), cv.init_state(d),
+        cv.init_server_state(d))
+    assert jax.tree.map(lambda a: (a.shape, str(a.dtype)), enc_plain) == \
+        jax.tree.map(lambda a: (a.shape, str(a.dtype)), enc_cv)
+    assert cv.wire_bits_per_coord == plain.wire_bits_per_coord == 1.0
+
+    step_p, st_p, batch = _quad_setup("zsign_packed(z=1,sigma=0.5)")
+    step_c, st_c, _ = _quad_setup("cv|zsign_packed(z=1,sigma=0.5)")
+    _, m_p = step_p(st_p, batch, _MASK16)
+    _, m_c = step_c(st_c, batch, _MASK16)
+    assert float(m_p.uplink_bits) == float(m_c.uplink_bits)
+
+
+def test_cv_stream_jaxpr_no_dense_correction_surface():
+    """The streamed plan never COMPUTES an (n_total, d) f32 buffer: the
+    correction q = p - eta*(c_i - c) exists only at (shard, d) inside the
+    scan body. (The cv rows themselves are carried state — inherent O(n*d)
+    — and only move structurally; computed surfaces are the pin.)"""
+    from test_encode_fused import _max_f32_outvar_bytes, _walk_eqns
+    n_total, shard = 64, 8
+    d = 2 * C.ENCODE_TILE
+    comp = C.Pipeline("cv(eta=0.1,beta=0.5)|zsign_packed(z=1,sigma=0.5)")
+    cfg = fedavg.FedConfig(n_clients=n_total, client_lr=0.01, server_lr=0.3)
+    step = fedavg.build_round_step(
+        lambda p, b: 0.5 * jnp.sum((p["x"] - b["y"]) ** 2), comp, cfg,
+        RoundContext(cohort=f"stream(shard={shard})"))
+    st = fedavg.init_server_state({"x": jnp.zeros(d)}, cfg, comp,
+                                  jax.random.PRNGKey(1))
+    jaxpr = jax.make_jaxpr(step)(st, {"y": jnp.zeros((1, n_total, 1, 1))},
+                                 jnp.ones((1, n_total)))
+    scans = [e for e in _walk_eqns(jaxpr.jaxpr)
+             if e.primitive.name == "scan"]
+    assert scans, "streaming must lower to lax.scan"
+    worst = max(_max_f32_outvar_bytes(e.params["jaxpr"].jaxpr)
+                for e in scans)
+    full_cohort = 4 * n_total * d
+    assert worst < full_cohort / 4, (
+        f"scan body computes a {worst}-byte f32 surface "
+        f"(full cohort would be {full_cohort})")
+
+
+# ---------------------------------------------------------------------------
+# sampler <-> engine state-row partition agreement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("total,shard,devices", [(16, 3, 2), (16, 4, 4),
+                                                 (10, 4, 2)])
+def test_partition_state_rows_matches_engine_reshard(total, shard, devices):
+    """CohortSampler.partition_state_rows slices the stacked client-state
+    tree exactly as the engine reshards it for stream(devices=D): same
+    contiguous shard slices per device, same cyclic wrap of padded
+    slots."""
+    d = 5
+    rows = np.arange(total * d, dtype=np.float32).reshape(1, total, d)
+    cstate = {"cv": rows, "ef": -rows}
+    sampler = CohortSampler(total_clients=total, per_round=total, seed=0)
+    got = list(sampler.partition_state_rows(cstate, shard=shard,
+                                            devices=devices))
+    # the engine's reshard: flatten, cyclic-gather to padded slots, split
+    n_shards = -(-total // shard)
+    n_shards = -(-n_shards // devices) * devices
+    slots = n_shards * shard
+    per = n_shards // devices
+    for k in cstate:
+        flat = cstate[k].reshape(total, d)[np.arange(slots) % total]
+        want = flat.reshape(n_shards, shard, d)
+        for dev in range(devices):
+            np.testing.assert_array_equal(
+                got[dev][k], want[dev * per:(dev + 1) * per], err_msg=k)
+    assert all(g["cv"].shape == (per, shard, d) for g in got)

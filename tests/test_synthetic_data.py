@@ -1,0 +1,88 @@
+"""Synthetic federated data: the Dirichlet label-skew partitioner.
+
+``dirichlet_partition`` drives every heterogeneity experiment (paper §4.3,
+examples/scaffold_heterogeneous.py), so its statistical law is pinned here:
+per-client label proportions follow a symmetric Dirichlet(alpha) per class —
+alpha -> 0 concentrates each class on few clients (extreme non-i.i.d.),
+alpha -> inf recovers the uniform i.i.d. split. Plus the boring-but-vital
+invariants: fixed-seed determinism and exact index-set partitioning, down to
+the empty-client edge case when clients outnumber samples.
+"""
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+
+
+def _labels(n_classes=10, per=400, seed=3):
+    rng = np.random.RandomState(seed)
+    return rng.permutation(np.repeat(np.arange(n_classes), per))
+
+
+def test_dirichlet_partition_deterministic():
+    y = _labels()
+    a = synthetic.dirichlet_partition(y, 8, alpha=0.3, seed=11)
+    b = synthetic.dirichlet_partition(y, 8, alpha=0.3, seed=11)
+    assert len(a) == len(b) == 8
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+    # a different seed reshuffles the allocation
+    c = synthetic.dirichlet_partition(y, 8, alpha=0.3, seed=12)
+    assert any(pa.shape != pc.shape or (pa != pc).any()
+               for pa, pc in zip(a, c))
+
+
+@pytest.mark.parametrize("alpha", [0.05, 1.0, 100.0])
+def test_dirichlet_partition_is_a_partition(alpha):
+    """Every sample index lands on exactly one client, for any skew."""
+    y = _labels()
+    parts = synthetic.dirichlet_partition(y, 7, alpha=alpha, seed=0)
+    cat = np.concatenate(parts)
+    assert cat.size == y.size
+    np.testing.assert_array_equal(np.sort(cat), np.arange(y.size))
+
+
+def _mean_top_label_share(y, parts):
+    """Average over non-empty clients of the share their MOST common label
+    holds — 1/n_classes at perfect uniformity, 1.0 at one-label clients."""
+    shares = []
+    for p in parts:
+        if p.size == 0:
+            continue
+        counts = np.bincount(y[p], minlength=int(y.max()) + 1)
+        shares.append(counts.max() / counts.sum())
+    return float(np.mean(shares))
+
+
+def test_dirichlet_skew_increases_as_alpha_drops():
+    """The label-skew law: concentration is monotone in 1/alpha. At
+    alpha=100 every client sees a near-uniform label mix (top share close
+    to the 1/n_classes floor); at alpha=0.05 clients are dominated by a
+    couple of classes."""
+    y = _labels(n_classes=10, per=500)
+    skew = {a: _mean_top_label_share(
+                y, synthetic.dirichlet_partition(y, 10, alpha=a, seed=2))
+            for a in (0.05, 1.0, 100.0)}
+    assert skew[0.05] > skew[1.0] > skew[100.0]
+    assert skew[100.0] < 0.2   # near the 0.1 uniform floor
+    assert skew[0.05] > 0.5    # dominated by few classes
+
+
+def test_dirichlet_empty_client_edge_case():
+    """More clients than samples: some clients get EMPTY (but valid) index
+    arrays, the rest still form an exact partition — and the round-batch
+    sampler refuses an empty part loudly rather than silently recycling."""
+    y = np.asarray([0, 0, 1, 1], np.int32)
+    parts = synthetic.dirichlet_partition(y, 8, alpha=0.1, seed=0)
+    assert len(parts) == 8
+    assert any(p.size == 0 for p in parts)
+    cat = np.concatenate(parts)
+    np.testing.assert_array_equal(np.sort(cat), np.arange(y.size))
+    for p in parts:  # empty or not, every part indexes into y
+        assert p.dtype.kind == "i" or p.size == 0
+        assert p.size == 0 or (0 <= p.min() and p.max() < y.size)
+    x = np.zeros((y.size, 4), np.float32)
+    empty_slot = int(np.argmax([p.size == 0 for p in parts]))
+    with pytest.raises(ValueError):
+        synthetic.client_batches(x, y, [parts[empty_slot]], (1, 1, 1, 2),
+                                 seed=0, round_idx=0)
