@@ -31,6 +31,10 @@ perf-trajectory files every later perf PR is compared against:
                          vs the mean popcount round at n=32, ~1.3M coords,
                          plus one adversarial round (--robust-agg shorthand;
                          rows in BENCH_round.json)
+  cv_round               compressed-SCAFFOLD control variates
+                         (cv|zsign_packed) vs plain zsign_packed at n=32,
+                         ~1.3M coords — the <=1.3x overhead acceptance row
+                         (--cv shorthand; rows in BENCH_round.json)
   async_round            async deadline rounds vs the sync straggler
                          barrier: simulated p50/p90 round close times under
                          heavy-tail latency + measured zero-latency driver
@@ -592,6 +596,45 @@ def robust_agg(fast=False):
          round(t_adv / times["vote"], 3))
 
 
+def cv_round(fast=False):
+    """Compressed-SCAFFOLD control-variate overhead: one jitted round on
+    the width-1024 MLP (~1.3M coords, n=32 clients) with and without the
+    ``cv`` stage. The correction q = p - eta*(c_i - c) and both variate
+    updates are O(d) elementwise on buffers the round already touches, and
+    the wire is unchanged (1 bit/coord), so the cv round must land within
+    1.3x of plain ``zsign_packed`` — the acceptance floor this bench
+    records."""
+    dim, classes, width = 256, 10, (128 if fast else 1024)
+    micro = 8
+    n = 32
+    iters, warmup = (3, 1) if fast else (5, 2)
+    init, loss_fn, _ = mlp_loss_builder(dim, classes, width=width)
+    params = init(jax.random.PRNGKey(0))
+    d = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    emit("cv_round", "round_cv_model_coords", d)
+
+    def time_round(spec):
+        cfg = fedavg.FedConfig(n_clients=n, client_lr=0.05,
+                               server_lr=sign_slr(0.01, 1, 0.05, 0.05))
+        kx, ky = jax.random.split(jax.random.PRNGKey(2))
+        batch = {"x": jax.random.normal(kx, (1, n, 1, micro, dim)),
+                 "y": jax.random.randint(ky, (1, n, 1, micro), 0, classes)}
+        mask = jnp.ones((1, n))
+        comp = compression.Pipeline(spec)
+        ctx = fedavg.RoundContext(weights_are_mask=True)
+        step = jax.jit(fedavg.build_round_step(loss_fn, comp, cfg, ctx),
+                       donate_argnums=0)
+        state = fedavg.init_server_state(
+            jax.tree.map(jnp.array, params), cfg, comp, jax.random.PRNGKey(1))
+        return _time_donated_rounds(step, state, batch, mask, iters, warmup)
+
+    t_base = time_round("zsign_packed(z=1,sigma=0.05)")
+    t_cv = time_round("cv(eta=0.5,beta=0.5)|zsign_packed(z=1,sigma=0.05)")
+    emit("cv_round", f"round_cv_baseline_us_n{n}", round(t_base, 1))
+    emit("cv_round", f"round_cv_us_n{n}", round(t_cv, 1))
+    emit("cv_round", f"round_cv_overhead_x_n{n}", round(t_cv / t_base, 3))
+
+
 def async_round(fast=False):
     """Async deadline rounds (``round_mode=async``) vs the sync straggler
     barrier. Two row families: (1) simulated round close time under
@@ -757,7 +800,7 @@ def client_encode(fast=False):
 BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
            fig5_local_steps, fig6_plateau, fig16_qsgd, fig17_dp, table2_bits,
            kernel_throughput, client_encode, fed_round_step, cohort_round,
-           robust_agg, async_round]
+           robust_agg, cv_round, async_round]
 
 # several benches may merge into one JSON file (kernel + encode rows).
 # The key prefix ATTRIBUTES existing rows to their bench so a re-run bench
@@ -767,6 +810,7 @@ BENCHES = [fig1_consensus_dims, fig2_noise_scales, fig3_noniid,
 _JSON_FILES = {"fed_round_step": ("BENCH_round.json", ""),
                "cohort_round": ("BENCH_round.json", "cohort_"),
                "robust_agg": ("BENCH_round.json", "robust_agg_"),
+               "cv_round": ("BENCH_round.json", "round_cv_"),
                "async_round": ("BENCH_round.json", "async_"),
                "kernel_throughput": ("BENCH_kernels.json", ""),
                "client_encode": ("BENCH_kernels.json", "encode_")}
@@ -788,9 +832,13 @@ def main() -> None:
                     help="shorthand for --only async_round (async deadline "
                          "vs sync-barrier round-latency rows in "
                          "BENCH_round.json)")
+    ap.add_argument("--cv", action="store_true", dest="cv_rows",
+                    help="shorthand for --only cv_round (control-variate "
+                         "round overhead rows in BENCH_round.json)")
     args = ap.parse_args()
     for opt, flag, bench in [("--robust-agg", "robust_agg", "robust_agg"),
-                             ("--async", "async_rows", "async_round")]:
+                             ("--async", "async_rows", "async_round"),
+                             ("--cv", "cv_rows", "cv_round")]:
         if getattr(args, flag):
             if args.only and args.only != bench:
                 raise SystemExit(f"{opt} conflicts with --only {args.only}")
